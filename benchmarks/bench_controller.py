@@ -1,0 +1,44 @@
+"""Controller-throughput benchmark: OnAlgo slot cost vs fleet size,
+jnp path vs fused Pallas kernel (the paper's 'lightweight' claim, at
+cloudlet scale)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import OnAlgoParams, StepRule, default_paper_space, onalgo
+
+
+def bench_controller():
+    space = default_paper_space(num_w=8)
+    M = space.M
+    tables = space.tables()
+    rule = StepRule.inv_sqrt(0.5)
+
+    for N in (1024, 16384, 131072):
+        params = OnAlgoParams(B=jnp.full((N,), 0.08), H=jnp.float32(N * 1e8))
+        state = onalgo.init_state(N, M)
+        key = jax.random.PRNGKey(0)
+        j = jax.random.randint(key, (N,), 0, M)
+        o_tab, h_tab, w_tab = tables
+        o_now, h_now, w_now = o_tab[j], h_tab[j], w_tab[j]
+        task = j > 0
+
+        # pallas runs through the (slow, python) interpreter on CPU; cap the
+        # interpreted size — the jnp path carries the fleet-scaling story.
+        impls = [("jnp", False)] + ([("pallas_interp", True)]
+                                    if N <= 16384 else [])
+        for impl, use_kernel in impls:
+            fn = jax.jit(lambda s, j_, o_, h_, w_, t_: onalgo.step(
+                s, j_, o_, h_, w_, t_, tables, params, rule,
+                use_kernel=use_kernel))
+            us = time_fn(fn, state, j, o_now, h_now, w_now, task,
+                         warmup=1, iters=2 if use_kernel else 5)
+            emit(f"controller/{impl}/N={N}", us,
+                 f"per_device_ns={us*1e3/N:.2f};M={M}")
+
+
+def run_all():
+    bench_controller()

@@ -1,0 +1,55 @@
+"""Theorem-1 convergence benchmark: optimality gap + constraint violation vs
+horizon T, for constant and diminishing step rules (paper Sec. IV.C)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (OnAlgoParams, StepRule, default_paper_space, oracle,
+                        simulate, theory)
+from repro.data.traces import TraceSpec, bursty_trace, iid_trace
+
+
+def bench_convergence():
+    space = default_paper_space(num_w=4)
+    N = 8
+    B = np.full(N, 0.08)
+    H = N * 0.25 * 441e6
+    params = OnAlgoParams(B=jnp.asarray(B, jnp.float32), H=jnp.float32(H))
+
+    trace, rho = iid_trace(space, TraceSpec(T=32000, N=N, seed=1))
+    tables = space.tables()
+    _, r_star = oracle.solve_lp(np.asarray(rho), tables, B, H)
+
+    rules = {"a/sqrt(t)": StepRule.inv_sqrt(0.5),
+             "const=0.02": StepRule.constant(0.02),
+             "a/t^0.75": StepRule.power(0.5, 0.75)}
+    for rname, rule in rules.items():
+        t0 = time.time()
+        series, _ = simulate(trace, tables, params, rule, true_rho=rho,
+                             with_true_rho=True)
+        dt = time.time() - t0
+        for T in (1000, 4000, 16000, 32000):
+            part = {k: np.asarray(v)[:T] for k, v in series.items()}
+            gap = theory.empirical_gap(part, r_star)
+            viol = theory.positive_violation(part)
+            emit(f"convergence/{rname}/T={T}", dt * 1e6 / 32000,
+                 f"gap={gap:.5f};viol={viol:.5f};R*={r_star:.4f}")
+
+    # non-iid robustness (bursty Markov-modulated trace)
+    btrace, brho = bursty_trace(space, TraceSpec(T=32000, N=N, seed=2))
+    t0 = time.time()
+    series, _ = simulate(btrace, tables, params, StepRule.inv_sqrt(0.5))
+    dt = time.time() - t0
+    pw = float(np.mean(series["power"])) / N
+    ld = float(np.mean(series["load"]))
+    emit("convergence/non_iid_bursty", dt * 1e6 / 32000,
+         f"avg_power={pw:.4f};B={B[0]};avg_load={ld:.3e};H={H:.3e}")
+
+
+def run_all():
+    bench_convergence()

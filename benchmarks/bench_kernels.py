@@ -1,0 +1,89 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU-meaningful;
+the derived column carries the arithmetic the kernel commits to: FLOPs and
+the VMEM working set per grid cell, which is what the TPU lowering claims).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+from repro.models.attention import flash_attention as flash_xla
+from repro.models.ssm import ssd_chunked
+
+
+def bench_attention():
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    flops = 4 * B * S * S * Hq * D / 2  # causal
+    us = time_fn(jax.jit(lambda q, k, v: flash_xla(q, k, v, causal=True)),
+                 q, k, v)
+    emit("kernel/flash_attention/xla_scan", us, f"flops={flops:.3e}")
+    us = time_fn(lambda q, k, v: ops.flash_attention(q, k, v, causal=True),
+                 q, k, v, warmup=1, iters=2)
+    vmem_kb = (128 * D + 128 * D * 2 + 128 * D) * 4 / 1024
+    emit("kernel/flash_attention/pallas_interp", us,
+         f"flops={flops:.3e};vmem_per_cell_kB={vmem_kb:.0f}")
+
+
+def bench_decode():
+    B, S, Hq, Hkv, D = 4, 4096, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    from repro.models.attention import decode_attention as dec_xla
+    us = time_fn(jax.jit(dec_xla), q, kc, vc, jnp.int32(S))
+    hbm = B * S * Hkv * D * 2 * 4
+    emit("kernel/decode_attention/xla", us, f"kv_bytes={hbm:.3e}")
+    us = time_fn(lambda *a: ops.decode_attention(*a), q, kc, vc,
+                 jnp.int32(S), warmup=1, iters=2)
+    emit("kernel/decode_attention/pallas_interp", us, f"kv_bytes={hbm:.3e}")
+
+
+def bench_ssd():
+    b, s, h, p, g, n = 1, 2048, 8, 64, 1, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    us = time_fn(jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0]),
+                 x, dt, A, B, C)
+    Q = 128
+    flops = (s // Q) * (2 * Q * Q * n + 2 * Q * Q * p + 2 * Q * n * p) * h * b
+    emit("kernel/ssd_chunk/xla_assoc_scan", us, f"flops={flops:.3e}")
+
+
+def bench_onalgo():
+    import numpy as np
+    N, M = 16384, 73
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    lam = jax.random.uniform(ks[0], (N,))
+    rho = jax.random.dirichlet(ks[1], jnp.ones(M), (N,))
+    o = jax.random.uniform(ks[2], (M,))
+    h = jax.random.uniform(ks[3], (M,))
+    w = jax.random.uniform(ks[4], (M,)) - 0.2
+    B = jax.random.uniform(ks[5], (N,)) + 0.05
+    from repro.kernels.ref import onalgo_duals_ref
+    us = time_fn(jax.jit(onalgo_duals_ref), lam, jnp.float32(0.3), rho, o,
+                 h, w, B)
+    hbm = N * M * 4 * 4  # rho + 3 tables
+    emit("kernel/onalgo_duals/xla", us, f"hbm_bytes={hbm:.3e}")
+    us = time_fn(lambda *a: ops.onalgo_duals(*a), lam, jnp.float32(0.3),
+                 rho, o, h, w, B, warmup=1, iters=2)
+    emit("kernel/onalgo_duals/pallas_interp", us,
+         f"hbm_bytes={hbm:.3e};fused_passes=1_vs_5")
+
+
+def run_all():
+    bench_attention()
+    bench_decode()
+    bench_ssd()
+    bench_onalgo()

@@ -1,0 +1,101 @@
+"""Paper-figure benchmarks (Figs. 5-8): the reproduction's headline numbers.
+
+All four use the end-to-end simulator (trained classifier pairs on synthetic
+easy/hard datasets, paper-measured power/cycle constants, bursty traffic).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.simulator import SimConfig, make_scenario, simulate_service
+
+_SCENARIOS = {}
+
+
+def scenario(kind):
+    if kind not in _SCENARIOS:
+        _SCENARIOS[kind] = make_scenario(kind, seed=0)
+    return _SCENARIOS[kind]
+
+
+def bench_fig5_resource_sweep(T=2500):
+    """Fig. 5: accuracy + offload%% vs power budget B_n, easy & hard."""
+    for kind in ("easy", "hard"):
+        data, pair, pred, pool = scenario(kind)
+        local_acc, cloud_acc = pair.local_acc, pair.cloud_acc
+        for B_mw in (10, 20, 40, 80, 160):
+            t0 = time.time()
+            out = simulate_service(
+                SimConfig(num_devices=4, T=T, algo="onalgo",
+                          B_n=B_mw * 1e-3, H=2 * 441e6, seed=1), pool)
+            emit(f"fig5/{kind}/B={B_mw}mW",
+                 (time.time() - t0) * 1e6 / T,
+                 f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+                 f"power_mW={out['avg_power_per_dev']*1e3:.1f};"
+                 f"local={local_acc:.3f};cloud={cloud_acc:.3f}")
+
+
+def bench_fig6_benchmark_comparison(T=2500):
+    """Fig. 6: OnAlgo vs ATO/RCO/OCOS across task load, scenarios 1-2.
+
+    Scenario 1 = easy data, generous resources; scenario 2 = hard data,
+    scarce resources (paper Sec. VI.C.2)."""
+    setups = {
+        "s1": dict(kind="easy", B_n=0.02, H=2e9 / 441e6 * 441e6),
+        "s2": dict(kind="hard", B_n=0.01, H=0.5e9),
+    }
+    for sname, setup in setups.items():
+        _, pair, _, pool = scenario(setup["kind"])
+        for load_bpm in (2, 4, 8):
+            gap = max(60.0 / load_bpm - 7.5, 1.0)
+            for algo in ("onalgo", "ato", "rco", "ocos"):
+                t0 = time.time()
+                out = simulate_service(
+                    SimConfig(num_devices=4, T=T, algo=algo,
+                              B_n=setup["B_n"], H=setup["H"],
+                              mean_gap=gap, seed=2), pool)
+                emit(f"fig6/{sname}/load={load_bpm}bpm/{algo}",
+                     (time.time() - t0) * 1e6 / T,
+                     f"acc={out['accuracy']:.4f};"
+                     f"power_mW={out['avg_power_per_dev']*1e3:.2f};"
+                     f"offl={out['offload_frac']:.3f}")
+
+
+def bench_fig7_tradeoffs(T=2500):
+    """Fig. 7: normalized (accuracy, offloads, power, load) per load and
+    per algorithm at high load."""
+    _, pair, _, pool = scenario("hard")
+    for load_bpm in (2, 4, 8):
+        gap = max(60.0 / load_bpm - 7.5, 1.0)
+        t0 = time.time()
+        out = simulate_service(SimConfig(num_devices=4, T=T, algo="onalgo",
+                                         B_n=0.01, H=0.5e9, mean_gap=gap,
+                                         seed=3), pool)
+        emit(f"fig7/onalgo/load={load_bpm}bpm", (time.time() - t0) * 1e6 / T,
+             f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+             f"power_mW={out['avg_power_per_dev']*1e3:.2f};"
+             f"load_pct={out['avg_load']/0.5e9*100:.1f}")
+
+
+def bench_fig8_delay_pareto(T=2000):
+    """Fig. 8: P3 joint accuracy-delay; Pareto front over zeta."""
+    _, pair, _, pool = scenario("hard")
+    for zeta in (0.0, 100.0, 300.0, 800.0):
+        t0 = time.time()
+        out = simulate_service(SimConfig(num_devices=4, T=T, algo="onalgo",
+                                         B_n=0.08, H=2 * 441e6, seed=4,
+                                         zeta=zeta), pool)
+        emit(f"fig8/zeta={zeta}", (time.time() - t0) * 1e6 / T,
+             f"acc={out['accuracy']:.4f};delay_ms={out['avg_delay_ms']:.3f};"
+             f"offl={out['offload_frac']:.3f}")
+
+
+def run_all():
+    bench_fig5_resource_sweep()
+    bench_fig6_benchmark_comparison()
+    bench_fig7_tradeoffs()
+    bench_fig8_delay_pareto()

@@ -1,0 +1,32 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: figs,convergence,controller,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    header()
+    if only is None or "figs" in only:
+        from benchmarks import bench_paper_figs
+        bench_paper_figs.run_all()
+    if only is None or "convergence" in only:
+        from benchmarks import bench_convergence
+        bench_convergence.run_all()
+    if only is None or "controller" in only:
+        from benchmarks import bench_controller
+        bench_controller.run_all()
+    if only is None or "kernels" in only:
+        from benchmarks import bench_kernels
+        bench_kernels.run_all()
+    print("benchmarks: done", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

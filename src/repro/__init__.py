@@ -1,0 +1,16 @@
+"""repro: Selective Edge Computing for Mobile Analytics (OnAlgo) — production JAX framework.
+
+Layers:
+  core/      the paper's online offloading algorithm (OnAlgo), baselines, oracle, theory
+  models/    cloudlet model zoo (10 assigned architectures, pure JAX)
+  kernels/   Pallas TPU kernels (flash attention, decode attention, SSD, onalgo step)
+  data/      trace + synthetic dataset pipeline, gain predictor
+  train/     optimizers, checkpointing, fault-tolerant trainer, grad compression
+  serve/     KV-cache engine, batcher, OnAlgo-gated admission, edge simulator
+  parallel/  sharding rules (DP/FSDP/TP/SP/EP), pipeline parallelism over pods
+  configs/   architecture registry
+  launch/    production mesh, multi-pod dry-run, train/serve entrypoints
+  analysis/  HLO collective parsing + roofline
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,108 @@
+"""Parse collective ops + byte counts out of compiled (post-SPMD) HLO text.
+
+cost_analysis() does not report collective bytes, so we walk the optimized
+HLO: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction's RESULT shape gives the
+payload; per-chip wire-byte multipliers follow the standard ring model:
+
+  all-reduce       2x payload   (reduce-scatter + all-gather phases)
+  all-gather       1x result    (each chip receives the full result)
+  reduce-scatter   1x operand   (~= result * n_shards; we use result * mult
+                                 with mult folded to 1 on the result side)
+  all-to-all       1x payload
+  collective-permute 1x payload
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# "%all-reduce.5 = f32[256,1024]{1,0} all-reduce(" and tuple results
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_WIRE_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op_type: {"count": int, "bytes": int}, "total_wire_bytes"}.
+
+    ``-start`` variants are counted; ``-done`` twins are skipped so async
+    collectives are not double counted.
+    """
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _INSTR_RE.finditer(hlo_text):
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start:m.start()]
+        if "-done" in hlo_text[m.start():m.end()]:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += b
+    total = sum(_WIRE_MULT[op] * s["bytes"] for op, s in stats.items())
+    out = {op: dict(s) for op, s in stats.items()}
+    out["total_wire_bytes"] = int(total)
+    return out
+
+
+def cost_summary(compiled) -> dict:
+    """Extract flops / bytes accessed / peak memory from a jax compiled
+    object, defensively across backends."""
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            out["flops"] = float(ca.get("flops", 0.0))
+            out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+            for k, v in ca.items():
+                if k.startswith("bytes accessed"):
+                    out.setdefault("bytes_detail", {})[k] = float(v)
+    except Exception as e:  # pragma: no cover
+        out["cost_analysis_error"] = str(e)
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("generated_code_size_in_bytes",
+                         "argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    out[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis_error"] = str(e)
+    return out

@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import ARCHS, get_config, list_archs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_config",
+           "list_archs"]

@@ -1,0 +1,28 @@
+"""Mamba2-370M [arXiv:2405.21060]: attention-free SSD (state-space duality).
+
+48L, d_model 1024, d_inner 2048 (expand 2), headdim 64 -> 32 SSM heads,
+d_state 128, vocab 50280.  ``d_ff=0`` in the assignment: Mamba2 blocks have
+no separate FFN sublayer — the mixer IS the layer; we honour that by giving
+the dense FFN width 0 and skipping it (see blocks dispatch).
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    norm_type="rmsnorm",
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: OnAlgo online selective offloading.
+
+Public API:
+  StateSpace, default_paper_space, RhoEstimator   (state_space)
+  OnAlgoParams, OnAlgoState, StepRule, step, ...  (onalgo)
+  ATO/RCO/OCOS baselines                          (baselines)
+  solve_lp, solve_dual_ascent                     (oracle)
+  Trace, simulate, simulate_sharded               (fleet)
+  Theorem-1 terms                                 (theory)
+  P3 delay / bandwidth extensions                 (extensions)
+"""
+
+from repro.core.state_space import (StateSpace, RhoEstimator,
+                                    default_paper_space, empirical_rho)
+from repro.core.onalgo import (OnAlgoParams, OnAlgoState, StepRule,
+                               init_state, policy_matrix, decide, step)
+from repro.core.fleet import Trace, simulate, simulate_sharded
+from repro.core import baselines, extensions, oracle, theory
+
+__all__ = [
+    "StateSpace", "RhoEstimator", "default_paper_space", "empirical_rho",
+    "OnAlgoParams", "OnAlgoState", "StepRule", "init_state", "policy_matrix",
+    "decide", "step", "Trace", "simulate", "simulate_sharded", "baselines",
+    "extensions", "oracle", "theory",
+]

@@ -1,0 +1,80 @@
+"""Benchmark offloading policies from the paper (Sec. VI.A.3).
+
+- ATO  (Accuracy-Threshold Offloading): offload when the local classifier's
+  confidence is below a threshold, ignoring resource consumption
+  (non-distributed variant of multi-tier DNN early-exit systems [23]).
+- RCO  (Resource-Consumption Offloading): offload whenever the device's
+  running average power consumption stays within budget, ignoring gains.
+- OCOS (Online Code Offloading and Scheduling [24]): devices always offload;
+  the cloudlet schedules as many tasks as fit its per-slot capacity.
+
+All are pure slot functions compatible with ``fleet.simulate``'s scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ATOState:
+    theta: jax.Array  # confidence threshold, scalar
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RCOState:
+    energy: jax.Array  # (N,) cumulative transmit energy spent
+    t: jax.Array  # () slot counter
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OCOSState:
+    pass  # stateless
+
+
+def ato_step(state: ATOState, d_local, o_now, task_mask):
+    """Offload iff local confidence below threshold. No resource awareness."""
+    return state, task_mask & (d_local < state.theta)
+
+
+def rco_step(state: RCOState, o_now, B, task_mask):
+    """Offload iff (energy so far + this task) keeps average power <= B."""
+    t = state.t + 1
+    ok = (state.energy + o_now) / t.astype(jnp.float32) <= B
+    offload = task_mask & ok
+    energy = state.energy + jnp.where(offload, o_now, 0.0)
+    return RCOState(energy=energy, t=t), offload
+
+
+def ocos_step(state: OCOSState, task_mask):
+    """Always offload every task; admission happens at the cloudlet."""
+    return state, task_mask
+
+
+def admit_by_capacity(offload, h_now, H_slot, smallest_first: bool = False):
+    """Cloudlet per-slot admission under capacity H_slot (paper Sec. VI.C.2:
+    'the cloudlet will not serve any task if the computing capacity
+    constraint is violated').
+
+    Greedy prefix in device order (arrival order); OCOS uses
+    ``smallest_first=True`` — sort by cycle cost ascending to maximize the
+    number of scheduled tasks, per its 'as many tasks as possible' objective.
+
+    Returns admitted mask (N,) bool.
+    """
+    h_eff = jnp.where(offload, h_now, 0.0)
+    if smallest_first:
+        key = jnp.where(offload, h_now, jnp.inf)
+        order = jnp.argsort(key)
+        h_sorted = h_eff[order]
+        fits_sorted = jnp.cumsum(h_sorted) <= H_slot
+        fits = jnp.zeros_like(fits_sorted).at[order].set(fits_sorted)
+    else:
+        fits = jnp.cumsum(h_eff) <= H_slot
+    return offload & fits

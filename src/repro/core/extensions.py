@@ -1,0 +1,131 @@
+"""Model/algorithm extensions from paper Sec. V.
+
+1. Joint accuracy + delay optimization (P3, eq. 15): the objective gains a
+   ``-zeta * D_tot(y)`` term; the threshold rule becomes
+       offload iff  lam*o + mu*h < w - zeta * (D_tr + D0_pr),
+   (the device processing delay cancels — it is paid either way).
+2. Wireless bandwidth constraint (eq. 16): sum_n sum_j y l rho <= W with its
+   own dual nu and price term nu*l in the threshold.
+3. Pre-classification offloading (alternative architecture): power constraint
+   becomes sum_j (y o + (1-y) v) rho <= B, i.e. an affine shift — handled by
+   redefining the effective cost o' = o - v and budget B' = B - sum_j v rho^j;
+   the same machinery applies (helper below).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.onalgo import OnAlgoParams, OnAlgoState, StepRule, init_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DelayModel:
+    """Per-state delay tables (seconds). Defaults from the paper's testbed:
+    D_pr_dev = 2.537 ms, D_pr_cloud = 0.191 ms, D_tr = 0.157 ms."""
+
+    d_tr: jax.Array  # (M,) or (N, M) transmission delay
+    d_pr_cloud: jax.Array  # (M,) or scalar cloudlet processing delay
+
+    @staticmethod
+    def paper_defaults(M: int) -> "DelayModel":
+        return DelayModel(
+            d_tr=jnp.full((M,), 0.157e-3, jnp.float32),
+            d_pr_cloud=jnp.full((M,), 0.191e-3, jnp.float32),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ExtState:
+    base: OnAlgoState
+    nu: jax.Array  # () bandwidth dual (0 when the constraint is disabled)
+
+
+def init_ext_state(num_devices: int, M: int) -> ExtState:
+    return ExtState(base=init_state(num_devices, M), nu=jnp.zeros((), jnp.float32))
+
+
+def ext_policy_matrix(state: ExtState, o_tab, h_tab, w_tab,
+                      zeta: float = 0.0,
+                      delay: Optional[DelayModel] = None,
+                      l_tab: Optional[jax.Array] = None):
+    """Threshold policy with delay penalty and bandwidth price (eq. 15 + 16)."""
+    w_eff = w_tab
+    if delay is not None and zeta:
+        w_eff = w_tab - zeta * (delay.d_tr + delay.d_pr_cloud)
+    price = state.base.lam[:, None] * o_tab + state.base.mu * h_tab
+    if l_tab is not None:
+        price = price + state.nu * l_tab
+    return (price < w_eff).astype(jnp.float32) * (w_tab > 0)
+
+
+def ext_step(state: ExtState, j_idx, o_now, h_now, w_now, task_mask,
+             tables, params: OnAlgoParams, rule: StepRule,
+             zeta: float = 0.0,
+             delay: Optional[DelayModel] = None,
+             l_tab: Optional[jax.Array] = None,
+             W: Optional[float] = None,
+             axis_name: Optional[str] = None):
+    """OnAlgo slot with the Sec. V extensions enabled.
+
+    Returns (new_state, offload (N,) bool, slot_delay ()).
+    """
+    o_tab, h_tab, w_tab = tables
+    rho_est = state.base.rho.update(j_idx)
+    rho = rho_est.rho
+    t = rho_est.t
+
+    # Realized decision with delay/bandwidth-adjusted threshold.
+    w_eff = w_now
+    d_extra = jnp.zeros_like(w_now)
+    if delay is not None and zeta:
+        d_tr = delay.d_tr[j_idx] if delay.d_tr.ndim == 1 else delay.d_tr
+        d_pc = (delay.d_pr_cloud[j_idx]
+                if delay.d_pr_cloud.ndim == 1 else delay.d_pr_cloud)
+        d_extra = d_tr + d_pc
+        w_eff = w_now - zeta * d_extra
+    price = state.base.lam * o_now + state.base.mu * h_now
+    if l_tab is not None:
+        price = price + state.nu * l_tab[j_idx]
+    offload = (price < w_eff) & (w_now > 0) & task_mask
+
+    # Dual subgradients from the full adjusted policy.
+    y_pol = ext_policy_matrix(state, o_tab, h_tab, w_tab, zeta, delay, l_tab)
+    o_full = jnp.broadcast_to(o_tab, y_pol.shape)
+    h_full = jnp.broadcast_to(h_tab, y_pol.shape)
+    g_pow = jnp.sum(o_full * rho * y_pol, axis=-1) - params.B
+    load = jnp.sum(h_full * rho * y_pol)
+    if axis_name is not None:
+        load = jax.lax.psum(load, axis_name)
+    g_cap = load - params.H
+
+    a_t = rule.at(t)
+    lam = jnp.maximum(state.base.lam + a_t * g_pow, 0.0)
+    mu = jnp.maximum(state.base.mu + a_t * g_cap, 0.0)
+
+    nu = state.nu
+    if l_tab is not None and W is not None:
+        l_full = jnp.broadcast_to(l_tab, y_pol.shape)
+        used = jnp.sum(l_full * rho * y_pol)
+        if axis_name is not None:
+            used = jax.lax.psum(used, axis_name)
+        nu = jnp.maximum(nu + a_t * (used - W), 0.0)
+
+    # Per-slot total extra delay actually incurred (for Fig. 8 metrics).
+    slot_delay = jnp.sum(jnp.where(offload, d_extra, 0.0))
+
+    new_state = ExtState(base=OnAlgoState(lam=lam, mu=mu, rho=rho_est), nu=nu)
+    return new_state, offload, slot_delay
+
+
+def preclassification_costs(o_tab, v_power, rho):
+    """Sec. V alternative architecture: device skips local classification when
+    offloading.  Effective transmit cost o' = o - v and budget shift
+    B' = B - sum_j v rho^j; returns (o_eff_tab, budget_shift)."""
+    return o_tab - v_power, -(v_power * rho).sum(axis=-1)

@@ -1,0 +1,225 @@
+"""Vectorized fleet simulation: run OnAlgo / baselines over a trace with scan.
+
+``simulate`` rolls a (T, N) state-index trace through a policy, producing
+per-slot series (reward, power, load, duals, diagnostics) and the final
+algorithm state.  ``simulate_sharded`` wraps the same slot function in
+``shard_map`` over the mesh ``data`` axis — devices are sharded, lambda is
+shard-local, and the single mu/psum is the only cross-shard communication,
+mirroring the paper's device<->cloudlet protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import baselines as bl
+from repro.core import onalgo
+from repro.core.onalgo import OnAlgoParams, StepRule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Trace:
+    """A fleet trace: per-slot per-device quantized state indices + extras.
+
+    j_idx: (T, N) int32 state indices into the StateSpace tables (0 = null).
+    d_local: (T, N) float32 local-classifier confidence (for ATO), or zeros.
+    """
+
+    j_idx: jax.Array
+    d_local: jax.Array
+
+    @property
+    def T(self):
+        return self.j_idx.shape[0]
+
+    @property
+    def N(self):
+        return self.j_idx.shape[1]
+
+
+def _lookup(tab, j):
+    """Value lookup for (M,) shared or (N, M) per-device tables."""
+    if tab.ndim == 1:
+        return tab[j]
+    return jax.vmap(lambda row, idx: row[idx])(tab, j)
+
+
+@partial(jax.jit,
+         static_argnames=("algo", "enforce_slot_capacity", "use_kernel",
+                          "with_true_rho"))
+def simulate(trace: Trace,
+             tables,
+             params: OnAlgoParams,
+             rule: StepRule,
+             algo: str = "onalgo",
+             ato_theta: float = 0.5,
+             enforce_slot_capacity: bool = False,
+             use_kernel: bool = False,
+             true_rho: Optional[jax.Array] = None,
+             with_true_rho: bool = False):
+    """Roll a trace through a policy.
+
+    Returns (series dict of (T,) arrays, final_state).  Accounting:
+      * power is spent on every transmission (offload), admitted or not;
+      * accuracy gain w is realized only for admitted tasks;
+      * with ``enforce_slot_capacity`` the cloudlet drops tasks beyond H per
+        slot (the paper's comparison rule); OnAlgo itself needs no dropping
+        asymptotically since it enforces the average constraint.
+      * with ``with_true_rho`` (requires true_rho) the series include
+        f(y_t)/g(y_t) evaluated under the TRUE distribution — the quantities
+        bounded by Theorem 1.
+    """
+    o_tab, h_tab, w_tab = tables
+    T, N = trace.j_idx.shape
+    M = o_tab.shape[-1]
+
+    if algo == "onalgo":
+        algo_state = onalgo.init_state(N, M)
+    elif algo == "ato":
+        algo_state = bl.ATOState(theta=jnp.float32(ato_theta))
+    elif algo == "rco":
+        algo_state = bl.RCOState(energy=jnp.zeros((N,), jnp.float32),
+                                 t=jnp.zeros((), jnp.int32))
+    elif algo == "ocos":
+        algo_state = bl.OCOSState()
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+
+    def slot(carry, xs):
+        state = carry
+        j, d_loc = xs
+        task = j > 0
+        o_now = _lookup(o_tab, j)
+        h_now = _lookup(h_tab, j)
+        w_now = _lookup(w_tab, j)
+
+        if algo == "onalgo":
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
+                                         tables, params, rule,
+                                         use_kernel=use_kernel)
+            # ||(lambda, mu)|| — the full dual vector norm of Theorem 1.
+            lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+            mu = state.mu
+        elif algo == "ato":
+            state, offload = bl.ato_step(state, d_loc, o_now, task)
+            lam_norm = jnp.float32(0.0)
+            mu = jnp.float32(0.0)
+        elif algo == "rco":
+            state, offload = bl.rco_step(state, o_now, params.B, task)
+            lam_norm = jnp.float32(0.0)
+            mu = jnp.float32(0.0)
+        else:  # ocos
+            state, offload = bl.ocos_step(state, task)
+            lam_norm = jnp.float32(0.0)
+            mu = jnp.float32(0.0)
+
+        if enforce_slot_capacity:
+            admitted = bl.admit_by_capacity(offload, h_now, params.H,
+                                            smallest_first=(algo == "ocos"))
+        else:
+            admitted = offload
+
+        offload_f = offload.astype(jnp.float32)
+        admit_f = admitted.astype(jnp.float32)
+        out = {
+            "reward": jnp.sum(w_now * admit_f),
+            "power": jnp.sum(o_now * offload_f),
+            "power_per_dev": jnp.mean(o_now * offload_f),
+            "load": jnp.sum(h_now * admit_f),
+            "offloads": jnp.sum(offload_f),
+            "admits": jnp.sum(admit_f),
+            "tasks": jnp.sum(task.astype(jnp.float32)),
+            "lam_norm": lam_norm,
+            "mu": mu,
+        }
+        if with_true_rho:
+            # All Theorem-1 quantities live in the (optionally) preconditioned
+            # constraint space — the space the duals are updated in.
+            if params.precondition:
+                o_s = jnp.broadcast_to(o_tab, (N, M)) / params.B[:, None]
+                h_s = jnp.broadcast_to(h_tab, (N, M)) / params.H
+                B_eff = jnp.ones_like(params.B)
+                H_eff = jnp.float32(1.0)
+            else:
+                o_s = jnp.broadcast_to(o_tab, (N, M))
+                h_s = jnp.broadcast_to(h_tab, (N, M))
+                B_eff, H_eff = params.B, params.H
+            if algo == "onalgo":
+                lam_, mu_ = state.lam, state.mu
+                rho_t = state.rho.rho
+            else:
+                lam_ = jnp.zeros((N,), jnp.float32)
+                mu_ = jnp.float32(0.0)
+                rho_t = true_rho
+            y_pol = onalgo.policy_matrix(lam_, mu_, o_s, h_s, w_tab)
+            w_full = jnp.broadcast_to(w_tab, (N, M))
+            # f/g of the slot policy under the TRUE distribution — the
+            # quantities Theorem 1 bounds (reward convention: higher better).
+            out["f_true"] = jnp.sum(w_full * true_rho * y_pol)
+            g_pow = jnp.sum(o_s * true_rho * y_pol, axis=-1) - B_eff
+            g_cap = jnp.sum(h_s * true_rho * y_pol) - H_eff
+            out["g_pow"] = g_pow
+            out["g_cap"] = g_cap
+            # Perturbation terms delta_t(y_t) (Sec. IV.C.2): the rho_t - rho
+            # error projected on the policy, per constraint row.
+            drho = rho_t - true_rho
+            d_pow = jnp.sum(o_s * drho * y_pol, axis=-1)  # (N,)
+            d_cap = jnp.sum(h_s * drho * y_pol)  # ()
+            out["delta_norm"] = jnp.sqrt(jnp.sum(d_pow**2) + d_cap**2)
+            out["lam_delta"] = jnp.sum(lam_ * d_pow) + mu_ * d_cap
+        return state, out
+
+    final_state, series = jax.lax.scan(slot, algo_state,
+                                       (trace.j_idx, trace.d_local))
+    return series, final_state
+
+
+def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
+                     rule: StepRule, mesh, device_axis: str = "data"):
+    """Distributed OnAlgo over a fleet sharded on a mesh axis.
+
+    Devices (the N axis) are split across ``device_axis`` shards; each shard
+    runs the device-local threshold rule and lambda updates; the cloudlet
+    capacity sum is a psum — one scalar collective per slot, exactly the
+    paper's protocol cost.
+    """
+    o_tab, h_tab, w_tab = tables
+    N = trace.N
+    M = o_tab.shape[-1]
+
+    tab_spec = P(device_axis, None) if o_tab.ndim == 2 else P(None)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(None, device_axis), P(None, device_axis), tab_spec,
+                       tab_spec, tab_spec, P(device_axis), P()),
+             out_specs=(P(device_axis), P(), P()),
+             check_vma=False)
+    def run(j_idx, d_local, o_t, h_t, w_t, B, H):
+        n_local = j_idx.shape[1]
+        state = onalgo.init_state(n_local, M)
+        p_local = OnAlgoParams(B=B, H=H)
+
+        def slot(state, j):
+            task = j > 0
+            o_now = _lookup(o_t, j)
+            h_now = _lookup(h_t, j)
+            w_now = _lookup(w_t, j)
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
+                                         (o_t, h_t, w_t), p_local, rule,
+                                         axis_name=device_axis)
+            reward = jax.lax.psum(
+                jnp.sum(w_now * offload.astype(jnp.float32)), device_axis)
+            return state, (reward, state.mu)
+
+        state, (rewards, mus) = jax.lax.scan(slot, state, j_idx)
+        return state.lam, rewards, mus
+
+    return run(trace.j_idx, trace.d_local, o_tab, h_tab, w_tab, params.B,
+               params.H)

@@ -1,0 +1,129 @@
+"""Quantized system state space J = O x H x W (paper Sec. II).
+
+The paper models the per-slot system state of a device as a tuple
+``j = (o, h, w)``: the power cost of transmitting the current object (Watts),
+the cloudlet cycles it would consume, and the (quantized) predicted accuracy
+improvement.  Each component is drawn from a finite level set; the joint
+per-device state space has ``M = |O|*|H|*|W| (+1 null)`` states.  State 0 is
+the *null* state (``s_nt = None`` — no task this slot): all its values are
+zero so it never offloads and contributes nothing to the constraints.
+
+The implementation is fully vectorized: value *tables* are flat ``(M,)``
+arrays shared across devices, optionally modulated by per-device scales
+(e.g. a device far from the AP pays more power per image — paper Fig. 2b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpace:
+    """Finite per-device state space with flat value tables.
+
+    Attributes:
+      o_levels: power-cost level values (Watts), shape (Lo,).
+      h_levels: cloudlet-cycle level values (cycles or FLOPs), shape (Lh,).
+      w_levels: gain level values in [0, 1], shape (Lw,).
+      include_null: if True, state index 0 is the no-task state (all zeros)
+        and real states start at index 1.
+    """
+
+    o_levels: tuple
+    h_levels: tuple
+    w_levels: tuple
+    include_null: bool = True
+
+    @property
+    def num_levels(self) -> tuple:
+        return (len(self.o_levels), len(self.h_levels), len(self.w_levels))
+
+    @property
+    def M(self) -> int:
+        lo, lh, lw = self.num_levels
+        return lo * lh * lw + (1 if self.include_null else 0)
+
+    def encode(self, io, ih, iw):
+        """Map level indices -> flat state index (null-aware)."""
+        lo, lh, lw = self.num_levels
+        base = (io * lh + ih) * lw + iw
+        return base + (1 if self.include_null else 0)
+
+    def tables(self, dtype=jnp.float32):
+        """Return (o_tab, h_tab, w_tab), each (M,)."""
+        lo, lh, lw = self.num_levels
+        o = np.asarray(self.o_levels, np.float64)
+        h = np.asarray(self.h_levels, np.float64)
+        w = np.asarray(self.w_levels, np.float64)
+        og, hg, wg = np.meshgrid(o, h, w, indexing="ij")
+        o_tab, h_tab, w_tab = og.reshape(-1), hg.reshape(-1), wg.reshape(-1)
+        if self.include_null:
+            z = np.zeros(1)
+            o_tab = np.concatenate([z, o_tab])
+            h_tab = np.concatenate([z, h_tab])
+            w_tab = np.concatenate([z, w_tab])
+        return (jnp.asarray(o_tab, dtype), jnp.asarray(h_tab, dtype),
+                jnp.asarray(w_tab, dtype))
+
+
+def default_paper_space(num_w: int = 8) -> StateSpace:
+    """State space parameterized by the paper's testbed measurements.
+
+    Power: fitted curve p(r) = -0.00037 r^2 + 0.0214 r + 0.1277 W evaluated at
+    a few representative WiFi rates (Fig. 2b).  Cycles: cloudlet CNN task cost
+    441 +/- 90 Mcycles (Fig. 2c) quantized at -1/0/+1 sigma.  Gains: uniform
+    grid over [0, 0.25] — the paper observes accuracy improvements up to ~20%
+    per class (Fig. 3b) and ~15% end-to-end.
+    """
+    rates = np.array([10.0, 25.0, 40.0])  # Mbps
+    p = -0.00037 * rates**2 + 0.0214 * rates + 0.1277  # Watts
+    cycles = np.array([441 - 90, 441.0, 441 + 90]) * 1e6  # cycles/task
+    gains = np.linspace(0.0, 0.25, num_w)
+    return StateSpace(tuple(p.tolist()), tuple(cycles.tolist()),
+                      tuple(gains.tolist()))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RhoEstimator:
+    """Streaming empirical state distribution rho_t (per device).
+
+    rho_t^j = (1/t) sum_{tau<=t} 1{pi_tau = j}   (paper Sec. III.A)
+
+    counts: (N, M) float32 visit counts; t: scalar int32 slot counter.
+    """
+
+    counts: jax.Array
+    t: jax.Array
+
+    @staticmethod
+    def create(num_devices: int, M: int) -> "RhoEstimator":
+        return RhoEstimator(
+            counts=jnp.zeros((num_devices, M), jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, j_idx: jax.Array) -> "RhoEstimator":
+        """Record current per-device state indices j_idx: (N,) int32."""
+        n = self.counts.shape[0]
+        counts = self.counts.at[jnp.arange(n), j_idx].add(1.0)
+        return RhoEstimator(counts=counts, t=self.t + 1)
+
+    @property
+    def rho(self) -> jax.Array:
+        """(N, M) empirical distribution; uniform-safe at t=0."""
+        t = jnp.maximum(self.t, 1).astype(jnp.float32)
+        return self.counts / t
+
+
+@partial(jax.jit, static_argnames=("M",))
+def empirical_rho(trace: jax.Array, M: int) -> jax.Array:
+    """Exact empirical distribution of a whole (T, N) trace -> (N, M)."""
+    one_hot = jax.nn.one_hot(trace, M, dtype=jnp.float32)  # (T, N, M)
+    return one_hot.mean(axis=0)

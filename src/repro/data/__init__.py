@@ -1,0 +1,1 @@
+# Data substrate: traffic traces, synthetic datasets, gain predictor, LM tokens.

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the framework's compute hot-spots:
+#   onalgo_step      — the paper's per-slot fleet decision + dual reductions
+#   flash_attention  — prefill/train attention (GQA, causal, online softmax)
+#   decode_attention — flash-decode against a long KV cache
+#   ssd_chunk        — Mamba2/SSD within-chunk dual form
+# Each has a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
+# Kernels are validated with interpret=True on CPU; BlockSpecs are written
+# for TPU VMEM tiling (128-aligned where the MXU wants it).

@@ -1,0 +1,99 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Grid (b*h_q, n_kv_blocks): kv blocks stream through VMEM while the single
+query row stays resident; partial (m, l, acc) in VMEM scratch, masked by
+``cache_len`` (passed as a scalar-prefetch operand so the index math can
+see it).  The KV cache is blocked (block_k x head_dim) — for a 32k cache
+that is 256 blocks of 128, each a VMEM-friendly 32KB bf16 tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale, block_k, n_kv_blocks):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k),
+                                                    1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_len, *,
+                            block_k=128, interpret=True):
+    """q: (B, 1, Hq, D); caches (B, S, Hkv, D); cache_len scalar int.
+    Returns (B, 1, Hq, D)."""
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+
+    qf = q.reshape(B, Hq, 1, D).reshape(B * Hq, 1, D)
+    kf = jnp.moveaxis(k_cache, 2, 1).reshape(B * Hkv, S, D)
+    vf = jnp.moveaxis(v_cache, 2, 1).reshape(B * Hkv, S, D)
+    len_arr = jnp.full((1,), cache_len, jnp.int32)
+
+    def kv_index(bh, ik, len_ref):  # scalar-prefetch refs come last
+        return ((bh // Hq) * Hkv + (bh % Hq) // G, ik, 0)
+
+    kernel = functools.partial(_decode_kernel, scale=D ** -0.5,
+                               block_k=block_k, n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda bh, ik, len_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, ik, len_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
+        interpret=interpret,
+    )(len_arr, qf, kf, vf)
+    return out.reshape(B, Hq, 1, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,108 @@
+"""Pallas TPU flash attention (GQA, causal/full, online softmax).
+
+Grid (b*h_q, n_q_blocks, n_kv_blocks); the kv dimension is innermost and
+sequential — the output block for (bh, iq) is revisited across ik with the
+running (m, l, acc) held in VMEM scratch.  Block shapes are MXU-aligned
+(block_q x head_dim and block_k x head_dim tiles, head_dim typically 64/128;
+blocks default to 128x128).  GQA is expressed in the k/v index_map: query
+head bh reads kv head (bh % Hq) // group of batch bh // Hq — kv tensors are
+never materially repeated.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, block_q, block_k, n_kv_blocks):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, block_q=128,
+                           block_k=128, interpret=True):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * Hq, Sq, D)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Skv, D)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Skv, D)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // Hq) * Hkv + (bh % Hq) // G, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m
+            pltpu.VMEM((block_q,), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, Hq, Sq, D), 1, 2)

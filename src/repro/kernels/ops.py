@@ -1,0 +1,43 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a CPU build box the kernels execute through the Pallas interpreter
+(``interpret=True``) for correctness validation; on a TPU runtime set
+``REPRO_KERNEL_INTERPRET=0`` to lower them natively.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+@partial(jax.jit, static_argnames=())
+def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
+    from repro.kernels.onalgo_step import onalgo_duals_pallas
+    return onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B,
+                               interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k=128):
+    from repro.kernels.decode_attention import decode_attention_pallas
+    return decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                                   block_k=block_k, interpret=INTERPRET)
+
+
+@jax.jit
+def ssd_chunk(x, dt, A, Bh, Ch):
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+    return ssd_chunk_pallas(x, dt, A, Bh, Ch, interpret=INTERPRET)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def onalgo_duals_ref(lam, mu, rho, o_tab, h_tab, w_tab, B):
+    """Fused OnAlgo dual-subgradient reductions (paper eqs. 6, 8, 9).
+
+    lam: (N,); mu: (); rho: (N, M); tables (M,) or (N, M); B: (N,).
+    Returns (g_pow (N,), load ()):
+      y[n,j]  = 1{lam_n o_j + mu h_j < w_j, w_j > 0}
+      g_pow_n = sum_j o_j rho_nj y_nj - B_n
+      load    = sum_nj h_j rho_nj y_nj        (caller subtracts H)
+    """
+    N, M = rho.shape
+    o = jnp.broadcast_to(o_tab, (N, M)).astype(jnp.float32)
+    h = jnp.broadcast_to(h_tab, (N, M)).astype(jnp.float32)
+    w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
+    price = lam[:, None] * o + mu * h
+    y = ((price < w) & (w > 0)).astype(jnp.float32)
+    g_pow = jnp.sum(o * rho * y, axis=-1) - B
+    load = jnp.sum(h * rho * y)
+    return g_pow, load
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """O(S^2) GQA attention oracle. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    from repro.models.attention import attention_ref
+    return attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """Masked single-token attention oracle."""
+    from repro.models.attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, cache_len)
+
+
+def ssd_chunk_ref(x, dt, A, Bh, Ch):
+    """Within-chunk SSD dual form + terminal chunk states (pre-recurrence).
+
+    x:  (b, nc, Q, h, p) fp32     dt: (b, nc, Q, h)
+    A:  (h,)                      Bh, Ch: (b, nc, Q, h, n)  (head-expanded)
+    Returns:
+      y_diag (b, nc, Q, h, p) — intra-chunk contribution,
+      states (b, nc, h, p, n) — per-chunk terminal states.
+    """
+    dA = dt * A
+    dA_cs = jnp.cumsum(dA, axis=2)
+    xbar = x * dt[..., None]
+    Q = x.shape[2]
+    seg = dA_cs[..., :, None, :] - dA_cs[..., None, :, :]  # (b,nc,Q,Q,h)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores * L, xbar)
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bh, decay, xbar)
+    return y_diag, states

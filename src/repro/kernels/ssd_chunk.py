@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the Mamba2/SSD within-chunk dual form.
+
+One grid cell = one (batch*chunk, head): computes the chunk's quadratic
+attention-like form  Y = (C B^T . L) X̄  and the chunk's terminal state
+contribution  S = (B * decay)^T X̄  entirely in VMEM.  Q (chunk length) and
+the head/state dims are MXU-shaped (Q=128/256, p=64, n<=128).  The
+cross-chunk recurrence stays outside (associative scan in models/ssm.py) —
+it is O(nc) elementwise and bandwidth-trivial.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *, Q):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)   # (Q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)    # (Q,)
+    A = a_ref[0]                                # ()
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (Q, n)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (Q, n)
+
+    dA = dt * A  # (Q,)
+    dA_cs = jnp.cumsum(dA)
+    xbar = x * dt[:, None]
+
+    # L[i, j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L, xbar, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay = jnp.exp(dA_cs[-1] - dA_cs)  # (Q,)
+    bw = Bm * decay[:, None]            # (Q, n)
+    st = jax.lax.dot_general(xbar, bw, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (p, n)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, A, Bh, Ch, *, interpret=True):
+    """Within-chunk SSD (matches kernels/ref.ssd_chunk_ref).
+
+    x: (b, nc, Q, h, p); dt: (b, nc, Q, h); A: (h,);
+    Bh, Ch: (b, nc, Q, h, n) head-expanded.
+    Returns (y_diag (b, nc, Q, h, p), states (b, nc, h, p, n))."""
+    b, nc, Q, h, p = x.shape
+    n = Bh.shape[-1]
+    BC = b * nc
+
+    xf = x.reshape(BC, Q, h, p)
+    dtf = dt.reshape(BC, Q, h)
+    bf = Bh.reshape(BC, Q, h, n)
+    cf = Ch.reshape(BC, Q, h, n)
+
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(BC, h),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, Q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((1, Q, 1, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, Q, 1, n), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, Q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((BC, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf, dtf, A.astype(jnp.float32), bf, cf)
+    return y.reshape(b, nc, Q, h, p), st.reshape(b, nc, h, p, n)

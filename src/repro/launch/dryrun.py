@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build abstract inputs (ShapeDtypeStruct only — nothing is
+allocated), resolve logical-axis shardings against the production mesh,
+``jit(step).lower(...).compile()``, then record:
+  * memory_analysis()  — proves the cell fits per-chip HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective stats parsed from the optimized HLO (analysis/hlo_stats).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis.hlo_stats import collective_stats, cost_summary  # noqa: E402
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import ModelAPI  # noqa: E402
+from repro.parallel import axis_rules, logical_to_spec  # noqa: E402
+from repro.parallel.sharding import shape_aware_spec_tree  # noqa: E402
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train.trainer import TrainState, make_train_step  # noqa: E402
+
+HW = {  # TPU v5e per chip
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw_per_link": 50e9,
+    "hbm_bytes": 16 * 1024**3,
+}
+
+
+def _sharding_tree(shapes_tree, logical_tree, mesh, rules=None):
+    return shape_aware_spec_tree(shapes_tree, logical_tree, rules=rules,
+                                 mesh=mesh)
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public helper: abstract model inputs for a cell (no allocation)."""
+    cfg = get_config(arch)
+    api = ModelAPI(cfg)
+    return api.batch_specs(SHAPES[shape_name])
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.sub_quadratic_only and cfg.family not in ("ssm", "hybrid"):
+        return ("skipped: long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is full-attention (see DESIGN.md)")
+    return None
+
+
+def build_cell(cfg, shape, mesh, rules=None, donate_state=False):
+    """Returns (fn, abstract args tuple, in_shardings tuple, donate)."""
+    api = ModelAPI(cfg)
+    params_abs, params_logical = api.abstract_params()
+    batch_abs, batch_logical = api.batch_specs(shape)
+
+    # rules passed here are OVERRIDES; merge with defaults before resolving
+    # argument shardings (axis_rules does the same merge for activation
+    # constraints — passing the raw override dict would replicate all args).
+    from repro.parallel.sharding import DEFAULT_RULES
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    with axis_rules(rules, mesh=mesh):
+        params_sh = _sharding_tree(params_abs, params_logical, mesh, rules)
+        batch_sh = _sharding_tree(batch_abs, batch_logical, mesh, rules)
+
+        if shape.mode == "train":
+            opt_spec = opt_lib.OptimizerSpec(name=cfg.optimizer)
+            state_abs = jax.eval_shape(
+                lambda p: TrainState.create(p, opt_spec), params_abs)
+            opt_logical = opt_lib.opt_state_specs(opt_spec, params_abs,
+                                                  params_logical)
+            state_sh = TrainState(
+                params=params_sh,
+                opt_state=_sharding_tree(state_abs.opt_state, opt_logical,
+                                         mesh, rules),
+                step=NamedSharding(mesh, P()))
+            lr_fn = opt_lib.cosine_schedule(3e-4, 100, 10000)
+            loss_fn = partial(_loss, api)
+            # NOTE: pinning grad shardings to param specs was tried and
+            # REFUTED (EXPERIMENTS.md §Perf iter 2): no wire reduction,
+            # 2x local copy traffic.  Leave grads to the partitioner.
+            step = make_train_step(loss_fn, opt_spec, lr_fn)
+            return (step, (state_abs, batch_abs), (state_sh, batch_sh),
+                    (state_sh, None))
+
+        if shape.mode == "prefill":
+            fn = lambda p, b: api.prefill_step(p, b, max_len=shape.seq_len)
+            return fn, (params_abs, batch_abs), (params_sh, batch_sh), None
+
+        # decode
+        state_abs, state_logical = api.serve_state_specs(shape)
+        state_sh = _sharding_tree(state_abs, state_logical, mesh, rules)
+        tok_abs = batch_abs["token"]
+        tok_sh = _sharding_tree(tok_abs, ("batch", None), mesh, rules)
+        fn = lambda p, t, s: api.decode_step(p, t, s)
+        return (fn, (params_abs, tok_abs, state_abs),
+                (params_sh, tok_sh, state_sh),
+                ("donate" if donate_state else None))
+
+
+def _loss(api, params, batch):
+    return api.loss(params, batch)
+
+
+def _compile_once(cfg, shape, mesh, rules, unroll: bool,
+                  donate_state=False, flash_block=2048):
+    from repro.parallel.compile_mode import compile_options
+    with compile_options(unroll_scans=unroll, flash_block=flash_block), \
+            axis_rules(rules, mesh=mesh):
+        fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh, rules,
+                                             donate_state)
+        if out_sh == "donate":
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(2,))
+        elif out_sh is not None:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        else:
+            jitted = jax.jit(fn, in_shardings=in_sh)
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _reduced_depth(cfg, n_instances: int):
+    """Same config at n_instances pattern repetitions (for cost probing)."""
+    import dataclasses as dc
+    p = cfg.pattern_period
+    kw = {"num_layers": n_instances * p}
+    if cfg.enc_layers:
+        kw["enc_layers"] = n_instances * p
+    return dc.replace(cfg, **kw)
+
+
+def _probe_costs(cfg, shape, mesh, rules, donate_state=False,
+                 flash_block=2048):
+    """FLOPs/bytes/collective-bytes extrapolated to full depth.
+
+    XLA's cost analysis counts a while body once, so rolled-scan numbers are
+    wrong; full unroll compiles too slowly at depth 95.  Scan instances are
+    HLO-identical, so every cost is EXACTLY linear in the instance count:
+    compile unrolled at n1 and n2 = 2*n1 instances and extrapolate
+    cost(L) = cost(n1) + (cost(n2) - cost(n1)) * (L - n1)/(n2 - n1).
+    """
+    p = cfg.pattern_period
+    n_full = cfg.num_layers // p
+    n1 = 1
+    n2 = min(2, n_full)
+    _, c1 = _compile_once(_reduced_depth(cfg, n1), shape, mesh, rules, True,
+                          donate_state, flash_block)
+    if n2 == n1:  # depth-1 model: costs are exact already
+        s1 = cost_summary(c1)
+        col1 = collective_stats(c1.as_text())
+        return s1, col1, {"probe_instances": [n1]}
+    _, c2 = _compile_once(_reduced_depth(cfg, n2), shape, mesh, rules, True,
+                          donate_state, flash_block)
+    s1, s2 = cost_summary(c1), cost_summary(c2)
+    col1 = collective_stats(c1.as_text())
+    col2 = collective_stats(c2.as_text())
+
+    def lerp(a, b):
+        return a + (b - a) * (n_full - n1) / (n2 - n1)
+
+    out = {}
+    for k in ("flops", "bytes_accessed"):
+        if k in s1 and k in s2:
+            out[k] = lerp(s1[k], s2[k])
+    cols = {}
+    ops = (set(col1) | set(col2)) - {"total_wire_bytes"}
+    for op in ops:
+        a = col1.get(op, {"count": 0, "bytes": 0})
+        b = col2.get(op, {"count": 0, "bytes": 0})
+        cols[op] = {"count": int(round(lerp(a["count"], b["count"]))),
+                    "bytes": int(round(lerp(a["bytes"], b["bytes"])))}
+    cols["total_wire_bytes"] = int(round(lerp(
+        col1["total_wire_bytes"], col2["total_wire_bytes"])))
+    return out, cols, {"probe_instances": [n1, n2]}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             rules=None, mesh=None, verbose: bool = True,
+             probe_costs: bool = True, cfg_fn=None, donate_state=False,
+             flash_block=2048) -> dict:
+    cfg = get_config(arch)
+    if cfg_fn is not None:
+        cfg = cfg_fn(cfg)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "mode": shape.mode}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        # 1) FULL-DEPTH rolled compile — THE deliverable (the production
+        #    program compiles on this mesh) + exact memory analysis.
+        lowered, compiled = _compile_once(cfg, shape, mesh, rules, False,
+                                          donate_state, flash_block)
+        t_compile = time.time() - t0
+        rec.update(cost_summary(compiled))
+
+        # 2) cost probe: depth-extrapolated exact FLOPs/bytes/collectives.
+        #    (single-pod only — the roofline table is single-pod; the
+        #    multi-pod pass proves the 'pod' axis shards.)
+        if probe_costs:
+            costs, cols, meta = _probe_costs(cfg, shape, mesh, rules,
+                                             donate_state, flash_block)
+            rec.update(costs)
+            rec["collectives"] = cols
+            rec.update(meta)
+        else:
+            # rolled-HLO collectives undercount while-loop bodies; keep them
+            # clearly labeled and skip the roofline for this pass.
+            rec["rolled_hlo_collectives"] = collective_stats(
+                compiled.as_text())
+        rec["status"] = "ok"
+        rec["compile_s"] = round(t_compile, 1)
+        rec["probe_s"] = round(time.time() - t0 - t_compile, 1)
+        rec["n_chips"] = n_chips
+
+        # roofline terms (per step, seconds).  cost_analysis() and the
+        # post-SPMD HLO shapes are PER-PARTITION (verified empirically:
+        # flops scale 1/n_chips with mesh size), so each term divides by a
+        # single chip's peak — the formula "total / (chips * peak)" with
+        # total = per_chip * chips reduces to exactly this.
+        n_params = cfg.param_count()
+        n_active = cfg.active_param_count()
+        rec["param_count"] = n_params
+        rec["active_param_count"] = n_active
+        if shape.mode == "train":
+            tokens = shape.global_batch * shape.seq_len
+            rec["model_flops"] = 6.0 * n_active * tokens
+        elif shape.mode == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            rec["model_flops"] = 2.0 * n_active * tokens
+        else:
+            rec["model_flops"] = 2.0 * n_active * shape.global_batch
+
+        if probe_costs:
+            flops = rec.get("flops", 0.0)
+            bytes_acc = rec.get("bytes_accessed", 0.0)
+            wire = rec["collectives"]["total_wire_bytes"]
+            rec["flops_total"] = flops * n_chips
+            rec["bytes_total"] = bytes_acc * n_chips
+            rec["roofline"] = {
+                "compute_s": flops / HW["peak_flops_bf16"],
+                "memory_s": bytes_acc / HW["hbm_bw"],
+                "collective_s": wire / HW["ici_bw_per_link"],
+            }
+            dom = max(rec["roofline"], key=rec["roofline"].get)
+            rec["roofline"]["dominant"] = dom
+            if flops:
+                rec["mf_ratio"] = rec["model_flops"] / rec["flops_total"]
+            if verbose:
+                r = rec["roofline"]
+                print(f"[dryrun] {arch}/{shape_name}/{rec['mesh']}: ok "
+                      f"compile {rec['compile_s']}s flops {flops:.3e} "
+                      f"compute {r['compute_s']*1e3:.2f}ms "
+                      f"mem {r['memory_s']*1e3:.2f}ms "
+                      f"coll {r['collective_s']*1e3:.2f}ms -> {dom}",
+                      flush=True)
+        elif verbose:
+            print(f"[dryrun] {arch}/{shape_name}/{rec['mesh']}: ok "
+                  f"compile {rec['compile_s']}s (mesh-compile pass)",
+                  flush=True)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch}/{shape_name}/{rec['mesh']}: "
+                  f"ERROR {rec['error'][:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "sp", "decode"],
+                    help="sharding preset (see parallel.sharding.PRESETS)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    from repro.parallel.sharding import PRESETS
+    preset = PRESETS[args.rules]
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                # cost probes (roofline) on the single-pod mesh only; the
+                # multi-pod pass is the compile-success deliverable.
+                rec = run_cell(arch, shape, multi_pod, mesh=mesh,
+                               probe_costs=not multi_pod,
+                               rules=preset or None)
+                results.append(rec)
+                tag = "multi" if multi_pod else "single"
+                path = os.path.join(
+                    args.out, f"{arch}_{shape}_{tag}.json".replace("-", "_"))
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    ok = sum(r["status"] == "ok" for r in results)
+    skipped = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {ok} ok, {skipped} skipped, {err} errors "
+          f"of {len(results)} cells")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# Cloudlet model zoo: pure-JAX composable model definitions for the 10
+# assigned architectures (dense / MoE / SSM / hybrid / enc-dec / VLM).

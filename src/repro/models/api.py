@@ -1,0 +1,167 @@
+"""Unified model API: one interface over all assigned architectures.
+
+Dispatches on cfg.family (lm-like vs enc-dec), provides:
+  init / loss / prefill_step / decode_step
+  abstract specs for the multi-pod dry-run (ShapeDtypeStruct + logical axes,
+  no allocation) for every (mode in train|prefill|decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models.layers import lm_logits
+
+
+class ModelAPI:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.family == "encdec"
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        if self.is_encdec:
+            return ED.init_encdec(self.cfg, key)
+        return LM.init_lm(self.cfg, key)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct pytree, logical axes pytree) — no allocation."""
+        holder = {}
+
+        def f(k):
+            p, s = self.init(k)
+            holder["s"] = s
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, holder["s"]
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch):
+        if self.is_encdec:
+            return ED.encdec_loss(self.cfg, params, batch)
+        return LM.lm_loss(self.cfg, params, batch)
+
+    # ------------------------------------------------------------------ serve
+    def prefill_step(self, params, batch, max_len: int):
+        """Returns (last_token_logits, serve_state). The KV/SSM cache is
+        allocated inside, sized to ``max_len`` (a static int)."""
+        cfg = self.cfg
+        if self.is_encdec:
+            memory = ED.encode(cfg, params, batch["src_embeds"])
+            kv = ED.cross_kv(cfg, params, memory)
+            tokens = batch["tokens"]
+            cache = ED.init_dec_cache(cfg, tokens.shape[0], max_len)
+            hidden, cache = ED.decode(cfg, params, tokens, kv, cache=cache,
+                                      cache_len=tokens.shape[1])
+            logits = lm_logits(cfg, params["embed"], hidden[:, -1:])
+            return logits, {"cache": cache, "memory_kv": kv,
+                            "length": jnp.int32(tokens.shape[1])}
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        cache = LM.init_cache(cfg, B, max_len)
+        prefix = batch.get("prefix_embeds")
+        hidden, cache = LM.prefill(cfg, params, tokens, cache,
+                                   prefix_embeds=prefix)
+        logits = lm_logits(cfg, params["embed"], hidden)
+        total = tokens.shape[1] + (prefix.shape[1] if prefix is not None
+                                   else 0)
+        return logits, {"cache": cache, "length": jnp.int32(total)}
+
+    def decode_step(self, params, token, state):
+        """token: (B, 1) int32; state from prefill_step (or abstract).
+        Returns (logits (B, 1, V), new_state)."""
+        cfg = self.cfg
+        new_len = state["length"] + 1
+        if self.is_encdec:
+            hidden, cache = ED.decode(cfg, params, token, state["memory_kv"],
+                                      cache=state["cache"], cache_len=new_len)
+            logits = lm_logits(cfg, params["embed"], hidden)
+            return logits, {**state, "cache": cache, "length": new_len}
+        logits, cache = LM.decode_step(cfg, params, token, state["cache"],
+                                       new_len)
+        return logits, {**state, "cache": cache, "length": new_len}
+
+    # ------------------------------------------------ dry-run abstract specs
+    def batch_specs(self, shape: ShapeConfig):
+        """(ShapeDtypeStruct pytree, logical-axes pytree) for the mode's
+        step-function data inputs."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f32, i32 = jnp.float32, jnp.int32
+        sd = jax.ShapeDtypeStruct
+
+        if shape.mode == "train":
+            if self.is_encdec:
+                src = cfg.frontend_tokens or 512
+                specs = {"src_embeds": sd((B, src, cfg.d_model), f32),
+                         "tokens": sd((B, S + 1), i32)}
+                axes = {"src_embeds": ("batch", None, None),
+                        "tokens": ("batch", None)}
+            elif cfg.family == "vlm":
+                text = S - cfg.frontend_tokens
+                specs = {"tokens": sd((B, text + 1), i32),
+                         "prefix_embeds": sd((B, cfg.frontend_tokens,
+                                              cfg.d_model), f32)}
+                axes = {"tokens": ("batch", None),
+                        "prefix_embeds": ("batch", None, None)}
+            else:
+                specs = {"tokens": sd((B, S + 1), i32)}
+                axes = {"tokens": ("batch", None)}
+            return specs, axes
+
+        if shape.mode == "prefill":
+            if self.is_encdec:
+                src = cfg.frontend_tokens or 512
+                specs = {"src_embeds": sd((B, src, cfg.d_model), f32),
+                         "tokens": sd((B, S), i32)}
+                axes = {"src_embeds": ("batch", None, None),
+                        "tokens": ("batch", None)}
+            elif cfg.family == "vlm":
+                text = S - cfg.frontend_tokens
+                specs = {"tokens": sd((B, text), i32),
+                         "prefix_embeds": sd((B, cfg.frontend_tokens,
+                                              cfg.d_model), f32)}
+                axes = {"tokens": ("batch", None),
+                        "prefix_embeds": ("batch", None, None)}
+            else:
+                specs = {"tokens": sd((B, S), i32)}
+                axes = {"tokens": ("batch", None)}
+            return specs, axes
+
+        # decode: token + serve state (cache sized to S)
+        token = sd((B, 1), i32)
+        state_shapes, state_axes = self.serve_state_specs(shape)
+        return ({"token": token, "state": state_shapes},
+                {"token": ("batch", None), "state": state_axes})
+
+    def serve_state_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sd = jax.ShapeDtypeStruct
+        if self.is_encdec:
+            src = cfg.frontend_tokens or 512
+            kv_shape = (cfg.num_layers, B, S, cfg.num_kv_heads,
+                        cfg.resolved_head_dim)
+            mem_shape = (cfg.num_layers, B, src, cfg.num_kv_heads,
+                         cfg.resolved_head_dim)
+            shapes = {"cache": {"k": sd(kv_shape, cfg.dtype),
+                                "v": sd(kv_shape, cfg.dtype)},
+                      "memory_kv": (sd(mem_shape, cfg.dtype),
+                                    sd(mem_shape, cfg.dtype)),
+                      "length": sd((), jnp.int32)}
+            kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            mem_axes = ("layers", "batch", None, "kv_heads", "head_dim")
+            axes = {"cache": {"k": kv_axes, "v": kv_axes},
+                    "memory_kv": (mem_axes, mem_axes),
+                    "length": ()}
+            return shapes, axes
+
+        cache = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
+        cache_axes = LM.cache_spec_tree(cfg)
+        return ({"cache": cache, "length": jax.ShapeDtypeStruct((), jnp.int32)},
+                {"cache": cache_axes, "length": ()})

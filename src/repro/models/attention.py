@@ -1,0 +1,208 @@
+"""GQA attention: chunked-flash for prefill/train, dense for decode.
+
+The train/prefill path is an online-softmax flash formulation written as
+``lax.scan`` over KV blocks — this is the TPU-honest XLA reference (no
+S x S materialization, HBM traffic matches what the Pallas kernel claims)
+and doubles as the oracle the Pallas ``flash_attention`` kernel is tested
+against.  Head grouping: q heads are reshaped to (kv_heads, group) so the
+kv tensors are never repeated in memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import compile_mode
+from repro.parallel.sharding import shard
+
+
+def init_attention(key, cfg):
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = (2.0 / D) ** 0.5
+    p = {
+        "wq": jax.random.normal(k1, (D, Hq, Dh), cfg.dtype) * s,
+        "wk": jax.random.normal(k2, (D, Hkv, Dh), cfg.dtype) * s,
+        "wv": jax.random.normal(k3, (D, Hkv, Dh), cfg.dtype) * s,
+        "wo": jax.random.normal(k4, (Hq, Dh, D), cfg.dtype)
+        * (2.0 / (Hq * Dh)) ** 0.5,
+    }
+    specs = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return p, specs
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, block_kv=None,
+                    bias=None):
+    """Online-softmax attention, scanned over KV blocks.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (for chunked prefill).
+    Returns (B, Sq, Hq, Dh) in q.dtype.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if block_kv is None:
+        block_kv = compile_mode.flash_block_size()
+    blk = min(block_kv, Skv)
+    assert Skv % blk == 0, (Skv, blk)
+    nblk = Skv // blk
+
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+    scale = Dh ** -0.5
+    kb = k.reshape(B, nblk, blk, Hkv, Dh)
+    vb = v.reshape(B, nblk, blk, Hkv, Dh)
+    kb = jnp.moveaxis(kb, 1, 0)  # (nblk, B, blk, Hkv, Dh)
+    vb = jnp.moveaxis(vb, 1, 0)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, start = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            k_pos = start + jnp.arange(blk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        if bias is not None:
+            s = s + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dh), jnp.float32)
+    starts = jnp.arange(nblk) * blk
+    (m, l, acc), _ = compile_mode.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, Dh)  # b h g q d -> b q (hg) d
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-step attention against a (possibly longer) KV cache.
+
+    q: (B, 1, Hq, Dh); caches: (B, S, Hkv, Dh); cache_len: () or (B,) valid
+    prefix length (new token's k/v already written at cache_len - 1).
+    """
+    B, _, Hq, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    # keep the cache in its storage dtype: an .astype(f32) here costs a
+    # full-cache HBM pass + double-width traffic; the MXU accumulates in
+    # fp32 via preferred_element_type regardless.
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * Dh ** -0.5
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.broadcast_to(jnp.asarray(cache_len),
+                                         (B,))[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0):
+    """Naive O(S^2) oracle for tests."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * Dh**-0.5
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = q_pos[:, None] >= jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_block(cfg, params, x, *, positions, causal=True, kv_cache=None,
+                    cache_len=None, kv_override=None, use_kernel=False):
+    """Full attention sublayer: qkv proj -> rope -> attention -> out proj.
+
+    kv_cache: None (train/prefill, returns new kv for caching) or
+      (k_cache, v_cache) for decode — the new token is written at
+      cache_len - 1 and attention runs against the whole valid prefix.
+    kv_override: (k, v) from the encoder for cross-attention (no rope on kv).
+    Returns (out, (k, v)) — the kv actually used (for cache building).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+        v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+        q = layers_rope(q, positions, cfg.rope_theta)
+        k = layers_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    if kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        S_new = k.shape[1]
+        # write the new kv at positions [cache_len - S_new, cache_len)
+        idx = jnp.asarray(cache_len) - S_new
+        if S_new == 1:
+            # decode: dynamic_update_slice at a traced index along the
+            # seq-SHARDED cache dim makes GSPMD gather/rescatter the whole
+            # cache every token; a one-hot masked write is shard-local
+            # (2x cache HBM r/w, zero collectives) — EXPERIMENTS §Perf.
+            S_tot = k_cache.shape[1]
+            onehot = (jnp.arange(S_tot) == idx).astype(k_cache.dtype)
+            m = onehot[None, :, None, None]
+            k_cache = k_cache * (1 - m) + k.astype(k_cache.dtype) * m
+            v_cache = v_cache * (1 - m) + v.astype(v_cache.dtype) * m
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+        v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+        if S_new == 1:
+            if use_kernel:
+                from repro.kernels import ops as kops
+                out = kops.decode_attention(q, k_cache, v_cache, cache_len)
+            else:
+                out = decode_attention(q, k_cache, v_cache, cache_len)
+        else:
+            # chunked prefill: causal flash over the cache; the causal mask
+            # with q_offset automatically ignores unwritten tail positions.
+            out = flash_attention(q, k_cache, v_cache, causal=True,
+                                  q_offset=idx)
+        k, v = k_cache, v_cache
+    else:
+        if use_kernel:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=causal)
+        else:
+            out = flash_attention(q, k, v, causal=causal)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shard(out, "batch", "seq", "act_embed"), (k, v)
+
+
+def layers_rope(x, positions, theta):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, positions, theta)

@@ -1,0 +1,132 @@
+"""Layer blocks: (attention | mamba) mixer + (dense | MoE) FFN, pre-norm.
+
+A *pattern* is the smallest repeating group of layers (period 1 for uniform
+stacks; 8 for Jamba's [m m m m a m m m] with MoE on odd layers).  The LM
+scans over pattern instances — HLO size stays O(pattern), not O(depth).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+def init_sub_block(key, cfg, layer_idx: int):
+    """One layer: norms + mixer + ffn params (+specs)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg)
+    if cfg.block_kind(layer_idx) == "attn":
+        p["mixer"], s["mixer"] = attn.init_attention(k1, cfg)
+    else:
+        p["mixer"], s["mixer"] = ssm_lib.init_ssm(k2, cfg)
+    # Mamba2-style blocks (d_ff == 0, no MoE) have no FFN sublayer.
+    if cfg.ffn_kind(layer_idx) == "moe":
+        p["norm2"], s["norm2"] = L.init_norm(cfg)
+        p["ffn"], s["ffn"] = moe_lib.init_moe(k3, cfg)
+        if cfg.dense_residual:
+            p["ffn_dense"], s["ffn_dense"] = L.init_mlp(k4, cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"], s["norm2"] = L.init_norm(cfg)
+        p["ffn"], s["ffn"] = L.init_mlp(k3, cfg)
+    return p, s
+
+
+def apply_sub_block(cfg, params, x, layer_idx: int, *, positions,
+                    cache=None, cache_len=None, use_kernel=False,
+                    causal=True):
+    """Pre-norm transformer/mamba layer.  Returns (x, new_cache, aux_loss)."""
+    kind = cfg.block_kind(layer_idx)
+    h = L.apply_norm(cfg, params["norm1"], x)
+    new_cache = cache
+    if kind == "attn":
+        kv_cache = ((cache["k"], cache["v"])
+                    if cache is not None else None)
+        out, (k, v) = attn.attention_block(
+            cfg, params["mixer"], h, positions=positions, causal=causal,
+            kv_cache=kv_cache, cache_len=cache_len, use_kernel=use_kernel)
+        if cache is not None:
+            new_cache = {"k": k, "v": v}
+    else:
+        out, ssm_cache = ssm_lib.mamba_block(cfg, params["mixer"], h,
+                                             cache=cache,
+                                             use_kernel=use_kernel)
+        if cache is not None:
+            new_cache = ssm_cache
+    x = x + out
+
+    aux = jnp.float32(0.0)
+    if cfg.ffn_kind(layer_idx) == "moe":
+        h = L.apply_norm(cfg, params["norm2"], x)
+        moe_fn = (moe_lib.moe_ffn_dropless if cfg.moe_impl == "dropless"
+                  else moe_lib.moe_ffn)
+        out, aux = moe_fn(cfg, params["ffn"], h)
+        if cfg.dense_residual:
+            out = out + L.apply_mlp(cfg, params["ffn_dense"], h)
+        x = x + out
+    elif cfg.d_ff > 0:
+        h = L.apply_norm(cfg, params["norm2"], x)
+        x = x + L.apply_mlp(cfg, params["ffn"], h)
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg, layer_idx: int, batch: int, max_len: int):
+    """Decode cache entry for one layer (kv or ssm/conv)."""
+    if cfg.block_kind(layer_idx) == "attn":
+        shape = (batch, max_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+        return {"k": jnp.zeros(shape, cfg.dtype),
+                "v": jnp.zeros(shape, cfg.dtype)}
+    return ssm_lib.init_ssm_cache(cfg, batch)
+
+
+def cache_specs(cfg, layer_idx: int):
+    """Logical axes of a layer's cache entry (mirrors init_block_cache)."""
+    if cfg.block_kind(layer_idx) == "attn":
+        axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+        return {"k": axes, "v": axes}
+    return {"conv": ("batch", None, "mlp"),
+            "ssm": ("batch", None, None, "state")}
+
+
+def init_pattern(key, cfg):
+    """Init one pattern instance (cfg.pattern_period consecutive layers)."""
+    p_period = cfg.pattern_period
+    keys = jax.random.split(key, p_period)
+    params, specs = {}, {}
+    for r in range(p_period):
+        params[f"sub{r}"], specs[f"sub{r}"] = init_sub_block(keys[r], cfg, r)
+    return params, specs
+
+
+def apply_pattern(cfg, params, x, *, positions, cache=None, cache_len=None,
+                  use_kernel=False, causal=True):
+    """Apply one pattern instance; cache is the per-instance cache dict."""
+    p_period = cfg.pattern_period
+    new_cache = {} if cache is not None else None
+    aux_total = jnp.float32(0.0)
+    for r in range(p_period):
+        sub_cache = cache[f"sub{r}"] if cache is not None else None
+        x, sc, aux = apply_sub_block(
+            cfg, params[f"sub{r}"], x, r, positions=positions,
+            cache=sub_cache, cache_len=cache_len, use_kernel=use_kernel,
+            causal=causal)
+        if cache is not None:
+            new_cache[f"sub{r}"] = sc
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+def remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)

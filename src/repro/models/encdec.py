@@ -1,0 +1,166 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium style, audio frontend stub).
+
+Encoder: bidirectional self-attention stack over precomputed source frame
+embeddings (the conformer speech frontend is stubbed per the assignment).
+Decoder: causal self-attention + cross-attention to encoder memory + FFN.
+Decode-time caches: self-attn KV cache per layer + cross-attn K/V computed
+once from memory at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.lm import _add_layers_axis, chunked_xent
+from repro.parallel import compile_mode
+from repro.parallel.sharding import shard
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg)
+    p["attn"], s["attn"] = attn.init_attention(k1, cfg)
+    p["norm2"], s["norm2"] = L.init_norm(cfg)
+    p["mlp"], s["mlp"] = L.init_mlp(k2, cfg)
+    return p, s
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg)
+    p["self_attn"], s["self_attn"] = attn.init_attention(k1, cfg)
+    p["norm_x"], s["norm_x"] = L.init_norm(cfg)
+    p["cross_attn"], s["cross_attn"] = attn.init_attention(k2, cfg)
+    p["norm2"], s["norm2"] = L.init_norm(cfg)
+    p["mlp"], s["mlp"] = L.init_mlp(k3, cfg)
+    return p, s
+
+
+def init_encdec(cfg, key):
+    k_emb, k_enc, k_dec, k_n1, k_n2 = jax.random.split(key, 5)
+    embed_p, embed_s = L.init_embed(k_emb, cfg)
+
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    enc_p = jax.vmap(lambda k: _init_enc_layer(k, cfg)[0])(enc_keys)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    dec_p = jax.vmap(lambda k: _init_dec_layer(k, cfg)[0])(dec_keys)
+
+    holder = {}
+
+    def f(k):
+        pe, se = _init_enc_layer(k, cfg)
+        pd, sd = _init_dec_layer(k, cfg)
+        holder["enc"], holder["dec"] = se, sd
+        return (pe, pd)
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+
+    enc_norm_p, enc_norm_s = L.init_norm(cfg)
+    dec_norm_p, dec_norm_s = L.init_norm(cfg)
+    params = {"embed": embed_p, "encoder": enc_p, "decoder": dec_p,
+              "enc_norm": enc_norm_p, "final_norm": dec_norm_p}
+    specs = {"embed": embed_s,
+             "encoder": _add_layers_axis(holder["enc"]),
+             "decoder": _add_layers_axis(holder["dec"]),
+             "enc_norm": enc_norm_s, "final_norm": dec_norm_s}
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+
+def encode(cfg, params, src_embeds):
+    """src_embeds: (B, S_src, D) precomputed frame embeddings -> memory."""
+    Bsz, S, _ = src_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    x = shard(src_embeds.astype(cfg.dtype), "batch", "seq", "act_embed")
+
+    def body(h, layer):
+        a = L.apply_norm(cfg, layer["norm1"], h)
+        out, _ = attn.attention_block(cfg, layer["attn"], a,
+                                      positions=positions, causal=False)
+        h = h + out
+        a = L.apply_norm(cfg, layer["norm2"], h)
+        h = h + L.apply_mlp(cfg, layer["mlp"], a)
+        return h, None
+
+    from repro.models.blocks import remat_wrap
+    x, _ = compile_mode.scan(remat_wrap(cfg, body), x, params["encoder"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def cross_kv(cfg, params, memory):
+    """Precompute per-layer cross-attention K/V from encoder memory."""
+
+    def body(_, layer):
+        k = jnp.einsum("bsd,dhk->bshk", memory, layer["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, layer["cross_attn"]["wv"])
+        return None, (k, v)
+
+    _, kv = compile_mode.scan(body, None, params["decoder"])
+    return kv  # pytree with leading layer axis
+
+
+def decode(cfg, params, tokens, memory_kv, *, cache=None, cache_len=None):
+    """Decoder stack. tokens: (B, S); memory_kv from cross_kv().
+
+    Returns (hidden, new_cache)."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    Bsz, S, _ = x.shape
+    if cache_len is not None:
+        start = jnp.asarray(cache_len) - S
+        positions = jnp.broadcast_to(start + jnp.arange(S)[None], (Bsz, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+
+    def body(h, xs):
+        layer, mem_kv, kv_cache = xs
+        a = L.apply_norm(cfg, layer["norm1"], h)
+        out, new_kv = attn.attention_block(
+            cfg, layer["self_attn"], a, positions=positions, causal=True,
+            kv_cache=(kv_cache["k"], kv_cache["v"]) if kv_cache is not None
+            else None,
+            cache_len=cache_len)
+        h = h + out
+        a = L.apply_norm(cfg, layer["norm_x"], h)
+        out, _ = attn.attention_block(cfg, layer["cross_attn"], a,
+                                      positions=positions, causal=False,
+                                      kv_override=mem_kv)
+        h = h + out
+        a = L.apply_norm(cfg, layer["norm2"], h)
+        h = h + L.apply_mlp(cfg, layer["mlp"], a)
+        new_cache = ({"k": new_kv[0], "v": new_kv[1]}
+                     if kv_cache is not None else None)
+        return h, new_cache
+
+    from repro.models.blocks import remat_wrap
+    h, new_cache = compile_mode.scan(remat_wrap(cfg, body), x,
+                                     (params["decoder"], memory_kv, cache))
+    return L.apply_norm(cfg, params["final_norm"], h), new_cache
+
+
+def init_dec_cache(cfg, batch: int, max_len: int):
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def encdec_loss(cfg, params, batch):
+    """batch: {"src_embeds": (B, S_src, D), "tokens": (B, S_tgt+1)}."""
+    memory = encode(cfg, params, batch["src_embeds"])
+    kv = cross_kv(cfg, params, memory)
+    tokens = batch["tokens"]
+    hidden, _ = decode(cfg, params, tokens[:, :-1], kv)
+    loss = chunked_xent(cfg, params["embed"], hidden, tokens[:, 1:])
+    return loss, {"xent": loss, "aux": jnp.float32(0.0)}

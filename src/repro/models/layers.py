@@ -1,0 +1,145 @@
+"""Shared neural-net layers (pure JAX, no flax): norms, RoPE, MLPs, embeddings.
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * every init function returns ``(params, specs)`` where ``specs`` mirrors
+    params with tuples of *logical* axis names (see parallel/sharding.py);
+  * activations flow in ``cfg.dtype`` (bf16 by default), reductions and
+    normalizer statistics in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparam_ln(x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm: no learnable scale/bias."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}, {"scale": ("act_embed",)}
+    if cfg.norm_type == "layernorm":
+        return ({"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+                {"scale": ("act_embed",), "bias": ("act_embed",)})
+    if cfg.norm_type == "nonparam_ln":
+        return {}, {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg, params, x):
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return nonparam_ln(x)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLP (gated SwiGLU-style or plain)
+# ----------------------------------------------------------------------------
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, cfg, d_in=None, d_ff=None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (2.0 / d_in) ** 0.5
+    p = {"w_up": jax.random.normal(k2, (d_in, d_ff), cfg.dtype) * s_in,
+         "w_down": jax.random.normal(k3, (d_ff, d_in), cfg.dtype)
+         * (2.0 / d_ff) ** 0.5}
+    s = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.gated_mlp:
+        p["w_gate"] = jax.random.normal(k1, (d_in, d_ff), cfg.dtype) * s_in
+        s["w_gate"] = ("embed", "mlp")
+    return p, s
+
+
+def apply_mlp(cfg, params, x):
+    # "mlp_seq" (not "seq") on the hidden: under sequence-parallel rules the
+    # MLP stays tensor-parallel over d_ff while attention is seq-sharded
+    # (Megatron-SP layout; the AG/RS transitions appear at the projections).
+    up = shard(x @ params["w_up"], "batch", "mlp_seq", "mlp")
+    if cfg.gated_mlp:
+        gate = shard(x @ params["w_gate"], "batch", "mlp_seq", "mlp")
+        h = _act(cfg.act)(gate) * up
+    else:
+        h = _act(cfg.act)(up)
+    return shard(h @ params["w_down"], "batch", "seq", "act_embed")
+
+
+# ----------------------------------------------------------------------------
+# Embedding + LM head (vocab sharded; logits never fully materialized for
+# training — see lm.chunked_xent)
+# ----------------------------------------------------------------------------
+
+def init_embed(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": jax.random.normal(
+        k1, (cfg.vocab_size, cfg.d_model), cfg.dtype) * 0.02}
+    s = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            k2, (cfg.d_model, cfg.vocab_size), cfg.dtype) * 0.02
+        s["lm_head"] = ("embed", "vocab")
+    return p, s
+
+
+def embed_tokens(cfg, params, tokens):
+    out = jnp.take(params["embedding"], tokens, axis=0)
+    return shard(out, "batch", "seq", "act_embed")
+
+
+def lm_logits(cfg, params, x):
+    head = (params["embedding"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return shard(x @ head, "batch", "seq", "vocab")

@@ -1,0 +1,197 @@
+"""Decoder-only LM assembly: embed -> scan(pattern blocks) -> norm -> head.
+
+Covers the dense / MoE / SSM / hybrid / VLM assigned architectures (the VLM
+backbone consumes precomputed patch embeddings via ``prefix_embeds``).
+Training uses a vocab-sharded, sequence-chunked cross-entropy that never
+materializes the (tokens x vocab) logits tensor.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.parallel import compile_mode
+from repro.parallel.sharding import shard
+
+
+def _add_layers_axis(spec_tree):
+    return jax.tree.map(
+        lambda axes: ("layers", *axes), spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def pattern_specs(cfg):
+    """Logical-axis specs of one pattern instance, without allocating params
+    (init runs under eval_shape; the spec dict is captured as a side
+    effect of tracing)."""
+    holder = {}
+
+    def f(k):
+        p, s = B.init_pattern(k, cfg)
+        holder["s"] = s
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return holder["s"]
+
+
+def init_lm(cfg, key):
+    """Returns (params, specs) with pattern-stacked block params."""
+    n_scan = cfg.num_layers // cfg.pattern_period
+    assert cfg.num_layers % cfg.pattern_period == 0
+    k_embed, k_blocks, k_norm = jax.random.split(key, 3)
+
+    embed_p, embed_s = L.init_embed(k_embed, cfg)
+    block_keys = jax.random.split(k_blocks, n_scan)
+    blocks_p = jax.vmap(lambda k: B.init_pattern(k, cfg)[0])(block_keys)
+    blocks_s = _add_layers_axis(pattern_specs(cfg))
+    norm_p, norm_s = L.init_norm(cfg)
+
+    params = {"embed": embed_p, "blocks": blocks_p, "final_norm": norm_p}
+    specs = {"embed": embed_s, "blocks": blocks_s, "final_norm": norm_s}
+    return params, specs
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Stacked decode cache: leading axis = scan step (pattern instance)."""
+    n_scan = cfg.num_layers // cfg.pattern_period
+    one = {f"sub{r}": B.init_block_cache(cfg, r, batch, max_len)
+           for r in range(cfg.pattern_period)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_scan, *x.shape)).copy(), one)
+
+
+def cache_spec_tree(cfg):
+    one = {f"sub{r}": B.cache_specs(cfg, r)
+           for r in range(cfg.pattern_period)}
+    return _add_layers_axis(one)
+
+
+def backbone(cfg, params, x, *, positions, cache=None, cache_len=None,
+             use_kernel=False, causal=True):
+    """Scan the block stack over a (B, S, D) stream.
+
+    Returns (hidden (B, S, D), new_cache, aux_loss)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        blk_params, blk_cache = xs
+        h, new_blk_cache, aux_i = B.apply_pattern(
+            cfg, blk_params, h, positions=positions, cache=blk_cache,
+            cache_len=cache_len, use_kernel=use_kernel, causal=causal)
+        return (h, aux + aux_i), new_blk_cache
+
+    body = B.remat_wrap(cfg, body)
+    (h, aux), new_cache = compile_mode.scan(body, (x, jnp.float32(0.0)),
+                                            (params["blocks"], cache))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return h, new_cache, aux
+
+
+def forward(cfg, params, tokens, *, prefix_embeds=None, cache=None,
+            cache_len=None, positions=None, use_kernel=False):
+    """tokens: (B, S) int32; prefix_embeds: (B, P, D) modality stub input.
+
+    Returns (hidden (B, S(+P), D), new_cache, aux)."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    Bsz, S, _ = x.shape
+    if positions is None:
+        if cache_len is not None:
+            start = jnp.asarray(cache_len) - S
+            positions = start + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (Bsz, S))
+    return backbone(cfg, params, x, positions=positions, cache=cache,
+                    cache_len=cache_len, use_kernel=use_kernel)
+
+
+def chunked_xent(cfg, embed_params, hidden, labels, mask=None,
+                 n_chunks: int = 8):
+    """Sequence-chunked, vocab-sharded cross entropy.
+
+    hidden: (B, S, D); labels: (B, S) int32.  Chunks along the SEQUENCE dim
+    so the batch stays sharded over ('pod','data') and the vocab over
+    'model' throughout; never materializes more than (B, S/n, V) logits
+    (per chip: B/dp * S/n * V/tp).  The per-chunk logsumexp reduces across
+    vocab shards (XLA all-reduce).
+    """
+    Bsz, S, D = hidden.shape
+    n = n_chunks
+    while S % n:
+        n -= 1
+    cs = S // n
+    m = (jnp.ones((Bsz, S), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    head = (embed_params["embedding"].T if cfg.tie_embeddings
+            else embed_params["lm_head"])
+
+    def body(carry, xs):
+        nll_sum, cnt = carry
+        hc, yc, mc = xs  # (B, cs, D), (B, cs), (B, cs)
+        logits = (hc @ head).astype(jnp.float32)  # (B, cs, V)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label pick via one-hot contraction: take_along_axis would gather
+        # the full fp32 logits across vocab shards; this stays shard-local
+        # (each shard contributes its labels' slice, summed by the psum the
+        # partitioner inserts for the V contraction).
+        oh = jax.nn.one_hot(yc, logits.shape[-1], dtype=logits.dtype)
+        picked = jnp.einsum("bsv,bsv->bs", logits, oh)
+        nll = (lse - picked) * mc
+        return (nll_sum + nll.sum(), cnt + mc.sum()), None
+
+    def split(x):  # (B, S, ...) -> (n, B, cs, ...)
+        parts = x.reshape(Bsz, n, cs, *x.shape[2:])
+        return jnp.moveaxis(parts, 1, 0)
+
+    (nll_sum, cnt), _ = compile_mode.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)),
+        (split(hidden), split(labels), split(m)))
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg, params, batch, use_kernel=False, aux_weight: float = 0.01):
+    """batch: {"tokens": (B, S+1) int32, optional "prefix_embeds"}.
+
+    Next-token loss over tokens[:, :-1] -> tokens[:, 1:].
+    """
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    prefix = batch.get("prefix_embeds")
+    hidden, _, aux = forward(cfg, params, inputs, prefix_embeds=prefix,
+                             use_kernel=use_kernel)
+    if prefix is not None:  # loss only over text positions
+        hidden = hidden[:, prefix.shape[1]:]
+    loss = chunked_xent(cfg, params["embed"], hidden, labels)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+def prefill(cfg, params, tokens, cache, *, prefix_embeds=None,
+            use_kernel=False):
+    """Process a prompt, filling the cache.  Returns (last_hidden, cache)."""
+    S = tokens.shape[1] + (prefix_embeds.shape[1] if prefix_embeds is not None
+                           else 0)
+    hidden, cache, _ = forward(cfg, params, tokens,
+                               prefix_embeds=prefix_embeds, cache=cache,
+                               cache_len=S, use_kernel=use_kernel)
+    return hidden[:, -1:], cache
+
+
+def decode_step(cfg, params, token, cache, cache_len, use_kernel=False):
+    """One decode step: token (B, 1) with cache valid up to cache_len-1
+    BEFORE this token; the new token is written at cache_len-1 after append.
+
+    Convention: pass cache_len = previous_len + 1 (the length including the
+    new token).  Returns (logits (B, 1, V), new_cache)."""
+    hidden, cache, _ = forward(cfg, params, token, cache=cache,
+                               cache_len=cache_len, use_kernel=use_kernel)
+    logits = L.lm_logits(cfg, params["embed"], hidden)
+    return logits, cache

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch/combine.
+
+Switch/GShard-style dispatch einsums keep the compiled FLOPs proportional to
+*active* parameters (tokens * top_k * capacity_factor), which is what the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio checks.  The expert dimension carries
+the logical axis "experts" (-> mesh 'model' by default): expert-parallel
+execution with XLA-inserted all-to-alls at dispatch/combine.
+
+Supports the three assigned MoE configurations:
+  jamba  16e top-2 (every 2nd layer)   olmoe 64e top-8   arctic 128e top-2
+  with a parallel dense-residual MLP (Arctic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act
+from repro.parallel.sharding import shard
+
+
+def init_moe(key, cfg):
+    D = cfg.d_model
+    E = cfg.num_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = (2.0 / D) ** 0.5
+    p = {
+        "router": jax.random.normal(k1, (D, E), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (E, D, dff), cfg.dtype) * s_in,
+        "w_down": jax.random.normal(k3, (E, dff, D), cfg.dtype)
+        * (2.0 / dff) ** 0.5,
+    }
+    specs = {
+        "router": ("embed", None),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = jax.random.normal(k4, (E, D, dff), cfg.dtype) * s_in
+        specs["w_gate"] = ("experts", "embed", "expert_mlp")
+    return p, specs
+
+
+def moe_ffn(cfg, params, x):
+    """x: (B, S, D) -> (B, S, D); load-balance aux loss returned alongside.
+
+    GShard-style GROUPED dispatch: each batch element is a routing group
+    (groups align with the data-parallel sharding of B), with per-group
+    capacity C = ceil(S * top_k * capacity_factor / E).  The dispatch and
+    combine tensors are (B, S, E, C) — bounded per chip regardless of the
+    global token count.  Overflow tokens fall through to the residual
+    connection (standard Switch behaviour).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)  # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(1, -(-S * K * cfg.capacity_factor // E)))  # ceil
+    C = min(C, S)
+
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (B, S, K, E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # queue position within expert
+    pos_of = jnp.sum(pos * flat, axis=-1)  # (B, S*K)
+    keep = (pos_of < C).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos_of, C, dtype=jnp.float32)  # (B, S*K, C)
+    disp_flat = flat[..., :, None] * pos_oh[..., None, :] \
+        * keep[..., None, None]  # (B, S*K, E, C)
+    disp = disp_flat.reshape(B, S, K, E, C)
+    dispatch = disp.sum(axis=2)  # (B, S, E, C)
+    combine = (disp * top_w[..., None, None]).sum(axis=2)
+    dispatch = shard(dispatch.astype(cfg.dtype), "batch", None, "experts",
+                     None)
+    combine = shard(combine.astype(cfg.dtype), "batch", None, "experts",
+                    None)
+
+    # dispatch to experts — the EP all-to-all boundary.  dispatch is one-hot
+    # per (e, c): the contraction selects exactly one token, so bf16 is
+    # exact and the backward collectives stay half-width.
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    xe = shard(xe, "batch", "experts", None, "act_embed")
+    up = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+        h = _act(cfg.act)(gate) * up
+    else:
+        h = _act(cfg.act)(up)
+    h = shard(h, "batch", "experts", None, "expert_mlp")
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    ye = shard(ye, "batch", "experts", None, "act_embed")
+    out = jnp.einsum("bsec,becd->bsd", combine, ye)
+
+    # Switch load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    frac = onehot[..., 0, :].reshape(-1, E).mean(axis=0)  # top-1 fraction
+    mean_p = probs.reshape(-1, E).mean(axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+
+    return shard(out, "batch", "seq", "act_embed"), aux
+
+
+def moe_ffn_dropless(cfg, params, x):
+    """Dropless MoE via sort + ``jax.lax.ragged_dot`` (MegaBlocks-style).
+
+    No capacity, no token dropping — deterministic per token regardless of
+    batch composition, which makes prefill/decode and full-forward outputs
+    IDENTICAL (required by the serving engine's cache-consistency tests).
+    FLOPs = tokens * top_k * expert_mlp exactly.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)  # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = top_i.reshape(T * K)
+    order = jnp.argsort(flat_expert)  # stable
+    token_of = order // K
+    xs = xf[token_of]  # (T*K, D) sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=E).astype(jnp.int32)
+
+    up = jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    if cfg.gated_mlp:
+        gate = jax.lax.ragged_dot(xs, params["w_gate"], group_sizes)
+        h = _act(cfg.act)(gate) * up
+    else:
+        h = _act(cfg.act)(up)
+    ys = jax.lax.ragged_dot(h, params["w_down"], group_sizes)  # (T*K, D)
+
+    w_sorted = top_w.reshape(T * K)[order]
+    out = jnp.zeros((T, D), ys.dtype).at[token_of].add(
+        ys * w_sorted[:, None].astype(ys.dtype))
+
+    frac = jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+    return (shard(out.reshape(B, S, D).astype(x.dtype),
+                  "batch", "seq", "act_embed"), aux)

@@ -1,0 +1,259 @@
+"""Mamba2 / SSD (state-space duality) sequence mixer [arXiv:2405.21060].
+
+TPU adaptation: the chunked SSD algorithm splits the sequence into chunks of
+Q tokens; the *within-chunk* part is a batch of small matmuls (MXU-friendly,
+also provided as the Pallas ``ssd_chunk`` kernel) and the *cross-chunk* part
+is a first-order recurrence over chunk states carried by ``lax.scan``.
+
+``ssd_ref`` (naive per-token recurrence) is the oracle for both this module
+and the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import compile_mode
+from repro.parallel.sharding import shard
+
+
+def init_ssm(key, cfg):
+    D = cfg.d_model
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    conv_dim = di + 2 * g * ds
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = (2.0 / D) ** 0.5
+    p = {
+        "w_in": jax.random.normal(
+            k1, (D, 2 * di + 2 * g * ds + nh), cfg.dtype) * s,
+        "w_out": jax.random.normal(k2, (di, D), cfg.dtype)
+        * (2.0 / di) ** 0.5,
+        "conv_w": jax.random.normal(
+            k3, (cfg.ssm_conv_kernel, conv_dim), cfg.dtype) * 0.2,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+    }
+    specs = {
+        "w_in": ("embed", "mlp"),
+        "w_out": ("mlp", "embed"),
+        "conv_w": ("conv", "mlp"),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D_skip": (None,),
+        "norm_scale": ("mlp",),
+    }
+    return p, specs
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    x: (..., Q) -> (..., Q, Q), lower-triangular support.
+    """
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128, h0=None, use_kernel=False):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   input heads        dt: (b, s, h) positive step
+    A:  (h,) negative  B, C: (b, s, g, n) with h % g == 0
+    h0: optional (b, h, p, n) initial state.
+
+    Numerics: decay statistics (dt*A cumsums, exps) in float32; the BULK
+    tensors of the quadratic form (x, B, C, scores, L) stay bf16 with fp32
+    MXU accumulation — materializing them in fp32 doubled the HBM roofline
+    term of the prefill cells for no accuracy benefit (EXPERIMENTS §Perf).
+    Returns (y (b, s, h, p) fp32, h_final (b, h, p, n) fp32).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, Q = s // chunk, chunk
+    rep = h // g
+    cdt = x.dtype if x.dtype in (jnp.bfloat16, jnp.float16) else jnp.float32
+
+    x = x.reshape(b, nc, Q, h, p)
+    dt = dt.astype(jnp.float32).reshape(b, nc, Q, h)
+    # B/C stay at GROUP granularity: jnp.repeat to per-head (a rep=h/g = 32x
+    # tensor blow-up for ngroups=1 models) dominated the HBM roofline term
+    # through its fwd+bwd+remat copies (EXPERIMENTS §Perf).
+    Bc = B.reshape(b, nc, Q, g, n).astype(cdt)
+    Cc = C.reshape(b, nc, Q, g, n).astype(cdt)
+    # The (d_inner)->(h, p) reshape defeats sharding propagation; constrain
+    # the head dim explicitly.
+    x = shard(x, "batch", "seq_chunks", None, "ssm_heads", None)
+    dt = shard(dt, "batch", "seq_chunks", None, "ssm_heads")
+
+    dA = dt * A  # (b, nc, Q, h), negative, f32
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    xbar = (x.astype(jnp.float32) * dt[..., None]).astype(cdt)
+    xg = xbar.reshape(b, nc, Q, g, rep, p)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        Bh = jnp.repeat(Bc, rep, axis=3).astype(jnp.float32)
+        Ch = jnp.repeat(Cc, rep, axis=3).astype(jnp.float32)
+        y_diag, states = kops.ssd_chunk(x.astype(jnp.float32), dt, A,
+                                        Bh, Ch)
+    else:
+        # ---- intra-chunk (dual / quadratic form): Y[i] += C_i . B_j decay x_j
+        Lg = jnp.exp(_segsum(jnp.moveaxis(
+            dA.reshape(b, nc, Q, g, rep), 2, 4))).astype(cdt)
+        Lg = shard(Lg, "batch", "seq_chunks", "ssm_heads", None, None, None)
+        scores = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc,
+                            preferred_element_type=jnp.float32).astype(cdt)
+        y_diag = jnp.einsum("bcgij,bcgrij,bcjgrp->bcigrp", scores, Lg, xg,
+                            preferred_element_type=jnp.float32)
+        y_diag = y_diag.reshape(b, nc, Q, h, p)
+        y_diag = shard(y_diag, "batch", "seq_chunks", None, "ssm_heads",
+                       None)
+        # ---- per-chunk terminal states: sum_j exp(dA_cs[-1]-dA_cs[j]) B_j xbar_j
+        decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs).astype(cdt)
+        dg = decay.reshape(b, nc, Q, g, rep)
+        states = jnp.einsum("bcjgn,bcjgr,bcjgrp->bcgrpn", Bc, dg, xg,
+                            preferred_element_type=jnp.float32)
+        states = states.reshape(b, nc, h, p, n)
+        states = shard(states, "batch", "seq_chunks", "ssm_heads", None,
+                       None)
+
+    # ---- inter-chunk recurrence over chunk index: h_c = h_{c-1}*dec_c + st_c
+    # Linear first-order recurrence -> associative scan (log-depth, no while
+    # op; both TPU-fast and exactly counted by HLO cost analysis).
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, nc, h)
+
+    def combine(a, bb):
+        d1, s1 = a
+        d2, s2 = bb
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_in = chunk_decay  # (b, nc, h)
+    acc_dec, acc_st = jax.lax.associative_scan(
+        combine, (dec_in, states), axis=1)
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    # state AFTER chunk c (inclusive), with h0 folded in:
+    h_after = init[:, None] * acc_dec[..., None, None] + acc_st
+    h_final = h_after[:, -1]
+    # state ENTERING chunk c: h_after shifted right by one, h0 first.
+    h_prevs = jnp.concatenate([init[:, None], h_after[:, :-1]], axis=1)
+
+    # ---- contribution of the carried-in state to each position
+    state_decay = jnp.exp(dA_cs).astype(cdt)  # (b, nc, Q, h)
+    sg = state_decay.reshape(b, nc, Q, g, rep)
+    hg = h_prevs.reshape(b, nc, g, rep, p, n).astype(cdt)
+    y_off = jnp.einsum("bcign,bcgrpn,bcigr->bcigrp", Cc, hg, sg,
+                       preferred_element_type=jnp.float32)
+    y_off = y_off.reshape(b, nc, Q, h, p)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_ref(x, dt, A, B, C, h0=None):
+    """Naive per-token recurrence oracle:
+    h_t = h_{t-1} * exp(dt_t A) + dt_t * B_t x_t ; y_t = C_t . h_t."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    def body(hprev, xs):
+        xt, dtt, Bt, Ct = xs  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        dA = jnp.exp(dtt * A)  # (b,h)
+        hnew = (hprev * dA[..., None, None]
+                + (dtt[..., None] * xt)[..., None] * Bt[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, Ct)
+        return hnew, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    hf, ys = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hf
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv1d. x: (b, s, c); w: (k, c); cache: (b, k-1, c).
+
+    Returns (y (b, s, c), new_cache (b, k-1, c))."""
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_cache = xp[:, -(k - 1):] if k > 1 else cache
+    return y, new_cache
+
+
+def mamba_block(cfg, params, x, *, cache=None, use_kernel=False):
+    """Full Mamba2 mixer sublayer.
+
+    cache: None (train/prefill from scratch) or dict with 'conv' (b, k-1, c)
+    and 'ssm' (b, h, p, n) for single-step decode.
+    Returns (out (b, s, d_model), new_cache).
+    """
+    b, s, _ = x.shape
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    hd = cfg.ssm_headdim
+
+    proj = x @ params["w_in"]  # (b, s, 2di + 2g ds + nh)
+    proj = shard(proj, "batch", "seq", "mlp")
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * g * ds], axis=-1)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], conv_cache)
+    xBC = jax.nn.silu(xBC)
+    x_ssm, Bm, Cm = jnp.split(xBC, [di, di + g * ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])  # (b, s, nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    xh = x_ssm.reshape(b, s, nh, hd)
+    Bh = Bm.reshape(b, s, g, ds)
+    Ch = Cm.reshape(b, s, g, ds)
+
+    if cache is not None and s == 1:
+        # decode: exact single-step recurrence
+        h0 = cache["ssm"]
+        y, hf = ssd_ref(xh, dt, A, Bh, Ch, h0=h0)
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        chunk = min(128, s) if s % 128 != 0 else 128
+        while s % chunk != 0:
+            chunk //= 2
+        y, hf = ssd_chunked(xh, dt, A, Bh, Ch, chunk=chunk, h0=h0,
+                            use_kernel=use_kernel)
+
+    y = y + xh.astype(jnp.float32) * params["D_skip"][:, None]
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_scale"])
+    out = y.astype(x.dtype) @ params["w_out"]
+    out = shard(out, "batch", "seq", "act_embed")
+    new_cache = {"conv": new_conv, "ssm": hf}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, conv_dim),
+                          cfg.dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+    }

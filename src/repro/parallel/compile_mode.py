@@ -1,0 +1,63 @@
+"""Compile-mode knobs threaded through model code via a context.
+
+``unrolled_scans()``: XLA's HloCostAnalysis counts a while-loop body ONCE
+regardless of trip count, which would corrupt the dry-run roofline numbers.
+Inside this context every model-side ``lax.scan`` is emitted fully unrolled
+(no while op), making cost_analysis()/memory_analysis() exact.  Used by the
+dry-run only — real training/serving keeps rolled scans for compile speed
+and code-size.
+
+``flash_block``: KV block size of the chunked-flash attention (perf knob,
+swept by the hillclimb harness).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Mode(threading.local):
+    def __init__(self):
+        self.unroll = False
+        self.flash_block = 512
+
+
+_MODE = _Mode()
+
+
+@contextlib.contextmanager
+def compile_options(unroll_scans: bool = None, flash_block: int = None):
+    old = (_MODE.unroll, _MODE.flash_block)
+    if unroll_scans is not None:
+        _MODE.unroll = unroll_scans
+    if flash_block is not None:
+        _MODE.flash_block = flash_block
+    try:
+        yield
+    finally:
+        _MODE.unroll, _MODE.flash_block = old
+
+
+def unrolled_scans() -> contextlib.AbstractContextManager:
+    return compile_options(unroll_scans=True)
+
+
+def scan_unroll_flag() -> bool:
+    return _MODE.unroll
+
+
+def flash_block_size() -> int:
+    return _MODE.flash_block
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan honoring the unroll flag."""
+    import jax
+
+    if _MODE.unroll:
+        n = length
+        if n is None:
+            n = jax.tree.leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, init, xs, length=length, unroll=int(n))
+    return jax.lax.scan(body, init, xs, length=length)

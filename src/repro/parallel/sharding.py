@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/SP/EP.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "mlp", "experts", "kv_seq", ...).  A rules table maps logical axes
+to physical mesh axes; ``shard(x, ...names)`` applies a
+``with_sharding_constraint`` when a mesh is active, and is the identity on a
+bare CPU — so the same model code runs in unit tests and in the 512-chip
+dry-run.
+
+Parallelism dimensions expressed through the default rules:
+  DP    batch           -> ('pod', 'data')
+  FSDP  embed (d_model) -> 'data'     (weights + optimizer state sharded)
+  TP    heads/mlp/vocab -> 'model'
+  SP    kv_seq          -> 'model'    (decode-time KV cache / long context)
+  EP    experts         -> 'model'
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisRules = dict  # logical axis name -> mesh axis | tuple | None
+
+# Default production rules (single- and multi-pod meshes share these; the
+# 'pod' axis only exists in the multi-pod mesh and is dropped otherwise).
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "mlp_seq": None,
+    "act_embed": None,
+    "embed": "data",        # FSDP: weight d_model dim sharded over data
+    "heads": "model",       # TP
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",         # TP: d_ff
+    "vocab": "model",       # TP: embedding/logits vocab dim
+    "experts": "model",     # EP
+    "expert_mlp": None,
+    "kv_seq": "model",      # SP for decode KV caches
+    "ssm_heads": "model",   # TP for Mamba/SSD head dim
+    "seq_chunks": None,     # SSD chunk index (maps to 'model' under SP)
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "stage": "pod",         # pipeline stage (when PP enabled)
+}
+
+
+# Optimized presets discovered by the §Perf hillclimb (EXPERIMENTS.md):
+# sequence-parallel attention/SSM — the win on kv_heads < TP-degree archs
+# and on Mamba/hybrid stacks is 2-10x on the dominant roofline term.
+SP_RULES: AxisRules = {
+    "seq": "model", "seq_chunks": "model",
+    "heads": None, "kv_heads": None, "ssm_heads": None,
+}
+
+# serving-time rules: weights TP-resident + DP-replicated (no FSDP weight
+# all-gather per decode step).
+DECODE_RULES: AxisRules = {"embed": None}
+
+PRESETS = {"default": {}, "sp": SP_RULES, "decode": DECODE_RULES}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules: AxisRules = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules] = None, mesh=None):
+    """Activate sharding rules (+ optionally a mesh) for model code."""
+    old_rules, old_mesh = _CTX.rules, _CTX.mesh
+    if rules is not None:
+        _CTX.rules = {**DEFAULT_RULES, **rules}
+    if mesh is not None:
+        _CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = old_rules, old_mesh
+
+
+def current_rules() -> AxisRules:
+    return _CTX.rules
+
+
+def current_mesh():
+    return _CTX.mesh
+
+
+def _resolve(logical, rules, mesh_axes):
+    """Logical name -> physical mesh axis entry, dropping absent axes."""
+    phys = rules.get(logical, None) if logical is not None else None
+    if phys is None:
+        return None
+    if isinstance(phys, (tuple, list)):
+        kept = tuple(a for a in phys if a in mesh_axes)
+        return kept if kept else None
+    return phys if phys in mesh_axes else None
+
+
+def logical_to_spec(logical_axes, rules: Optional[AxisRules] = None,
+                    mesh=None) -> P:
+    """Tuple of logical axis names (or None) -> PartitionSpec.
+
+    A mesh axis may appear at most once in a spec; when two logical axes of
+    one tensor map to the same mesh axis (e.g. kv_seq and kv_heads both ->
+    'model' on a KV cache), the FIRST occurrence wins and later ones are
+    replicated."""
+    rules = rules or current_rules()
+    mesh = mesh or current_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    used = set()
+    out = []
+    for a in logical_axes:
+        phys = _resolve(a, rules, mesh_axes)
+        if phys is None:
+            out.append(None)
+            continue
+        cand = list(phys) if isinstance(phys, (tuple, list)) else [phys]
+        kept = [p for p in cand if p not in used]
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept
+                                                      else None))
+    return P(*out)
+
+
+def shard(x, *logical_axes):
+    """Annotate an activation with logical axes; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree(logical_tree, rules: Optional[AxisRules] = None, mesh=None):
+    """Map a pytree of logical-axes tuples to NamedShardings (for pjit)."""
+    mesh = mesh or current_mesh()
+
+    def one(axes):
+        return NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+
+    return jax.tree.map(one, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def shape_aware_spec_tree(shapes_tree, logical_tree,
+                          rules: Optional[AxisRules] = None, mesh=None):
+    """NamedShardings for jit argument shardings: like spec_tree, but any
+    mesh axis whose size does not divide the corresponding tensor dim is
+    DROPPED (replicated) for that tensor — e.g. kv_heads=8 cannot shard over
+    model=16 (GQA decode replicates KV heads; the roofline then reflects
+    that honestly), and a 50280 vocab does not split 16 ways.
+
+    For tuple mappings (('pod','data') on batch) a divisible prefix is kept.
+    """
+    rules = rules or current_rules()
+    mesh = mesh or current_mesh()
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def resolve_dim(dim, logical, used):
+        phys = _resolve(logical, rules, mesh_axes)
+        if phys is None:
+            return None
+        cand = list(phys) if isinstance(phys, (tuple, list)) else [phys]
+        kept = []
+        prod = 1
+        for a in cand:
+            if a not in used and dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                used.add(a)
+                prod *= sizes[a]
+            else:
+                break
+        if not kept:
+            return None
+        return tuple(kept) if len(kept) > 1 else kept[0]
+
+    def one(shape_struct, axes):
+        shp = tuple(shape_struct.shape)
+        axes = tuple(axes or ())
+        axes = axes + (None,) * (len(shp) - len(axes))
+        used: set = set()
+        spec = P(*(resolve_dim(d, a, used) for d, a in zip(shp, axes)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, shapes_tree, logical_tree)

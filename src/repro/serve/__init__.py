@@ -1,0 +1,2 @@
+# Serving substrate: engine (prefill/decode/classify), batcher, OnAlgo-gated
+# admission control, end-to-end edge-serving simulator.

@@ -1,0 +1,82 @@
+"""OnAlgo as the serving tier's admission controller (the paper's technique
+as a first-class framework feature).
+
+The cloudlet-capacity dual mu is a *congestion price* the serving tier
+broadcasts to the fleet each slot; per-device power duals lambda_n stay
+device-local.  Request costs h are expressed in model FLOPs of the serving
+architecture (per-arch values come from the roofline analysis), so the same
+controller drives any of the 10 cloudlet models; H is the pod's sustained
+FLOP/s budget per slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import onalgo
+from repro.core.onalgo import OnAlgoParams, StepRule
+from repro.core.state_space import StateSpace
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Vectorized OnAlgo over a fleet of N devices, driven slot by slot with
+    RAW (unquantized) observed values; the quantized state space is used for
+    the running distribution rho_t exactly as in the paper."""
+
+    space: StateSpace
+    params: OnAlgoParams
+    rule: StepRule
+    num_devices: int
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.state = onalgo.init_state(self.num_devices, self.space.M)
+        self.tables = self.space.tables()
+        self._o_tab, self._h_tab, self._w_tab = (np.asarray(t)
+                                                 for t in self.tables)
+        self._step = jax.jit(partial(
+            onalgo.step, tables=self.tables, params=self.params,
+            rule=self.rule, use_kernel=self.use_kernel))
+
+    def quantize(self, o, h, w, task_mask):
+        """Map raw (o, h, w) to the nearest state index (0 = no task)."""
+        io = np.abs(o[:, None] - self._levels("o")).argmin(-1)
+        ih = np.abs(h[:, None] - self._levels("h")).argmin(-1)
+        iw = np.abs(w[:, None] - self._levels("w")).argmin(-1)
+        j = np.asarray(self.space.encode(io, ih, iw))
+        return np.where(task_mask, j, 0).astype(np.int32)
+
+    def _levels(self, which):
+        return np.asarray(getattr(self.space, f"{which}_levels"))
+
+    def admit(self, o, h, w, task_mask):
+        """One slot. All args (N,) float/bool. Returns offload mask (N,)."""
+        j = self.quantize(o, h, w, task_mask)
+        self.state, offload = self._step(
+            self.state, jnp.asarray(j), jnp.asarray(o, jnp.float32),
+            jnp.asarray(h, jnp.float32), jnp.asarray(w, jnp.float32),
+            jnp.asarray(task_mask))
+        return np.asarray(offload)
+
+    @property
+    def mu(self) -> float:
+        return float(self.state.mu)
+
+    @property
+    def lam(self) -> np.ndarray:
+        return np.asarray(self.state.lam)
+
+
+def flops_per_request(cfg, seq_len: int, mode: str = "prefill") -> float:
+    """Serving cost h for one request against architecture ``cfg``:
+    2 * active_params * tokens (decode: per generated token)."""
+    n_active = cfg.active_param_count()
+    tokens = seq_len if mode == "prefill" else 1
+    return 2.0 * n_active * tokens

@@ -1,0 +1,108 @@
+"""Cloudlet serving engine: jit'd prefill/decode with a static-shape cache.
+
+Two request kinds, matching the paper's service and the LM dry-run shapes:
+  * classify: one forward pass -> class probabilities (the paper's image
+    task; handled by a separate small classifier or the LM head);
+  * generate: prefill + n decode steps with the KV/SSM cache.
+
+Waves of requests are formed by the Batcher (pad-to-capacity static shapes:
+one compiled program per (batch, len) bucket).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_calls: int = 0
+    decode_calls: int = 0
+    tokens_prefilled: int = 0
+    tokens_decoded: int = 0
+
+
+class ServingEngine:
+    """Batched LM serving (prefill + decode) around ModelAPI."""
+
+    def __init__(self, cfg, params, max_len: int = 256,
+                 use_kernel: bool = False):
+        self.cfg = cfg
+        self.api = ModelAPI(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.stats = EngineStats()
+
+        self._prefill = jax.jit(
+            lambda p, batch: self.api.prefill_step(p, batch, max_len))
+        self._decode = jax.jit(
+            lambda p, tok, st: self.api.decode_step(p, tok, st))
+
+    def generate(self, tokens: np.ndarray, steps: int,
+                 greedy: bool = True, key=None):
+        """tokens: (B, S_prompt) int32. Returns (B, steps) generated ids."""
+        logits, state = self._prefill(self.params, {"tokens": tokens})
+        self.stats.prefill_calls += 1
+        self.stats.tokens_prefilled += int(np.prod(tokens.shape))
+        out = []
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for i in range(steps):
+            out.append(tok)
+            logits, state = self._decode(self.params, tok, state)
+            self.stats.decode_calls += 1
+            self.stats.tokens_decoded += tok.shape[0]
+            if greedy:
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1]).astype(jnp.int32)[:, None]
+        return jnp.concatenate(out, axis=1)
+
+
+class Batcher:
+    """Pads request waves to fixed bucket shapes (static jit signatures).
+
+    Production framing: requests accumulate in a FIFO; each slot the engine
+    drains up to ``max_batch`` of them.  Bucketed padding keeps the number
+    of compiled programs tiny while avoiding per-request recompiles.
+    """
+
+    def __init__(self, max_batch: int, buckets=(32, 64, 128, 256)):
+        self.max_batch = max_batch
+        self.buckets = sorted(buckets)
+        self.queue: list = []
+
+    def submit(self, request):
+        self.queue.append(request)
+
+    def __len__(self):
+        return len(self.queue)
+
+    def next_wave(self) -> Optional[list]:
+        if not self.queue:
+            return None
+        wave, self.queue = (self.queue[:self.max_batch],
+                            self.queue[self.max_batch:])
+        return wave
+
+    def bucket_len(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    @staticmethod
+    def pad_tokens(seqs, length: int, pad_id: int = 0):
+        out = np.full((len(seqs), length), pad_id, np.int32)
+        for i, s in enumerate(seqs):
+            out[i, :len(s)] = s[:length]
+        return out

@@ -1,0 +1,2 @@
+# Training substrate: optimizers, schedules, checkpointing, fault-tolerant
+# trainer loop, gradient compression.

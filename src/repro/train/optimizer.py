@@ -1,0 +1,210 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Optimizer state is a pytree congruent with params, so it inherits the
+params' sharding (FSDP/ZeRO-3: m/v sharded exactly like the weights).
+Adafactor (factored second moment, no first moment) is used for the >=35B
+configs so the train_4k cells fit the 16 GB/chip single-pod budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    name: str = "adamw"  # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min: int = 128  # factor 2nd moment only for dims >= this
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(spec, params, grads, state, lr):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+    b1, b2 = spec.b1, spec.b2
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * g32
+        v_ = b2 * v + (1 - b2) * g32 * g32
+        mh = m_ / (1 - b1**cf)
+        vh = v_ / (1 - b2**cf)
+        step = mh / (jnp.sqrt(vh) + spec.eps)
+        step = step + spec.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_, v_
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), simplified: factored v, no momentum
+# ---------------------------------------------------------------------------
+
+def _factored(p, min_dim):
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor_init(params, spec: Optional[OptimizerSpec] = None):
+    spec = spec or OptimizerSpec(name="adafactor")
+
+    def one(p):
+        if _factored(p, spec.factored_min):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(spec, params, grads, state, lr):
+    c = state["count"] + 1
+    rho = 1.0 - c.astype(jnp.float32) ** (-spec.decay_rate)
+    eps = 1e-30
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if "vr" in v:
+            vr = rho * v["vr"] + (1 - rho) * g2.mean(axis=-1)
+            vc = rho * v["vc"] + (1 - rho) * g2.mean(axis=-2)
+            denom = (vr[..., :, None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True)[..., :, None], eps)) \
+                * vc[..., None, :]
+            step = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            vv = rho * v["v"] + (1 - rho) * g2
+            step = g32 * jax.lax.rsqrt(jnp.maximum(vv, eps))
+            nv = {"v": vv}
+        # update clipping (RMS <= 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(step * step) + eps)
+        step = step / jnp.maximum(1.0, rms)
+        step = step + spec.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = treedef.unflatten([t[0] for t in new])
+    new_v = treedef.unflatten([t[1] for t in new])
+    return new_params, {"v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# SGD(+momentum) — for tests
+# ---------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(spec, params, grads, state, lr):
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, {"count": state["count"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# dispatch + schedules
+# ---------------------------------------------------------------------------
+
+_INITS = {"adamw": adamw_init, "adafactor": adafactor_init, "sgd": sgd_init}
+_UPDATES = {"adamw": adamw_update, "adafactor": adafactor_update,
+            "sgd": sgd_update}
+
+
+def init_opt_state(spec: OptimizerSpec, params):
+    if spec.name == "adafactor":
+        return adafactor_init(params, spec)
+    return _INITS[spec.name](params)
+
+
+def apply_update(spec: OptimizerSpec, params, grads, state, lr):
+    if spec.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, spec.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    new_params, new_state = _UPDATES[spec.name](spec, params, grads, state,
+                                                lr)
+    return new_params, new_state, gnorm
+
+
+def opt_state_specs(spec: OptimizerSpec, param_shapes, param_specs):
+    """Logical-axes pytree for the optimizer state (mirrors init_opt_state).
+
+    param_shapes: pytree of ShapeDtypeStruct; param_specs: pytree of logical
+    axes tuples.  Adam m/v inherit the param axes (ZeRO-style); Adafactor's
+    factored rows/cols drop the factored dimension's axis.
+    """
+    if spec.name == "sgd":
+        return {"count": ()}
+    if spec.name == "adamw":
+        return {"m": param_specs, "v": param_specs, "count": ()}
+
+    def one(shape_struct, axes):
+        axes = axes or (None,) * len(shape_struct.shape)
+        if _factored(shape_struct, spec.factored_min):
+            return {"vr": tuple(axes[:-1]),
+                    "vc": tuple(axes[:-2]) + (axes[-1],)}
+        return {"v": tuple(axes)}
+
+    # param_shapes is flattened first (ShapeDtypeStruct leaves); param_specs
+    # is flattened up to the same structure, yielding its tuple leaves.
+    v = jax.tree.map(one, param_shapes, param_specs)
+    return {"v": v, "count": ()}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr_at(step):
+        s = step.astype(jnp.float32) + 1.0  # step counter starts at 0
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+
+    return lr_at

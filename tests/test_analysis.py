@@ -1,0 +1,83 @@
+"""HLO collective parser + roofline table machinery."""
+
+import numpy as np
+
+from repro.analysis.hlo_stats import _shape_bytes, collective_stats
+
+
+SAMPLE_HLO = """
+HloModule test
+  %ag.1 = f32[16,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = bf16[256,128]{1,0} all-reduce(%y), to_apply=%add
+  %rs.1 = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w)
+  %cp = bf16[32]{0} collective-permute(%v)
+  %ag.start = f32[16,1024]{1,0} all-gather-start(%x2)
+  %ag.done = f32[16,1024]{1,0} all-gather-done(%ag.start)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+class TestCollectiveParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[16,1024]") == 16 * 1024 * 4
+        assert _shape_bytes("bf16[256,128]") == 256 * 128 * 2
+        assert _shape_bytes("(f32[4], bf16[8])") == 4 * 4 + 8 * 2
+
+    def test_counts_and_wire_model(self):
+        stats = collective_stats(SAMPLE_HLO)
+        assert stats["all-gather"]["count"] == 2  # ag.1 + ag-start
+        assert stats["all-reduce"]["count"] == 1
+        assert stats["reduce-scatter"]["count"] == 1
+        assert stats["all-to-all"]["count"] == 1
+        assert stats["collective-permute"]["count"] == 1
+        ag = 2 * 16 * 1024 * 4
+        ar = 256 * 128 * 2
+        expected = (1.0 * ag + 2.0 * ar + 1.0 * 64 * 4
+                    + 1.0 * 8 * 8 * 4 + 1.0 * 32 * 2)
+        assert stats["total_wire_bytes"] == int(expected)
+
+    def test_non_collectives_ignored(self):
+        stats = collective_stats("%dot = f32[128,128]{1,0} dot(%a, %b)")
+        assert stats["total_wire_bytes"] == 0
+
+
+class TestRooflineTable:
+    def _rec(self, c, m, x, mode="train"):
+        return {"arch": "a", "shape": "s", "status": "ok", "mode": mode,
+                "mf_ratio": 0.5,
+                "collectives": {"all-gather": {"count": 1, "bytes": 10},
+                                "total_wire_bytes": 10},
+                "roofline": {"compute_s": c, "memory_s": m,
+                             "collective_s": x,
+                             "dominant": max(
+                                 [("compute_s", c), ("memory_s", m),
+                                  ("collective_s", x)],
+                                 key=lambda t: t[1])[0]}}
+
+    def test_frac_and_advice(self):
+        from repro.analysis.roofline import advice, frac
+        r = self._rec(1.0, 2.0, 4.0)
+        assert frac(r) == 0.25
+        assert "all-gather" in advice(r)
+        r2 = self._rec(5.0, 2.0, 1.0)
+        assert frac(r2) == 1.0
+        assert "compute bound" in advice(r2)
+
+    def test_markdown_rows(self):
+        from repro.analysis.roofline import markdown_table
+        table = markdown_table([
+            self._rec(1.0, 2.0, 3.0),
+            {"arch": "b", "shape": "long", "status": "skipped",
+             "reason": "full attention"},
+        ])
+        assert "| a | s | ok |" in table
+        assert "skipped" in table
+
+    def test_summary_selects_extremes(self):
+        from repro.analysis.roofline import summary
+        cells = [self._rec(1.0, 1.0, 9.0), self._rec(5.0, 1.0, 1.0)]
+        cells[0]["arch"], cells[1]["arch"] = "worst", "best"
+        s = summary(cells)
+        assert s["worst_fraction"][0] == "worst"
+        assert s["most_collective"][0] == "worst"

@@ -1,0 +1,150 @@
+"""Per-kernel allclose vs pure-jnp oracles, swept over shapes and dtypes
+(interpret mode executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.onalgo_step import onalgo_duals_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+        (1, 128, 4, 4, 64),     # MHA
+        (2, 256, 8, 2, 64),     # GQA 4:1
+        (1, 512, 4, 1, 128),    # MQA, 128 head dim
+        (2, 128, 2, 2, 32),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, B, S, Hq, Hkv, D, causal, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+        k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+        v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+        out = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                     block_k=64)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_block_shape_independence(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 256, 4, 64))
+        k = jax.random.normal(ks[1], (1, 256, 2, 64))
+        v = jax.random.normal(ks[2], (1, 256, 2, 64))
+        outs = [np.asarray(flash_attention_pallas(
+            q, k, v, causal=True, block_q=bq, block_k=bk))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+        (2, 256, 8, 2, 64),
+        (1, 512, 4, 4, 128),
+        (4, 128, 2, 1, 32),
+    ])
+    @pytest.mark.parametrize("frac", [0.25, 0.8, 1.0])
+    def test_matches_oracle(self, B, S, Hq, Hkv, D, frac):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (B, 1, Hq, D))
+        kc = jax.random.normal(ks[1], (B, S, Hkv, D))
+        vc = jax.random.normal(ks[2], (B, S, Hkv, D))
+        n = max(1, int(S * frac))
+        out = decode_attention_pallas(q, kc, vc, n, block_k=64)
+        want = ref.decode_attention_ref(q, kc, vc, n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (2, 1, 4, 64), jnp.bfloat16)
+        kc = jax.random.normal(ks[1], (2, 128, 2, 64), jnp.bfloat16)
+        vc = jax.random.normal(ks[2], (2, 128, 2, 64), jnp.bfloat16)
+        out = decode_attention_pallas(q, kc, vc, 100)
+        want = ref.decode_attention_ref(q, kc, vc, 100)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestSSDChunk:
+    @pytest.mark.parametrize("b,nc,Q,h,p,n", [
+        (1, 2, 128, 2, 64, 32),
+        (2, 1, 64, 4, 32, 128),
+        (1, 4, 128, 8, 64, 16),
+    ])
+    def test_matches_oracle(self, b, nc, Q, h, p, n):
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        x = jax.random.normal(ks[0], (b, nc, Q, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, Q, h))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bh = jax.random.normal(ks[3], (b, nc, Q, h, n)) * 0.5
+        Ch = jax.random.normal(ks[4], (b, nc, Q, h, n)) * 0.5
+        y, st = ssd_chunk_pallas(x, dt, A, Bh, Ch)
+        y2, st2 = ref.ssd_chunk_ref(x, dt, A, Bh, Ch)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_end_to_end_mamba_block_kernel_path(self):
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("mamba2_370m").reduced()
+        params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                                  cfg.vocab_size)
+        l_ref, _ = lm.lm_loss(cfg, params, {"tokens": toks},
+                              use_kernel=False)
+        l_ker, _ = lm.lm_loss(cfg, params, {"tokens": toks}, use_kernel=True)
+        assert abs(float(l_ref) - float(l_ker)) < 1e-4
+
+
+class TestOnAlgoKernel:
+    @pytest.mark.parametrize("N,M", [(4, 7), (100, 37), (256, 37), (1000, 97)])
+    def test_matches_oracle(self, N, M):
+        ks = jax.random.split(jax.random.PRNGKey(5), 6)
+        lam = jax.random.uniform(ks[0], (N,))
+        mu = jnp.float32(0.3)
+        rho = jax.random.dirichlet(ks[1], jnp.ones(M), (N,))
+        o = jax.random.uniform(ks[2], (M,))
+        h = jax.random.uniform(ks[3], (M,))
+        w = jax.random.uniform(ks[4], (M,)) - 0.2
+        B = jax.random.uniform(ks[5], (N,)) + 0.05
+        g1, l1 = onalgo_duals_pallas(lam, mu, rho, o, h, w, B)
+        g2, l2 = ref.onalgo_duals_ref(lam, mu, rho, o, h, w, B)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+    def test_simulation_path_with_kernel(self):
+        """fleet.simulate(use_kernel=True) == jnp path, slot for slot."""
+        import numpy as np
+        from repro.core import (OnAlgoParams, StepRule, default_paper_space,
+                                simulate)
+        from repro.data.traces import TraceSpec, iid_trace
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=300, N=16, seed=7))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((16,), 0.08), H=jnp.float32(7e8))
+        rule = StepRule.inv_sqrt(0.5)
+        s1, f1 = simulate(trace, tables, params, rule, use_kernel=False)
+        s2, f2 = simulate(trace, tables, params, rule, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(s1["reward"]),
+                                   np.asarray(s2["reward"]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-4, atol=1e-6)

@@ -1,0 +1,179 @@
+"""Parallelism substrate: rule resolution, shape-aware shardings,
+compile-mode scan, pipeline math.  (CPU-light; no mesh needed for most.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import compile_mode
+from repro.parallel.sharding import (DEFAULT_RULES, PRESETS, SP_RULES,
+                                     axis_rules, current_rules,
+                                     logical_to_spec, shard)
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec-resolution tests (no devices needed)."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self._sizes = sizes
+
+    @property
+    def devices(self):
+        class A:
+            shape = tuple(self._sizes.values())
+        a = A()
+        a.shape = tuple(self._sizes.values())
+        return a
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+class TestLogicalToSpec:
+    def test_default_rules_resolve(self):
+        spec = logical_to_spec(("batch", "seq", "heads", "head_dim"),
+                               DEFAULT_RULES, MESH)
+        assert spec == P("data", None, "model", None)
+
+    def test_duplicate_mesh_axis_first_wins(self):
+        # kv_seq and kv_heads both map to 'model'
+        spec = logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                               DEFAULT_RULES, MESH)
+        assert spec == P("data", "model", None, None)
+
+    def test_absent_mesh_axes_dropped(self):
+        # 'pod' missing from a single-pod mesh: batch -> data only
+        spec = logical_to_spec(("batch",), DEFAULT_RULES, MESH)
+        assert spec == P("data")
+
+    def test_sp_preset_flips_attention_layout(self):
+        rules = {**DEFAULT_RULES, **SP_RULES}
+        spec = logical_to_spec(("batch", "seq", "heads", "head_dim"),
+                               rules, MESH)
+        assert spec == P("data", "model", None, None)
+
+    def test_presets_registered(self):
+        assert set(PRESETS) == {"default", "sp", "decode"}
+
+
+class TestShapeAwareSpecs:
+    def _resolve(self, shape, axes, rules=None):
+        from repro.parallel.sharding import shape_aware_spec_tree
+        import jax
+        real_mesh = jax.sharding.Mesh(
+            np.array(jax.devices() * 1).reshape(1, 1), ("data", "model"))
+        # use a synthetic 16x16 via FakeMesh is not possible for
+        # NamedSharding; emulate divisibility logic directly instead.
+        rules = {**DEFAULT_RULES, **(rules or {})}
+        sizes = {"data": 16, "model": 16}
+
+        from repro.parallel.sharding import _resolve as res
+        mesh_axes = set(sizes)
+        used = set()
+        out = []
+        for dim, a in zip(shape, tuple(axes) + (None,) * (len(shape)
+                                                          - len(axes))):
+            phys = res(a, rules, mesh_axes)
+            cand = ([phys] if isinstance(phys, str)
+                    else list(phys) if phys else [])
+            kept = []
+            prod = 1
+            for ax in cand:
+                if ax not in used and dim % (prod * sizes[ax]) == 0:
+                    kept.append(ax)
+                    used.add(ax)
+                    prod *= sizes[ax]
+                else:
+                    break
+            out.append(tuple(kept) if len(kept) > 1
+                       else (kept[0] if kept else None))
+        return tuple(out)
+
+    def test_non_divisible_dim_replicated(self):
+        # kv_heads = 8 cannot split over model=16
+        spec = self._resolve((1, 128, 32768, 8, 128),
+                             ("layers", "batch", "kv_seq", "kv_heads",
+                              "head_dim"))
+        assert spec == (None, "data", "model", None, None)
+
+    def test_odd_vocab_replicated(self):
+        spec = self._resolve((50280, 1024), ("vocab", "embed"))
+        assert spec == (None, "data")
+
+    @settings(max_examples=50, deadline=None)
+    @given(dim=st.integers(1, 4096))
+    def test_divisibility_invariant(self, dim):
+        spec = self._resolve((dim,), ("mlp",))
+        if dim % 16 == 0:
+            assert spec == ("model",)
+        else:
+            assert spec == (None,)
+
+
+class TestCompileModeScan:
+    def test_unrolled_matches_rolled(self):
+        def body(c, x):
+            return c + x, c * x
+
+        xs = jnp.arange(8.0)
+        with compile_mode.compile_options(unroll_scans=False):
+            c1, ys1 = compile_mode.scan(body, jnp.float32(0), xs)
+        with compile_mode.compile_options(unroll_scans=True):
+            c2, ys2 = compile_mode.scan(body, jnp.float32(0), xs)
+        assert float(c1) == float(c2)
+        np.testing.assert_array_equal(np.asarray(ys1), np.asarray(ys2))
+
+    def test_unroll_eliminates_while_op(self):
+        # NB: two distinct function objects — jit caches by identity, so one
+        # function would reuse the first trace and ignore the flag flip.
+        def f_unrolled(xs):
+            return compile_mode.scan(lambda c, x: (c + x, None), 0.0, xs)[0]
+
+        def f_rolled(xs):
+            return compile_mode.scan(lambda c, x: (c + x, None), 0.0, xs)[0]
+
+        # long enough that XLA does not auto-unroll the rolled loop
+        xs = jnp.arange(512.0)
+        jax.clear_caches()  # the flag is read at trace time; force retrace
+        with compile_mode.compile_options(unroll_scans=True):
+            hlo_unrolled = jax.jit(f_unrolled).lower(xs).compile().as_text()
+        jax.clear_caches()
+        with compile_mode.compile_options(unroll_scans=False):
+            hlo_rolled = jax.jit(f_rolled).lower(xs).compile().as_text()
+        # match the op syntax, not the substring: the test's own name
+        # ("...while_op") appears in HLO source metadata
+        import re
+        has_while = lambda t: re.search(r"\bwhile\(", t) is not None
+        assert not has_while(hlo_unrolled)
+        assert has_while(hlo_rolled)
+
+    def test_flash_block_knob(self):
+        assert compile_mode.flash_block_size() == 512
+        with compile_mode.compile_options(flash_block=2048):
+            assert compile_mode.flash_block_size() == 2048
+        assert compile_mode.flash_block_size() == 512
+
+
+class TestPipelineMath:
+    def test_bubble_fraction(self):
+        from repro.parallel.pipeline import bubble_fraction
+        assert bubble_fraction(1, 1) == 0.0
+        assert bubble_fraction(8, 4) == pytest.approx(3 / 11)
+        # more microbatches -> smaller bubble
+        assert bubble_fraction(64, 4) < bubble_fraction(8, 4)
+
+
+class TestShardNoMesh:
+    def test_shard_is_identity_without_mesh(self):
+        x = jnp.ones((4, 4))
+        assert shard(x, "batch", "mlp") is x
+
+    def test_axis_rules_context_restores(self):
+        before = dict(current_rules())
+        with axis_rules({"seq": "model"}):
+            assert current_rules()["seq"] == "model"
+        assert current_rules() == before
