@@ -1,10 +1,16 @@
 """Theorem-1 convergence benchmark: optimality gap + constraint violation vs
-horizon T, for constant and diminishing step rules (paper Sec. IV.C)."""
+horizon T, for constant and diminishing step rules (paper Sec. IV.C).
+
+The step-rule and budget sweeps are BATCHED: every grid cell is stacked into
+one vmapped ``simulate`` (scenarios.sweeps), so the whole sweep is a single
+compiled scan instead of one Python-loop iteration per cell.
+"""
 
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -12,6 +18,8 @@ from benchmarks.common import emit
 from repro.core import (OnAlgoParams, StepRule, default_paper_space, oracle,
                         simulate, theory)
 from repro.data.traces import TraceSpec, bursty_trace, iid_trace
+from repro.scenarios import (grid_from_cells, product_grid, sweep_simulate,
+                             unstack_series)
 
 
 def bench_convergence():
@@ -25,20 +33,40 @@ def bench_convergence():
     tables = space.tables()
     _, r_star = oracle.solve_lp(np.asarray(rho), tables, B, H)
 
-    rules = {"a/sqrt(t)": StepRule.inv_sqrt(0.5),
-             "const=0.02": StepRule.constant(0.02),
-             "a/t^0.75": StepRule.power(0.5, 0.75)}
-    for rname, rule in rules.items():
-        t0 = time.time()
-        series, _ = simulate(trace, tables, params, rule, true_rho=rho,
-                             with_true_rho=True)
-        dt = time.time() - t0
+    # one vmapped scan over all step rules (was: one python loop per rule)
+    cells = [("a/sqrt(t)", StepRule.inv_sqrt(0.5), params),
+             ("const=0.02", StepRule.constant(0.02), params),
+             ("a/t^0.75", StepRule.power(0.5, 0.75), params)]
+    grid = grid_from_cells(cells)
+    t0 = time.time()
+    series, _ = sweep_simulate(trace, tables, grid, true_rho=rho,
+                               with_true_rho=True)
+    jax.block_until_ready(series)
+    dt = time.time() - t0
+    for rname, cell in unstack_series(series, grid):
         for T in (1000, 4000, 16000, 32000):
-            part = {k: np.asarray(v)[:T] for k, v in series.items()}
+            part = {k: v[:T] for k, v in cell.items()}
             gap = theory.empirical_gap(part, r_star)
             viol = theory.positive_violation(part)
-            emit(f"convergence/{rname}/T={T}", dt * 1e6 / 32000,
+            emit(f"convergence/{rname}/T={T}", dt * 1e6 / (32000 * grid.G),
                  f"gap={gap:.5f};viol={viol:.5f};R*={r_star:.4f}")
+
+    # budget sweep: (B, H) grid through the same batched runner
+    T_b = 8000
+    btrace_iid, _ = iid_trace(space, TraceSpec(T=T_b, N=N, seed=4))
+    bgrid = product_grid(N, a_values=(0.5,), beta_values=(0.5,),
+                         B_values=(0.04, 0.08, 0.16),
+                         H_values=(N * 0.15 * 441e6, N * 0.25 * 441e6))
+    t0 = time.time()
+    bseries, _ = sweep_simulate(btrace_iid, tables, bgrid)
+    jax.block_until_ready(bseries)
+    dt = time.time() - t0
+    for label, cell in unstack_series(bseries, bgrid):
+        pw = float(np.mean(cell["power"])) / N
+        ld = float(np.mean(cell["load"]))
+        emit(f"convergence/budget_sweep/{label}",
+             dt * 1e6 / (T_b * bgrid.G),
+             f"avg_power={pw:.4f};avg_load={ld:.3e}")
 
     # non-iid robustness (bursty Markov-modulated trace)
     btrace, brho = bursty_trace(space, TraceSpec(T=32000, N=N, seed=2))

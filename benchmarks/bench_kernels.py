@@ -82,8 +82,41 @@ def bench_onalgo():
          f"hbm_bytes={hbm:.3e};fused_passes=1_vs_5")
 
 
+def bench_onalgo_chunked():
+    """Time-chunked whole-rollout kernel vs the per-slot jnp scan.
+
+    The derived column carries the HBM story: the scan path re-reads the
+    (N, M) tables + rho every slot (~5 passes/slot); the chunked kernel
+    keeps tables + state in VMEM for the entire horizon and streams only
+    the (C, N) trace slice per grid step.
+    """
+    import numpy as np
+    from repro.kernels.ref import onalgo_chunked_ref
+    N, M, T, C = 1024, 73, 256, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    j = jax.random.randint(ks[0], (T, N), 0, M)
+    o = jax.random.uniform(ks[1], (M,))
+    h = jax.random.uniform(ks[2], (M,))
+    w = jax.random.uniform(ks[3], (M,)) - 0.2
+    B = jax.random.uniform(ks[4], (N,)) + 0.05
+    lam0 = jnp.zeros((N,))
+    counts0 = jnp.zeros((N, M))
+    args = (j, lam0, jnp.float32(0.0), counts0, o, h, w, B,
+            jnp.float32(8.0), jnp.float32(0.5), jnp.float32(0.5))
+    scan_bytes = T * N * M * 4 * 5  # rho + 3 tables + policy, per slot
+    chunk_bytes = T * N * 4 * 2 + N * M * 4 * 5  # trace in/out + one residency
+    us = time_fn(jax.jit(onalgo_chunked_ref), *args)
+    emit("kernel/onalgo_chunked/xla_scan", us / T,
+         f"hbm_bytes={scan_bytes:.3e}")
+    us = time_fn(lambda *a: ops.onalgo_chunked(*a, chunk=C), *args,
+                 warmup=1, iters=2)
+    emit("kernel/onalgo_chunked/pallas_interp", us / T,
+         f"hbm_bytes={chunk_bytes:.3e};slots_per_call={C}")
+
+
 def run_all():
     bench_attention()
     bench_decode()
     bench_ssd()
     bench_onalgo()
+    bench_onalgo_chunked()

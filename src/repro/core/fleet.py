@@ -142,15 +142,10 @@ def simulate(trace: Trace,
         if with_true_rho:
             # All Theorem-1 quantities live in the (optionally) preconditioned
             # constraint space — the space the duals are updated in.
-            if params.precondition:
-                o_s = jnp.broadcast_to(o_tab, (N, M)) / params.B[:, None]
-                h_s = jnp.broadcast_to(h_tab, (N, M)) / params.H
-                B_eff = jnp.ones_like(params.B)
-                H_eff = jnp.float32(1.0)
-            else:
-                o_s = jnp.broadcast_to(o_tab, (N, M))
-                h_s = jnp.broadcast_to(h_tab, (N, M))
-                B_eff, H_eff = params.B, params.H
+            o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(
+                o_tab, h_tab, params)
+            o_s = jnp.broadcast_to(o_s, (N, M))
+            h_s = jnp.broadcast_to(h_s, (N, M))
             if algo == "onalgo":
                 lam_, mu_ = state.lam, state.mu
                 rho_t = state.rho.rho
@@ -181,6 +176,86 @@ def simulate(trace: Trace,
     return series, final_state
 
 
+@partial(jax.jit, static_argnames=("chunk",))
+def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
+                     rule: StepRule, chunk: int = 8):
+    """OnAlgo rollout through the time-chunked Pallas kernel.
+
+    Equivalent to ``simulate(..., algo="onalgo")`` (same series keys, same
+    final state) but the whole horizon runs as ONE fused kernel: ``chunk``
+    slots of rho-update + threshold policy + dual ascent per grid step,
+    with the value tables and algorithm state resident in VMEM throughout
+    (see kernels/onalgo_step.py).  A non-divisible tail of
+    ``T mod chunk`` slots is finished by the jnp slot step.
+    """
+    from repro.kernels import ops as kops
+
+    o_tab, h_tab, w_tab = tables
+    T, N = trace.j_idx.shape
+    M = o_tab.shape[-1]
+    j_seq = trace.j_idx
+
+    o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(o_tab, h_tab,
+                                                        params)
+
+    T_main = (T // chunk) * chunk
+    lam = jnp.zeros((N,), jnp.float32)
+    mu = jnp.float32(0.0)
+    counts = jnp.zeros((N, M), jnp.float32)
+    if T_main:
+        off, mu_seq, lnorm, lam, mu, counts = kops.onalgo_chunked(
+            j_seq[:T_main], lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
+            rule.a, rule.beta, chunk=chunk)
+    else:  # whole horizon shorter than one chunk: jnp tail does it all
+        off = jnp.zeros((0, N), bool)
+        mu_seq = jnp.zeros((0,), jnp.float32)
+        lnorm = jnp.zeros((0,), jnp.float32)
+
+    if T_main < T:  # finish the tail with the jnp slot step
+        state = onalgo.OnAlgoState(
+            lam=lam, mu=mu,
+            rho=onalgo.RhoEstimator(counts=counts,
+                                    t=jnp.int32(T_main)))
+
+        def slot(state, j):
+            task = j > 0
+            o_now = _lookup(o_tab, j)
+            h_now = _lookup(h_tab, j)
+            w_now = _lookup(w_tab, j)
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                         task, tables, params, rule)
+            lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+            return state, (offload, state.mu, lam_norm)
+
+        state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state,
+                                                  j_seq[T_main:])
+        off = jnp.concatenate([off, off_t], axis=0)
+        mu_seq = jnp.concatenate([mu_seq, mu_t])
+        lnorm = jnp.concatenate([lnorm, ln_t])
+        lam, mu, counts = state.lam, state.mu, state.rho.counts
+
+    lookup_t = jax.vmap(_lookup, in_axes=(None, 0))
+    o_seq = lookup_t(o_tab, j_seq)  # (T, N)
+    h_seq = lookup_t(h_tab, j_seq)
+    w_seq = lookup_t(w_tab, j_seq)
+    off_f = off.astype(jnp.float32)
+    series = {
+        "reward": jnp.sum(w_seq * off_f, axis=1),
+        "power": jnp.sum(o_seq * off_f, axis=1),
+        "power_per_dev": jnp.mean(o_seq * off_f, axis=1),
+        "load": jnp.sum(h_seq * off_f, axis=1),
+        "offloads": jnp.sum(off_f, axis=1),
+        "admits": jnp.sum(off_f, axis=1),
+        "tasks": jnp.sum((j_seq > 0).astype(jnp.float32), axis=1),
+        "lam_norm": lnorm,
+        "mu": mu_seq,
+    }
+    final = onalgo.OnAlgoState(
+        lam=lam, mu=mu,
+        rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+    return series, final
+
+
 def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
                      rule: StepRule, mesh, device_axis: str = "data"):
     """Distributed OnAlgo over a fleet sharded on a mesh axis.
@@ -196,7 +271,9 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
 
     tab_spec = P(device_axis, None) if o_tab.ndim == 2 else P(None)
 
-    @partial(jax.shard_map, mesh=mesh,
+    from repro.parallel.compat import shard_map
+
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(None, device_axis), P(None, device_axis), tab_spec,
                        tab_spec, tab_spec, P(device_axis), P()),
              out_specs=(P(device_axis), P(), P()),

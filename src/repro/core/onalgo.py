@@ -97,6 +97,22 @@ def init_state(num_devices: int, M: int) -> OnAlgoState:
     )
 
 
+def precondition_tables(o_tab, h_tab, params: OnAlgoParams):
+    """Constraint-space tables: (o', h', B_eff, H_eff).
+
+    With ``params.precondition`` each constraint row is rescaled to RHS 1
+    (o' = o/B_n — broadcasting (M,) tables to (N, M) — and h' = h/H);
+    otherwise a passthrough.  Every consumer of the dual space (step, the
+    Theorem-1 series, the chunked kernel) must use THIS helper so the
+    scaling can never desynchronize between paths.
+    """
+    if not params.precondition:
+        return o_tab, h_tab, params.B, params.H
+    B_col = params.B[:, None] if params.B.ndim == 1 else params.B
+    return (o_tab / B_col, h_tab / params.H,
+            jnp.ones_like(params.B), jnp.ones_like(params.H))
+
+
 def policy_matrix(lam, mu, o_tab, h_tab, w_tab):
     """Threshold policy y in {0,1}^(N,M) for EVERY state (eq. 6/7).
 
@@ -168,14 +184,11 @@ def step(state: OnAlgoState,
     o_tab, h_tab, w_tab = tables
     if params.precondition:
         # Diagonal preconditioner: each constraint row normalized to RHS 1.
-        B_col = params.B[:, None] if params.B.ndim == 1 else params.B
-        o_tab = o_tab / B_col  # (N, M) after broadcast
-        h_tab = h_tab / params.H
+        o_tab, h_tab, B_eff, H_eff = precondition_tables(o_tab, h_tab,
+                                                         params)
         o_now = o_now / params.B
         h_now = h_now / params.H
-        params = OnAlgoParams(B=jnp.ones_like(params.B),
-                              H=jnp.ones_like(params.H),
-                              precondition=False)
+        params = OnAlgoParams(B=B_eff, H=H_eff, precondition=False)
 
     # --- line 5-8: observe state, update running distribution (rho includes t)
     rho_est = state.rho.update(j_idx)

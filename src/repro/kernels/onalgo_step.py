@@ -88,3 +88,169 @@ def onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B, *,
         interpret=interpret,
     )(lam_p, mu_arr, rho, o, h, w, B_p)
     return gpow[:N, 0], load.sum()
+
+
+# ---------------------------------------------------------------------------
+# Time-chunked whole-simulation kernel.
+#
+# The single-slot kernel above amortizes the ~5 HBM passes of one dual
+# update, but a T-slot simulation still pays one kernel launch + one
+# (N, M) table round-trip per slot.  The chunked kernel runs the ENTIRE
+# horizon in one pallas_call: grid step k processes C consecutive slots
+# (rho update -> threshold decision -> dual ascent, C times), and the
+# algorithm state (lam, mu, visit counts) lives in the VMEM-resident
+# output blocks across grid steps (constant index_map -> the block is
+# only flushed to HBM once, after the last chunk).  The value tables are
+# likewise loaded into VMEM once and reused for all T slots.  Per chunk
+# the only HBM traffic is the (C, N) slice of the state-index trace in
+# and the (C, N) offload decisions out.
+#
+# Layout: the trace is passed as (K, N_pad, C) so each slot's indices are
+# a (N_pad, 1) column — no in-kernel transposes.  Devices are padded to
+# the sublane multiple with B = o = h = w = 0 rows (their duals provably
+# stay 0); states are padded to the lane multiple with w = 0 columns.
+# The whole fleet must fit one block: ~5 (N, M) fp32 buffers in VMEM,
+# i.e. N*M <~ 2^19 per core — beyond that, shard the fleet first
+# (fleet.simulate_sharded) and run one chunked kernel per shard.
+# ---------------------------------------------------------------------------
+
+
+def _onalgo_chunked_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
+                           mu0_ref, counts0_ref, scal_ref,
+                           off_ref, museq_ref, lnorm_ref,
+                           lam_ref, mu_ref, counts_ref, *, chunk, t0):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        lam_ref[...] = lam0_ref[...]
+        mu_ref[...] = mu0_ref[...]
+        counts_ref[...] = counts0_ref[...]
+
+    o = o_ref[...].astype(jnp.float32)  # (N, M)
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    B = b_ref[...].astype(jnp.float32)  # (N, 1)
+    a = scal_ref[0, 0]
+    beta = scal_ref[0, 1]
+    H = scal_ref[0, 2]
+    col = jax.lax.broadcasted_iota(jnp.int32, o.shape, 1)
+
+    lam = lam_ref[...]  # (N, 1)
+    mu = mu_ref[0, 0]
+    counts = counts_ref[...]  # (N, M)
+
+    for c in range(chunk):
+        j_col = j_ref[0, :, c:c + 1]  # (N, 1) int32
+        onehot = (col == j_col).astype(jnp.float32)  # (N, M)
+        counts = counts + onehot
+        t = k * chunk + (c + 1 + t0)
+        tf = jnp.maximum(t, 1).astype(jnp.float32)
+        rho = counts * (1.0 / tf)
+
+        # realized decision under (lam_t, mu_t) — the one-hot doubles as
+        # the table gather (o_now = o[n, j_n])
+        o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (N, 1)
+        h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
+        w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
+        price_now = lam * o_now + mu * h_now
+        off = (price_now < w_now) & (w_now > 0)
+        off_ref[0, :, c:c + 1] = off.astype(jnp.float32)
+
+        # dual subgradient from the full policy under rho_t
+        price = lam * o + mu * h
+        y = jnp.where((price < w) & (w > 0), 1.0, 0.0)
+        ry = rho * y
+        g_pow = jnp.sum(o * ry, axis=1, keepdims=True) - B  # (N, 1)
+        g_cap = jnp.sum(h * ry) - H
+        a_t = a / tf**beta
+        lam = jnp.maximum(lam + a_t * g_pow, 0.0)
+        mu = jnp.maximum(mu + a_t * g_cap, 0.0)
+        museq_ref[0, c] = mu
+        lnorm_ref[0, c] = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
+
+    lam_ref[...] = lam
+    mu_ref[0, 0] = mu
+    counts_ref[...] = counts
+
+
+def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
+                          B, H, a, beta, *, chunk=8, t0=0, interpret=True):
+    """Fused T-slot OnAlgo rollout (matches kernels/ref.onalgo_chunked_ref).
+
+    j_seq: (T, N) int32 state indices, T a multiple of ``chunk``.
+    lam0 (N,), mu0 (), counts0 (N, M): algorithm state entering slot t0+1.
+    o/h/w: value tables, (M,) shared or (N, M) per-device, ALREADY in the
+      space the duals are updated in (preconditioned by the caller).
+    B (N,), H (): constraint RHS in the same space; a, beta: step rule.
+    t0: global slot count already consumed (for resuming mid-trace).
+
+    Returns (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
+             lam (N,), mu (), counts (N, M)).
+    """
+    T, N = j_seq.shape
+    if T % chunk != 0:
+        raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
+    K = T // chunk
+    M = counts0.shape[-1]
+    o = jnp.broadcast_to(o_tab, (N, M)).astype(jnp.float32)
+    h = jnp.broadcast_to(h_tab, (N, M)).astype(jnp.float32)
+    w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
+
+    M_pad = -M % 128
+    N_pad = -N % 8
+    if M_pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, M_pad)))
+        o, h, w = z(o), z(h), z(w)
+        counts0 = jnp.pad(counts0, ((0, 0), (0, M_pad)))
+    if N_pad:
+        zn = lambda x: jnp.pad(x, ((0, N_pad), (0, 0)))
+        o, h, w, counts0 = zn(o), zn(h), zn(w), zn(counts0)
+    Np, Mp = o.shape
+    lam_p = jnp.pad(lam0.astype(jnp.float32), (0, N_pad))[:, None]
+    B_p = jnp.pad(jnp.broadcast_to(B, (N,)).astype(jnp.float32),
+                  (0, N_pad))[:, None]
+    # padded devices always sit in the null state
+    j_kc = jnp.pad(j_seq.astype(jnp.int32), ((0, 0), (0, N_pad)))
+    j_kc = j_kc.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
+    mu_arr = jnp.full((1, 1), mu0, jnp.float32)
+    scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
+                      jnp.float32(H)]).reshape(1, 3)
+
+    kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk, t0=t0)
+    off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
+        kern,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
+            pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+            pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+            pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+            pl.BlockSpec((Np, 1), lambda k: (0, 0)),
+            pl.BlockSpec((Np, 1), lambda k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda k: (0, 0)),
+            pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+            pl.BlockSpec((1, 3), lambda k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda k: (k, 0)),
+            pl.BlockSpec((1, chunk), lambda k: (k, 0)),
+            pl.BlockSpec((Np, 1), lambda k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda k: (0, 0)),
+            pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, Np, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(j_kc, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+
+    offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
+    return (offload, mu_seq.reshape(T), lnorm.reshape(T),
+            lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])

@@ -1,8 +1,10 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On a CPU build box the kernels execute through the Pallas interpreter
-(``interpret=True``) for correctness validation; on a TPU runtime set
-``REPRO_KERNEL_INTERPRET=0`` to lower them natively.
+Interpret mode is auto-detected: on a TPU runtime the kernels lower
+natively; anywhere else (CPU build box, CI) they execute through the
+Pallas interpreter for correctness validation.  Override with
+``REPRO_KERNEL_INTERPRET=0`` (force native) or ``=1`` (force interpret);
+the default ``auto`` asks the JAX backend.
 """
 
 from __future__ import annotations
@@ -13,31 +15,65 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+_INTERPRET = None
+
+
+def interpret_mode() -> bool:
+    """True when the Pallas kernels should run through the interpreter.
+
+    Evaluated lazily on first use: the auto branch queries
+    ``jax.default_backend()``, which initializes the JAX backend — doing
+    that at import time would pin the platform before launch/dryrun.py
+    gets to set XLA_FLAGS.
+    """
+    global _INTERPRET
+    if _INTERPRET is None:
+        mode = os.environ.get("REPRO_KERNEL_INTERPRET", "auto").lower()
+        if mode in ("0", "false", "native"):
+            _INTERPRET = False
+        elif mode in ("1", "true", "interpret"):
+            _INTERPRET = True
+        else:
+            try:
+                _INTERPRET = jax.default_backend() != "tpu"
+            except Exception:
+                _INTERPRET = True
+    return _INTERPRET
 
 
 @partial(jax.jit, static_argnames=())
 def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
     from repro.kernels.onalgo_step import onalgo_duals_pallas
     return onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B,
-                               interpret=INTERPRET)
+                               interpret=interpret_mode())
+
+
+@partial(jax.jit, static_argnames=("chunk", "t0"))
+def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
+                   a, beta, *, chunk=8, t0=0):
+    """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas)."""
+    from repro.kernels.onalgo_step import onalgo_chunked_pallas
+    return onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
+                                 w_tab, B, H, a, beta, chunk=chunk, t0=t0,
+                                 interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
     from repro.kernels.flash_attention import flash_attention_pallas
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=INTERPRET)
+                                  block_k=block_k, interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("block_k",))
 def decode_attention(q, k_cache, v_cache, cache_len, *, block_k=128):
     from repro.kernels.decode_attention import decode_attention_pallas
     return decode_attention_pallas(q, k_cache, v_cache, cache_len,
-                                   block_k=block_k, interpret=INTERPRET)
+                                   block_k=block_k, interpret=interpret_mode())
 
 
 @jax.jit
 def ssd_chunk(x, dt, A, Bh, Ch):
     from repro.kernels.ssd_chunk import ssd_chunk_pallas
-    return ssd_chunk_pallas(x, dt, A, Bh, Ch, interpret=INTERPRET)
+    return ssd_chunk_pallas(x, dt, A, Bh, Ch, interpret=interpret_mode())

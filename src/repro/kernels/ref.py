@@ -26,6 +26,49 @@ def onalgo_duals_ref(lam, mu, rho, o_tab, h_tab, w_tab, B):
     return g_pow, load
 
 
+def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
+                       a, beta, t0=0):
+    """Slot-sequential oracle for the time-chunked kernel.
+
+    Same contract as onalgo_step.onalgo_chunked_pallas: tables already in
+    the (preconditioned) dual space, j_seq (T, N).  Returns
+    (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
+     lam (N,), mu (), counts (N, M)).
+    """
+    T, N = j_seq.shape
+    M = counts0.shape[-1]
+    o = jnp.broadcast_to(o_tab, (N, M)).astype(jnp.float32)
+    h = jnp.broadcast_to(h_tab, (N, M)).astype(jnp.float32)
+    w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
+    B = jnp.broadcast_to(B, (N,)).astype(jnp.float32)
+    rows = jnp.arange(N)
+
+    def slot(carry, j):
+        lam, mu, counts, t = carry
+        counts = counts.at[rows, j].add(1.0)
+        t = t + 1
+        tf = jnp.maximum(t, 1).astype(jnp.float32)
+        rho = counts / tf
+        o_now, h_now, w_now = o[rows, j], h[rows, j], w[rows, j]
+        off = (lam * o_now + mu * h_now < w_now) & (w_now > 0)
+        price = lam[:, None] * o + mu * h
+        y = ((price < w) & (w > 0)).astype(jnp.float32)
+        ry = rho * y
+        g_pow = jnp.sum(o * ry, axis=-1) - B
+        g_cap = jnp.sum(h * ry) - H
+        a_t = a / tf**beta
+        lam = jnp.maximum(lam + a_t * g_pow, 0.0)
+        mu = jnp.maximum(mu + a_t * g_cap, 0.0)
+        lnorm = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
+        return (lam, mu, counts, t), (off, mu, lnorm)
+
+    init = (lam0.astype(jnp.float32), jnp.float32(mu0),
+            counts0.astype(jnp.float32), jnp.int32(t0))
+    (lam, mu, counts, _), (off, mu_seq, lnorm) = jax.lax.scan(
+        slot, init, j_seq.astype(jnp.int32))
+    return off, mu_seq, lnorm, lam, mu, counts
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """O(S^2) GQA attention oracle. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
     from repro.models.attention import attention_ref

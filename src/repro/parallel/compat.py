@@ -1,0 +1,22 @@
+"""JAX version compatibility shims.
+
+``jax.shard_map`` (with ``check_vma``) is the modern spelling; older
+installs only ship ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``).  Route every repo call site through here so the rest of
+the codebase can use the modern keyword unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

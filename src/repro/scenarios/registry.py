@@ -1,0 +1,250 @@
+"""Scenario generator registry.
+
+Each generator is a function ``Scenario -> CompiledScenario`` registered under
+its ``kind`` name.  All generators are host-side (numpy RNG, mirroring
+``repro.data.traces``) and lower to the core ``(Trace, tables, params)``
+contract; jit'd simulation consumes the result unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import Trace
+from repro.data.traces import TraceSpec, bursty_trace, iid_trace
+from repro.scenarios.spec import CompiledScenario, Scenario, scenario_space
+
+SCENARIO_KINDS: Dict[str, Callable[[Scenario], CompiledScenario]] = {}
+
+
+def register(kind: str):
+    def deco(fn):
+        SCENARIO_KINDS[kind] = fn
+        return fn
+    return deco
+
+
+def names() -> List[str]:
+    return sorted(SCENARIO_KINDS)
+
+
+def compile_scenario(sc: Scenario) -> CompiledScenario:
+    if sc.kind not in SCENARIO_KINDS:
+        raise KeyError(f"unknown scenario kind {sc.kind!r}; "
+                       f"registered: {names()}")
+    return SCENARIO_KINDS[sc.kind](sc)
+
+
+def default_scenarios() -> List[Scenario]:
+    """One representative spec per registered kind (tests / benches)."""
+    base = dict(T=2000, N=8, seed=0)
+    return [
+        Scenario("stationary", **base),
+        Scenario("bursty", **base),
+        Scenario("diurnal", **base).with_extra(period=500, amp=0.8),
+        Scenario("churn", **base).with_extra(churn_frac=0.4),
+        Scenario("flash_crowd", **base).with_extra(n_events=3,
+                                                   event_len=60),
+        Scenario("heterogeneous", **base).with_extra(o_spread=0.5),
+        Scenario("outage", **base).with_extra(n_outages=2, outage_len=200),
+    ]
+
+
+def _dloc(rng, w_vals, noise=0.08):
+    d = 1.0 - w_vals + rng.normal(0, noise, size=w_vals.shape)
+    return np.clip(d, 0.0, 1.0)
+
+
+def _trace_spec(sc: Scenario) -> TraceSpec:
+    return TraceSpec(T=sc.T, N=sc.N, task_prob=sc.task_prob, seed=sc.seed)
+
+
+@register("stationary")
+def _stationary(sc: Scenario) -> CompiledScenario:
+    """IID traffic — the paper's baseline regime, exact true rho."""
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho)
+
+
+@register("bursty")
+def _bursty(sc: Scenario) -> CompiledScenario:
+    """Markov-modulated ON/OFF bursts (paper Sec. VI evaluation traffic)."""
+    space = scenario_space(sc)
+    trace, rho = bursty_trace(space, _trace_spec(sc))
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho, meta={"rho_is_approx": True})
+
+
+@register("diurnal")
+def _diurnal(sc: Scenario) -> CompiledScenario:
+    """Sinusoidal day cycle: task rate and gain distribution co-vary.
+
+    At "night" traffic is sparse and gains are biased low; at "day" traffic
+    is dense and high-gain (fresh content worth offloading).  This is the
+    time-varying-rho regime OnAlgo's Azuma-style analysis targets.
+    """
+    period = int(sc.opt("period", max(sc.T // 4, 2)))
+    amp = float(sc.opt("amp", 0.8))
+    space = scenario_space(sc)
+    rng = np.random.default_rng(sc.seed)
+    Lo, Lh, Lw = space.num_levels
+    T, N = sc.T, sc.N
+
+    phase = 2 * np.pi * np.arange(T) / period
+    day = 0.5 * (1.0 + np.sin(phase))  # (T,) in [0, 1]
+    p_task_t = np.clip(sc.task_prob * (1.0 - amp + 2 * amp * day), 0.0, 0.98)
+
+    # gain-level distributions: low-biased at night, high-biased at day
+    bias = np.linspace(2.0, 0.5, Lw)
+    p_night = bias / bias.sum()
+    p_day = bias[::-1] / bias.sum()
+    p_w_t = (1 - day)[:, None] * p_night + day[:, None] * p_day  # (T, Lw)
+
+    io = rng.integers(0, Lo, size=(T, N))
+    ih = rng.integers(0, Lh, size=(T, N))
+    cdf = np.cumsum(p_w_t, axis=1)  # (T, Lw)
+    u = rng.random((T, N))
+    iw = np.clip((u[:, :, None] > cdf[:, None, :]).sum(-1), 0, Lw - 1)
+    j = np.asarray(space.encode(io, ih, iw))
+    task = rng.random((T, N)) < p_task_t[:, None]
+    j = np.where(task, j, 0)
+
+    w_tab = np.asarray(space.tables()[2])
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(_dloc(rng, w_tab[j]), jnp.float32))
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            meta={"period": period, "amp": amp})
+
+
+@register("churn")
+def _churn(sc: Scenario) -> CompiledScenario:
+    """Device arrivals/departures via the task mask (null state).
+
+    Device n joins the fleet at ``arrive[n]`` and leaves at ``depart[n]``;
+    outside its window it sits in the null state, so it generates no tasks
+    and contributes nothing to the constraints — exactly how an absent
+    device looks to the cloudlet.
+    """
+    churn_frac = float(sc.opt("churn_frac", 0.4))
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    rng = np.random.default_rng(sc.seed + 1)
+    T, N = sc.T, sc.N
+    span = max(int(T * churn_frac), 1)
+    arrive = rng.integers(0, span, N)
+    depart = T - rng.integers(0, span, N)
+    slots = np.arange(T)[:, None]
+    active = (slots >= arrive[None, :]) & (slots < depart[None, :])
+    j = np.where(active, np.asarray(trace.j_idx), 0)
+    d = np.where(active, np.asarray(trace.d_local), 0.0)
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(d, jnp.float32))
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            meta={"arrive": arrive, "depart": depart})
+
+
+@register("flash_crowd")
+def _flash_crowd(sc: Scenario) -> CompiledScenario:
+    """Flash-crowd bursts: short windows where nearly every device has a
+    task and gains skew high (everyone films the same event)."""
+    n_events = int(sc.opt("n_events", 3))
+    event_len = int(sc.opt("event_len", 60))
+    peak_prob = float(sc.opt("peak_prob", 0.97))
+    space = scenario_space(sc)
+    trace, _ = iid_trace(space, _trace_spec(sc))
+    rng = np.random.default_rng(sc.seed + 2)
+    Lo, Lh, Lw = space.num_levels
+    T, N = sc.T, sc.N
+
+    starts = np.sort(rng.integers(0, max(T - event_len, 1), n_events))
+    in_event = np.zeros(T, bool)
+    for s in starts:
+        in_event[s:s + event_len] = True
+
+    # resample event slots: dense traffic, high-gain-biased levels
+    bias = np.linspace(0.5, 2.0, Lw)
+    p_hi = bias / bias.sum()
+    io = rng.integers(0, Lo, size=(T, N))
+    ih = rng.integers(0, Lh, size=(T, N))
+    iw = rng.choice(Lw, size=(T, N), p=p_hi)
+    j_event = np.asarray(space.encode(io, ih, iw))
+    task_event = rng.random((T, N)) < peak_prob
+    j_event = np.where(task_event, j_event, 0)
+
+    j = np.where(in_event[:, None], j_event, np.asarray(trace.j_idx))
+    w_tab = np.asarray(space.tables()[2])
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(_dloc(rng, w_tab[j]), jnp.float32))
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            meta={"event_starts": starts,
+                                  "event_len": event_len})
+
+
+@register("heterogeneous")
+def _heterogeneous(sc: Scenario) -> CompiledScenario:
+    """Heterogeneous fleet: per-device (N, M) value tables.
+
+    Each device pays a distance-dependent power multiplier (lognormal, the
+    far-from-AP effect of paper Fig. 2b) and realizes a device-specific gain
+    scale (camera/model quality).  ``fleet._lookup`` and the kernels handle
+    the (N, M) layout natively; true_rho stays exact because the *state
+    index* process is unchanged.
+    """
+    o_spread = float(sc.opt("o_spread", 0.5))
+    w_spread = float(sc.opt("w_spread", 0.25))
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    rng = np.random.default_rng(sc.seed + 3)
+    N = sc.N
+    o_tab, h_tab, w_tab = space.tables()
+    o_scale = rng.lognormal(0.0, o_spread, N).astype(np.float32)
+    w_scale = np.clip(rng.normal(1.0, w_spread, N), 0.3, 1.7)
+    o_nm = jnp.asarray(o_scale)[:, None] * o_tab[None, :]
+    w_nm = jnp.asarray(w_scale, jnp.float32)[:, None] * w_tab[None, :]
+    h_nm = jnp.broadcast_to(h_tab, (N, space.M))
+    return CompiledScenario(sc, trace, (o_nm, h_nm, w_nm), sc.params(),
+                            true_rho=rho,
+                            meta={"o_scale": o_scale, "w_scale": w_scale})
+
+
+@register("outage")
+def _outage(sc: Scenario) -> CompiledScenario:
+    """Cloudlet capacity outages via mirrored w=0 states.
+
+    The state space is doubled: states [M, 2M) copy (o, h) but zero the
+    gain w.  During an outage window every task state j is remapped to
+    j + M, so the threshold rule (which requires w > 0) provably never
+    offloads — the cloudlet being down costs zero accuracy gain — while
+    rho keeps tracking the full process.  Tables stay shared (M',), so the
+    contract is untouched.
+    """
+    n_outages = int(sc.opt("n_outages", 2))
+    outage_len = int(sc.opt("outage_len", 200))
+    space = scenario_space(sc)
+    trace, _ = iid_trace(space, _trace_spec(sc))
+    rng = np.random.default_rng(sc.seed + 4)
+    T = sc.T
+    M = space.M
+
+    starts = np.sort(rng.integers(0, max(T - outage_len, 1), n_outages))
+    down = np.zeros(T, bool)
+    for s in starts:
+        down[s:s + outage_len] = True
+
+    o_tab, h_tab, w_tab = space.tables()
+    o2 = jnp.concatenate([o_tab, o_tab])
+    h2 = jnp.concatenate([h_tab, h_tab])
+    w2 = jnp.concatenate([w_tab, jnp.zeros_like(w_tab)])
+
+    j = np.asarray(trace.j_idx)
+    j = np.where(down[:, None] & (j > 0), j + M, j)
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32), d_local=trace.d_local)
+    return CompiledScenario(sc, trace, (o2, h2, w2), sc.params(),
+                            meta={"outage_starts": starts,
+                                  "outage_len": outage_len,
+                                  "down": down})

@@ -1,0 +1,100 @@
+"""Scenario execution: compile a spec, pick an engine, roll it out.
+
+Engines:
+  * ``scan``    — ``fleet.simulate`` (per-slot scan; any algo / baseline).
+  * ``chunked`` — ``fleet.simulate_chunked`` (the fused time-chunked Pallas
+                  kernel; OnAlgo only).
+  * ``auto``    — ``chunked`` when the kernels lower natively (TPU),
+                  ``scan`` under the interpreter (CPU/CI), where a Python
+                  interpreter pass per chunk would dominate.
+
+``use_kernel="auto"`` similarly enables the single-slot fused kernel inside
+the scan engine only when it lowers natively.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+from repro.core.fleet import simulate, simulate_chunked
+from repro.core.onalgo import StepRule
+from repro.scenarios.registry import compile_scenario, default_scenarios
+from repro.scenarios.spec import CompiledScenario, Scenario
+
+
+def resolve_use_kernel(flag: Union[bool, str]) -> bool:
+    """'auto' -> native Pallas lowering available (not interpret mode)."""
+    if isinstance(flag, str):
+        if flag != "auto":
+            raise ValueError(f"use_kernel must be bool or 'auto', got {flag!r}")
+        from repro.kernels import ops
+        return not ops.interpret_mode()
+    return bool(flag)
+
+
+def resolve_engine(engine: str) -> str:
+    if engine == "auto":
+        from repro.kernels import ops
+        return "scan" if ops.interpret_mode() else "chunked"
+    if engine not in ("scan", "chunked"):
+        raise ValueError(f"unknown engine {engine!r}")
+    return engine
+
+
+def run_scenario(sc: Union[Scenario, CompiledScenario, str],
+                 rule: Optional[StepRule] = None,
+                 algo: str = "onalgo",
+                 engine: str = "auto",
+                 use_kernel: Union[bool, str] = "auto",
+                 chunk: int = 8,
+                 with_true_rho: bool = False,
+                 enforce_slot_capacity: bool = False):
+    """Compile (if needed) and simulate one scenario.
+
+    Returns (series, final_state, CompiledScenario).
+    """
+    if isinstance(sc, str):
+        sc = Scenario(kind=sc)
+    if isinstance(sc, Scenario):
+        sc = compile_scenario(sc)
+    rule = rule if rule is not None else StepRule.inv_sqrt(0.5)
+    # scan-only options pin 'auto' to the scan engine on every platform;
+    # an EXPLICIT engine='chunked' with these still raises below.
+    if engine == "auto" and (algo != "onalgo" or with_true_rho
+                             or enforce_slot_capacity):
+        engine = "scan"
+    else:
+        engine = resolve_engine(engine)
+
+    if engine == "chunked":
+        if algo != "onalgo":
+            raise ValueError("the chunked engine only rolls OnAlgo; use "
+                             f"engine='scan' for algo={algo!r}")
+        if with_true_rho or enforce_slot_capacity:
+            raise ValueError(
+                "the chunked engine does not support with_true_rho / "
+                "enforce_slot_capacity; use engine='scan' for those series")
+        series, final = simulate_chunked(sc.trace, sc.tables, sc.params,
+                                         rule, chunk=chunk)
+    else:
+        kw = {}
+        if with_true_rho:
+            if sc.true_rho is None:
+                raise ValueError(
+                    f"scenario kind {sc.scenario.kind!r} has no analytic "
+                    "true_rho; run without with_true_rho")
+            kw = dict(true_rho=sc.true_rho, with_true_rho=True)
+        series, final = simulate(sc.trace, sc.tables, sc.params, rule,
+                                 algo=algo,
+                                 enforce_slot_capacity=enforce_slot_capacity,
+                                 use_kernel=resolve_use_kernel(use_kernel),
+                                 **kw)
+    return series, final, sc
+
+
+def run_all_scenarios(rule: Optional[StepRule] = None,
+                      engine: str = "auto",
+                      **kw) -> Dict[str, tuple]:
+    """Roll every registered kind's default spec; kind -> (series, final, compiled)."""
+    return {sc.kind: run_scenario(sc, rule=rule, engine=engine, **kw)
+            for sc in default_scenarios()}

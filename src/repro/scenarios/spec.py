@@ -1,0 +1,132 @@
+"""Declarative scenario specs for fleet simulation (paper Sec. VI + beyond).
+
+A :class:`Scenario` is a plain, serializable description of a workload: how
+many devices, how long, and *which generator* ("kind") produces the traffic,
+channel, and value tables.  Compiling a scenario produces a
+:class:`CompiledScenario` — nothing more than the existing
+``(Trace, tables, OnAlgoParams)`` contract of ``repro.core.fleet`` — so every
+downstream consumer (``simulate``, ``simulate_sharded``, the chunked Pallas
+path, the serving simulator) runs scenarios unchanged.
+
+Non-stationarity is expressed *through the contract*, never around it:
+
+  * diurnal / flash-crowd kinds shape the per-slot distribution of ``j_idx``;
+  * device churn uses the null state (task mask) for absent devices;
+  * heterogeneous fleets emit per-device ``(N, M)`` tables (``fleet._lookup``
+    already supports both layouts);
+  * cloudlet outages double the state space with ``w = 0`` mirror states —
+    during an outage the offloading gain is zero, so the threshold policy
+    provably never offloads, without touching the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fleet import Trace
+from repro.core.onalgo import OnAlgoParams
+from repro.core.state_space import StateSpace
+
+CYCLES_PER_TASK = 441e6  # paper Fig. 2c mean CNN task cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative fleet-scenario spec.  Plain data: round-trips via dicts.
+
+    Common knobs (every kind):
+      kind: registered generator name (see ``repro.scenarios.registry``).
+      T / N / seed: horizon, fleet size, RNG seed.
+      num_w: gain-level count of the quantized state space.
+      task_prob: base per-slot task probability.
+      budget: per-device average power budget B_n (Watts).
+      cap_frac: cloudlet capacity as a fraction of one task per device per
+        slot — H = N * cap_frac * CYCLES_PER_TASK.
+      extra: kind-specific knobs (period, outage windows, churn rates, ...).
+    """
+
+    kind: str
+    T: int = 4000
+    N: int = 8
+    seed: int = 0
+    num_w: int = 4
+    task_prob: float = 0.6
+    budget: float = 0.08
+    cap_frac: float = 0.25
+    extra: Tuple[Tuple[str, Any], ...] = ()
+
+    def opt(self, key: str, default: Any) -> Any:
+        """Kind-specific knob lookup with default."""
+        for k, v in self.extra:
+            if k == key:
+                return v
+        return default
+
+    def with_extra(self, **kw: Any) -> "Scenario":
+        merged = dict(self.extra)
+        merged.update(kw)
+        return dataclasses.replace(self, extra=tuple(sorted(merged.items())))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["extra"] = dict(self.extra)
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Scenario":
+        d = dict(d)
+        extra = d.pop("extra", {})
+        if isinstance(extra, dict):
+            extra = tuple(sorted(extra.items()))
+        else:
+            extra = tuple(tuple(kv) for kv in extra)
+        return Scenario(extra=extra, **d)
+
+    @property
+    def H(self) -> float:
+        return self.N * self.cap_frac * CYCLES_PER_TASK
+
+    def params(self) -> OnAlgoParams:
+        return OnAlgoParams(B=jnp.full((self.N,), self.budget, jnp.float32),
+                            H=jnp.float32(self.H))
+
+
+@dataclasses.dataclass
+class CompiledScenario:
+    """A scenario lowered to the core simulation contract.
+
+    trace / tables / params feed ``fleet.simulate`` (and friends) verbatim.
+    ``true_rho`` is the analytic stationary distribution when the generator
+    knows it (stationary kinds), else None.  ``meta`` carries generator
+    diagnostics (e.g. outage windows) for tests and plots.
+    """
+
+    scenario: Scenario
+    trace: Trace
+    tables: Tuple[jax.Array, jax.Array, jax.Array]
+    params: OnAlgoParams
+    true_rho: Optional[jax.Array] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def M(self) -> int:
+        return int(self.tables[0].shape[-1])
+
+    def simulate_args(self):
+        """Positional args for ``fleet.simulate(trace, tables, params, ...)``."""
+        return self.trace, self.tables, self.params
+
+    def task_mask(self):
+        """(T, N) bool arrival matrix — feeds serve.simulator.simulate_service
+        so the serving tier replays this scenario's traffic."""
+        import numpy as np
+        return np.asarray(self.trace.j_idx) > 0
+
+
+def scenario_space(sc: Scenario) -> StateSpace:
+    from repro.core.state_space import default_paper_space
+    return default_paper_space(num_w=sc.num_w)

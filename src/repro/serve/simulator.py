@@ -81,6 +81,24 @@ def build_pool(data: Dataset, pair: ClassifierPair,
         phi_hat=phi, sigma=sigma, cycles=cycles)
 
 
+def pool_space(pool: "PrecomputedPool", num_w: int = 8,
+               v_risk: float = 0.5) -> StateSpace:
+    """Pool-calibrated quantized state space (single source of truth).
+
+    The w grid must COVER the realized gain distribution (paper footnote
+    5: granularity): a saturated top level makes the dual estimator
+    undercount high-gain offloads and the power constraint then
+    equilibrates ~25% above budget.
+    """
+    w_all = np.clip(pool.phi_hat - v_risk * pool.sigma, 0.0, 1.0)
+    w_hi = max(float(np.quantile(w_all, 0.999)), 0.1)
+    return StateSpace(
+        o_levels=tuple(power_of_rate(RATES).tolist()),
+        h_levels=(441e6 - 90e6, 441e6, 441e6 + 90e6),
+        w_levels=tuple(np.linspace(0.0, w_hi, num_w).tolist()),
+    )
+
+
 def make_scenario(kind: str, seed: int = 0):
     """(data, pair, predictor, pool) for 'easy' (MNIST-like) or 'hard'."""
     data, pair = build_scenario(kind, seed=seed)
@@ -89,41 +107,44 @@ def make_scenario(kind: str, seed: int = 0):
     return data, pair, predictor, pool
 
 
-def simulate_service(sim: SimConfig, pool: PrecomputedPool) -> dict:
+def simulate_service(sim: SimConfig, pool: PrecomputedPool,
+                     on: Optional[np.ndarray] = None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
     power is consumed on transmission; accuracy comes from the cloudlet
     only for admitted tasks (per-slot capacity enforced for every policy);
     non-offloaded / dropped tasks score the local classifier's result.
+
+    ``on``: optional (T, N) bool arrival matrix overriding the built-in
+    bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
+    scenario engine, so the service tier replays the same workloads as
+    the fleet simulator.
     """
     rng = np.random.default_rng(sim.seed)
     N, T = sim.num_devices, sim.T
     S = len(pool.local_correct)
 
-    # --- traffic: bursty ON/OFF per device
-    on = np.zeros((T, N), bool)
-    for n in range(N):
-        t = int(rng.integers(0, sim.burst_len[1]))
-        while t < T:
-            ln = int(rng.integers(sim.burst_len[0], sim.burst_len[1] + 1))
-            on[t:t + ln, n] = True
-            t += ln + 1 + int(rng.geometric(1.0 / sim.mean_gap))
+    if on is not None:
+        on = np.asarray(on, bool)
+        if on.shape != (T, N):
+            raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
+    else:
+        # --- traffic: bursty ON/OFF per device
+        on = np.zeros((T, N), bool)
+        for n in range(N):
+            t = int(rng.integers(0, sim.burst_len[1]))
+            while t < T:
+                ln = int(rng.integers(sim.burst_len[0],
+                                      sim.burst_len[1] + 1))
+                on[t:t + ln, n] = True
+                t += ln + 1 + int(rng.geometric(1.0 / sim.mean_gap))
 
     # --- channel: Markov rate per device
     rate_idx = rng.integers(0, len(RATES), N)
 
-    # --- controller state.  The w grid must COVER the realized gain
-    # distribution (paper footnote 5: granularity): a saturated top level
-    # makes the dual estimator undercount high-gain offloads and the power
-    # constraint then equilibrates ~25% above budget.
-    w_all = np.clip(pool.phi_hat - sim.v_risk * pool.sigma, 0.0, 1.0)
-    w_hi = max(float(np.quantile(w_all, 0.999)), 0.1)
-    space = StateSpace(
-        o_levels=tuple(power_of_rate(RATES).tolist()),
-        h_levels=(441e6 - 90e6, 441e6, 441e6 + 90e6),
-        w_levels=tuple(np.linspace(0.0, w_hi, sim.num_w_levels).tolist()),
-    )
+    # --- controller state, over the pool-calibrated state space
+    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
     params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
                           H=jnp.float32(sim.H))
     ctrl = AdmissionController(space, params, StepRule.inv_sqrt(sim.step_a),

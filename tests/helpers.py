@@ -1,0 +1,36 @@
+"""Shared test utilities (importable because pytest puts tests/ on sys.path
+via conftest.py's directory)."""
+
+from repro.parallel.sharding import DEFAULT_RULES
+from repro.parallel.sharding import _resolve as _resolve_axis
+
+
+def resolve_divisibility_spec(shape, axes, rules=None,
+                              sizes={"data": 16, "model": 16}):
+    """Emulate shape-aware spec resolution on a synthetic 16x16 mesh.
+
+    NamedSharding cannot be built on a FakeMesh, so tests replicate the
+    divisibility logic of ``shape_aware_spec_tree`` directly; this is the
+    single copy both test_parallel and test_properties exercise.
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    mesh_axes = set(sizes)
+    used = set()
+    out = []
+    for dim, a in zip(shape, tuple(axes) + (None,) * (len(shape)
+                                                      - len(axes))):
+        phys = _resolve_axis(a, rules, mesh_axes)
+        cand = ([phys] if isinstance(phys, str)
+                else list(phys) if phys else [])
+        kept = []
+        prod = 1
+        for ax in cand:
+            if ax not in used and dim % (prod * sizes[ax]) == 0:
+                kept.append(ax)
+                used.add(ax)
+                prod *= sizes[ax]
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    return tuple(out)

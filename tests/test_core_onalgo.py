@@ -4,7 +4,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (OnAlgoParams, StepRule, default_paper_space, oracle,
                         policy_matrix, simulate, theory)
@@ -54,6 +53,7 @@ class TestOnAlgoOptimality:
         assert float(r_da) <= r_lp * 1.07 + float(viol) * 10 + 1e-6
 
 
+@pytest.mark.slow
 class TestTheorem1:
     def test_gap_and_violation_bounds_hold(self):
         """Both Theorem-1 inequalities hold on a realized sample path."""
@@ -98,6 +98,7 @@ class TestTheorem1:
         assert theory.empirical_gap(series, r_star) < 0.1 * max(r_star, 1e-6)
 
 
+@pytest.mark.slow
 class TestNonIID:
     def test_bursty_markov_trace_near_feasible(self):
         """The paper's key robustness claim: convergence under non-iid
@@ -192,29 +193,9 @@ class TestExtensions:
         assert float(state.nu) > 0.0  # bandwidth price engaged
 
 
-class TestProperties:
-    @settings(max_examples=30, deadline=None)
-    @given(lam=st.floats(0, 5), mu=st.floats(0, 5))
-    def test_policy_matches_bruteforce_threshold(self, lam, mu):
-        space = default_paper_space(num_w=4)
-        o, h, w = space.tables()
-        lam_v = jnp.full((3,), jnp.float32(lam))
-        y = policy_matrix(lam_v, jnp.float32(mu), o, h, w)
-        ref = ((lam * np.asarray(o) + mu * np.asarray(h))
-               < np.asarray(w)) & (np.asarray(w) > 0)
-        np.testing.assert_array_equal(np.asarray(y[0]).astype(bool), ref)
-
-    @settings(max_examples=20, deadline=None)
-    @given(dlam=st.floats(0.01, 5), dmu=st.floats(0.01, 5))
-    def test_policy_monotone_in_prices(self, dlam, dmu):
-        """Raising any dual price can only shrink the offloading set."""
-        space = default_paper_space(num_w=4)
-        o, h, w = space.tables()
-        lam0 = jnp.zeros((2,), jnp.float32)
-        y0 = policy_matrix(lam0, jnp.float32(0.1), o, h, w)
-        y1 = policy_matrix(lam0 + dlam, jnp.float32(0.1 + dmu), o, h, w)
-        assert bool(jnp.all(y1 <= y0))
-
+class TestPolicyInvariants:
+    # Property-based (hypothesis) variants of these live in
+    # tests/test_properties.py behind pytest.importorskip("hypothesis").
     def test_null_and_zero_gain_states_never_offload(self):
         space = default_paper_space(num_w=4)
         o, h, w = space.tables()
@@ -222,17 +203,3 @@ class TestProperties:
                           o, h, w)
         w_np = np.asarray(w)
         assert not np.any(np.asarray(y)[:, w_np <= 0])
-
-    @settings(max_examples=10, deadline=None)
-    @given(seed=st.integers(0, 1000))
-    def test_rho_estimator_is_exact_empirical(self, seed):
-        from repro.core import RhoEstimator, empirical_rho
-        rng = np.random.default_rng(seed)
-        T, N, M = 50, 4, 7
-        js = rng.integers(0, M, size=(T, N))
-        est = RhoEstimator.create(N, M)
-        for t in range(T):
-            est = est.update(jnp.asarray(js[t], jnp.int32))
-        np.testing.assert_allclose(np.asarray(est.rho),
-                                   np.asarray(empirical_rho(
-                                       jnp.asarray(js), M)), rtol=1e-6)

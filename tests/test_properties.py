@@ -1,0 +1,65 @@
+"""Property-based invariants (policy, rho estimator, sharding divisibility).
+
+``hypothesis`` is an optional test dependency (the ``[test]`` extra); this
+module is skipped wholesale when it is absent so the tier-1 run never errors
+at collection time.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import default_paper_space, policy_matrix
+
+
+class TestPolicyProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(lam=st.floats(0, 5), mu=st.floats(0, 5))
+    def test_policy_matches_bruteforce_threshold(self, lam, mu):
+        space = default_paper_space(num_w=4)
+        o, h, w = space.tables()
+        lam_v = jnp.full((3,), jnp.float32(lam))
+        y = policy_matrix(lam_v, jnp.float32(mu), o, h, w)
+        ref = ((lam * np.asarray(o) + mu * np.asarray(h))
+               < np.asarray(w)) & (np.asarray(w) > 0)
+        np.testing.assert_array_equal(np.asarray(y[0]).astype(bool), ref)
+
+    @settings(max_examples=20, deadline=None)
+    @given(dlam=st.floats(0.01, 5), dmu=st.floats(0.01, 5))
+    def test_policy_monotone_in_prices(self, dlam, dmu):
+        """Raising any dual price can only shrink the offloading set."""
+        space = default_paper_space(num_w=4)
+        o, h, w = space.tables()
+        lam0 = jnp.zeros((2,), jnp.float32)
+        y0 = policy_matrix(lam0, jnp.float32(0.1), o, h, w)
+        y1 = policy_matrix(lam0 + dlam, jnp.float32(0.1 + dmu), o, h, w)
+        assert bool(jnp.all(y1 <= y0))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_rho_estimator_is_exact_empirical(self, seed):
+        from repro.core import RhoEstimator, empirical_rho
+        rng = np.random.default_rng(seed)
+        T, N, M = 50, 4, 7
+        js = rng.integers(0, M, size=(T, N))
+        est = RhoEstimator.create(N, M)
+        for t in range(T):
+            est = est.update(jnp.asarray(js[t], jnp.int32))
+        np.testing.assert_allclose(np.asarray(est.rho),
+                                   np.asarray(empirical_rho(
+                                       jnp.asarray(js), M)), rtol=1e-6)
+
+
+class TestShardingProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(dim=st.integers(1, 4096))
+    def test_divisibility_invariant(self, dim):
+        from helpers import resolve_divisibility_spec
+        spec = resolve_divisibility_spec((dim,), ("mlp",))
+        if dim % 16 == 0:
+            assert spec == ("model",)
+        else:
+            assert spec == (None,)

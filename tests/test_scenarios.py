@@ -1,0 +1,275 @@
+"""Scenario engine: registry round-trips, contract compliance, chunked
+Pallas kernel parity, and vmapped-sweep vs loop equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OnAlgoParams, StepRule, default_paper_space, simulate
+from repro.core.fleet import simulate_chunked
+from repro.data.traces import TraceSpec, iid_trace
+from repro.kernels.onalgo_step import onalgo_chunked_pallas
+from repro.kernels.ref import onalgo_chunked_ref
+from repro.scenarios import (Scenario, compile_scenario, default_scenarios,
+                             grid_from_cells, names, product_grid,
+                             run_scenario, stack_params, stack_rules,
+                             sweep_simulate, unstack_series)
+
+RULE = StepRule.inv_sqrt(0.5)
+
+
+def _small(sc: Scenario) -> Scenario:
+    return dataclasses.replace(sc, T=240, N=6)
+
+
+class TestRegistry:
+    def test_all_kinds_have_defaults(self):
+        assert set(names()) == {sc.kind for sc in default_scenarios()}
+
+    @pytest.mark.parametrize("sc", default_scenarios(),
+                             ids=lambda sc: sc.kind)
+    def test_spec_round_trips(self, sc):
+        d = sc.to_dict()
+        assert Scenario.from_dict(d) == sc
+        # dicts are plain data: survive a JSON hop
+        import json
+        assert Scenario.from_dict(json.loads(json.dumps(d))) == sc
+
+    @pytest.mark.parametrize("sc", default_scenarios(),
+                             ids=lambda sc: sc.kind)
+    def test_compiles_to_core_contract(self, sc):
+        sc = _small(sc)
+        c = compile_scenario(sc)
+        T, N = c.trace.j_idx.shape
+        assert (T, N) == (sc.T, sc.N)
+        o, h, w = c.tables
+        assert o.shape[-1] == c.M and h.shape[-1] == c.M
+        assert c.params.B.shape == (N,)
+        j = np.asarray(c.trace.j_idx)
+        assert j.min() >= 0 and j.max() < c.M
+        # and fleet.simulate consumes it unchanged
+        series, final, _ = run_scenario(c, rule=RULE, engine="scan",
+                                        use_kernel=False)
+        assert series["reward"].shape == (sc.T,)
+        assert np.all(np.asarray(series["offloads"])
+                      <= np.asarray(series["tasks"]))
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(KeyError):
+            compile_scenario(Scenario("no_such_kind"))
+
+
+class TestScenarioSemantics:
+    def test_churn_masks_absent_devices(self):
+        sc = Scenario("churn", T=300, N=6, seed=1).with_extra(churn_frac=0.5)
+        c = compile_scenario(sc)
+        j = np.asarray(c.trace.j_idx)
+        arrive, depart = c.meta["arrive"], c.meta["depart"]
+        slots = np.arange(sc.T)[:, None]
+        outside = (slots < arrive[None, :]) | (slots >= depart[None, :])
+        assert np.all(j[outside] == 0)
+        assert j[~outside].max() > 0
+
+    def test_flash_crowd_spikes_load(self):
+        sc = Scenario("flash_crowd", T=400, N=8, seed=2,
+                      task_prob=0.3).with_extra(n_events=2, event_len=50)
+        c = compile_scenario(sc)
+        j = np.asarray(c.trace.j_idx)
+        in_event = np.zeros(sc.T, bool)
+        for s in c.meta["event_starts"]:
+            in_event[s:s + c.meta["event_len"]] = True
+        assert (j[in_event] > 0).mean() > (j[~in_event] > 0).mean() + 0.3
+
+    def test_outage_blocks_offloading(self):
+        sc = Scenario("outage", T=400, N=6, seed=3).with_extra(
+            n_outages=2, outage_len=80)
+        c = compile_scenario(sc)
+        assert c.M == 2 * default_paper_space(num_w=sc.num_w).M
+        series, _, _ = run_scenario(c, rule=RULE, engine="scan",
+                                    use_kernel=False)
+        off = np.asarray(series["offloads"])
+        down = c.meta["down"]
+        assert off[down].sum() == 0
+        assert off[~down].sum() > 0
+
+    def test_heterogeneous_tables_are_per_device(self):
+        c = compile_scenario(_small(Scenario("heterogeneous", seed=4)))
+        o, h, w = c.tables
+        assert o.shape == (6, c.M) and w.shape == (6, c.M)
+        # per-device power scales actually differ across the fleet
+        col = np.asarray(o[:, 1])
+        assert np.unique(col).size > 1
+        # null state stays free for every device
+        assert np.all(np.asarray(o[:, 0]) == 0)
+
+    def test_diurnal_traffic_oscillates(self):
+        sc = Scenario("diurnal", T=800, N=16, seed=5).with_extra(
+            period=200, amp=0.9)
+        c = compile_scenario(sc)
+        tasks = (np.asarray(c.trace.j_idx) > 0).mean(axis=1)
+        # average task rate near the cycle peaks vs troughs must differ
+        phase = np.sin(2 * np.pi * np.arange(sc.T) / 200)
+        assert tasks[phase > 0.7].mean() > tasks[phase < -0.7].mean() + 0.2
+
+    def test_task_mask_feeds_serve_simulator(self):
+        c = compile_scenario(Scenario("flash_crowd", T=120, N=4, seed=6))
+        mask = c.task_mask()
+        assert mask.shape == (120, 4) and mask.dtype == bool
+        assert mask.sum() > 0
+
+
+class TestChunkedKernel:
+    @pytest.mark.parametrize("N,M,T,chunk", [
+        (8, 16, 64, 8), (24, 37, 96, 16), (64, 73, 40, 8)])
+    def test_matches_ref_random_fleet(self, N, M, T, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(N + M), 6)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (M,))
+        h = jax.random.uniform(ks[2], (M,))
+        w = jax.random.uniform(ks[3], (M,)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        lam0 = jax.random.uniform(ks[5], (N,)) * 0.1
+        args = (j, lam0, jnp.float32(0.05), jnp.zeros((N, M)), o, h, w, B,
+                jnp.float32(2.0), 0.4, 0.5)
+        off_k, mu_k, ln_k, lam_k, mufin_k, cnt_k = onalgo_chunked_pallas(
+            *args, chunk=chunk, interpret=True)
+        off_r, mu_r, ln_r, lam_r, mufin_r, cnt_r = onalgo_chunked_ref(*args)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+        np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(lam_k), np.asarray(lam_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ln_k), np.asarray(ln_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
+        assert float(mufin_k) == pytest.approx(float(mufin_r), rel=1e-5)
+
+    def test_per_device_tables(self):
+        N, M, T = 16, 37, 48
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (N, M))
+        h = jax.random.uniform(ks[2], (N, M))
+        w = jax.random.uniform(ks[3], (N, M)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        args = (j, jnp.zeros((N,)), jnp.float32(0.0), jnp.zeros((N, M)),
+                o, h, w, B, jnp.float32(3.0), 0.5, 0.5)
+        out_k = onalgo_chunked_pallas(*args, chunk=8, interpret=True)
+        out_r = onalgo_chunked_ref(*args)
+        np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                      np.asarray(out_r[0]))
+        np.testing.assert_allclose(np.asarray(out_k[3]),
+                                   np.asarray(out_r[3]), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_simulate_chunked_matches_jnp_simulate(self):
+        """The full chunked engine == fleet.simulate, series + final state,
+        including a non-divisible tail (T % chunk != 0)."""
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=203, N=16, seed=7))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((16,), 0.08), H=jnp.float32(7e8))
+        s1, f1 = simulate(trace, tables, params, RULE)
+        s2, f2 = simulate_chunked(trace, tables, params, RULE, chunk=8)
+        assert set(s1) == set(s2)
+        for k in s1:
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-4, atol=1e-6)
+        assert float(f1.mu) == pytest.approx(float(f2.mu), abs=1e-5)
+        np.testing.assert_array_equal(np.asarray(f1.rho.counts),
+                                      np.asarray(f2.rho.counts))
+
+    @pytest.mark.parametrize("kind", ["heterogeneous", "outage", "churn"])
+    def test_chunked_engine_on_scenarios(self, kind):
+        c = compile_scenario(Scenario(kind, T=240, N=8, seed=9))
+        s1, f1, _ = run_scenario(c, rule=RULE, engine="scan",
+                                 use_kernel=False)
+        s2, f2, _ = run_scenario(c, rule=RULE, engine="chunked", chunk=8)
+        for k in ("reward", "power", "load", "offloads", "tasks", "mu"):
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_horizon_shorter_than_chunk(self):
+        """T < chunk must fall back to the jnp tail, not crash on a
+        zero-iteration kernel grid."""
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=5, N=8, seed=8))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((8,), 0.08), H=jnp.float32(4e8))
+        s1, f1 = simulate(trace, tables, params, RULE)
+        s2, f2 = simulate_chunked(trace, tables, params, RULE, chunk=8)
+        for k in s1:
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-6, err_msg=k)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-5, atol=1e-7)
+
+    def test_scan_only_options_pin_auto_to_scan(self):
+        sc = Scenario("stationary", T=60, N=4, seed=10)
+        series, _, _ = run_scenario(sc, engine="auto", with_true_rho=True)
+        assert "f_true" in series
+        with pytest.raises(ValueError):
+            run_scenario(sc, engine="chunked", with_true_rho=True)
+
+    def test_indivisible_chunk_raises(self):
+        with pytest.raises(ValueError):
+            onalgo_chunked_pallas(
+                jnp.zeros((10, 4), jnp.int32), jnp.zeros(4), jnp.float32(0),
+                jnp.zeros((4, 8)), jnp.ones(8), jnp.ones(8), jnp.ones(8),
+                jnp.ones(4), jnp.float32(1), 0.5, 0.5, chunk=8)
+
+
+class TestSweeps:
+    def test_vmapped_sweep_bit_for_bit_vs_loop(self):
+        c = compile_scenario(Scenario("stationary", T=300, N=8, seed=11))
+        grid = product_grid(8, a_values=(0.2, 0.5), beta_values=(0.0, 0.5),
+                            B_values=(0.04, 0.08),
+                            H_values=(c.scenario.H,))
+        assert grid.G == 8
+        sw_series, sw_final = sweep_simulate(c.trace, c.tables, grid)
+        for g in range(grid.G):
+            p = jax.tree.map(lambda x: x[g], grid.params)
+            r = jax.tree.map(lambda x: x[g], grid.rules)
+            s, f = simulate(c.trace, c.tables, p, r)
+            for k in s:
+                np.testing.assert_array_equal(
+                    np.asarray(sw_series[k][g]), np.asarray(s[k]),
+                    err_msg=f"cell {g} series {k}")
+            np.testing.assert_array_equal(np.asarray(sw_final.lam[g]),
+                                          np.asarray(f.lam))
+            np.testing.assert_array_equal(np.asarray(sw_final.mu[g]),
+                                          np.asarray(f.mu))
+
+    def test_grid_from_cells_and_unstack(self):
+        params = OnAlgoParams(B=jnp.full((4,), 0.08), H=jnp.float32(5e8))
+        grid = grid_from_cells([("r1", StepRule.constant(0.02), params),
+                                ("r2", StepRule.inv_sqrt(0.5), params)])
+        assert grid.G == 2 and grid.rules.a.shape == (2,)
+        c = compile_scenario(Scenario("stationary", T=120, N=4, seed=12))
+        series, _ = sweep_simulate(c.trace, c.tables, grid)
+        out = dict(unstack_series(series, grid))
+        assert set(out) == {"r1", "r2"}
+        assert out["r1"]["reward"].shape == (120,)
+
+    def test_mixed_precondition_rejected(self):
+        p1 = OnAlgoParams(B=jnp.ones((4,)), H=jnp.float32(1.0))
+        p2 = OnAlgoParams(B=jnp.ones((4,)), H=jnp.float32(1.0),
+                          precondition=False)
+        with pytest.raises(ValueError):
+            stack_params([p1, p2])
+
+    def test_sweep_with_true_rho_series(self):
+        space = default_paper_space(num_w=4)
+        trace, rho = iid_trace(space, TraceSpec(T=200, N=4, seed=13))
+        grid = product_grid(4, a_values=(0.5,), beta_values=(0.5,),
+                            B_values=(0.08,), H_values=(4 * 1e8,))
+        series, _ = sweep_simulate(trace, space.tables(), grid,
+                                   true_rho=rho, with_true_rho=True)
+        assert series["f_true"].shape == (1, 200)

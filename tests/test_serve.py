@@ -94,6 +94,7 @@ class TestAdmission:
                 < 2.0 * moe.param_count() * 1024)
 
 
+@pytest.mark.slow
 class TestSimulator:
     @pytest.fixture(scope="class")
     def pool(self):
