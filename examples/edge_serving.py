@@ -4,6 +4,11 @@ Reproduces the paper's Sec. VI service on synthetic data: a fleet of camera
 devices with weak local classifiers, a cloudlet with a strong one, a ridge
 gain-predictor, bursty traffic, and the measured power/cycle constants.
 
+Each policy's whole horizon runs as ONE vectorized fleet rollout: the run
+is compiled to the core (Trace, tables, params, overlay) contract
+(serve/compile.py) and scanned by fleet.simulate — not stepped slot by
+slot in Python.
+
     PYTHONPATH=src python examples/edge_serving.py
 """
 
@@ -18,7 +23,7 @@ def main():
 
     print(f"{'policy':8s} {'accuracy':>9s} {'offload%':>9s} "
           f"{'power(mW)':>10s} {'delay(ms)':>10s}")
-    for algo in ("local", "onalgo", "ato", "rco", "ocos"):
+    for algo in ("local", "onalgo", "ato", "rco", "ocos", "cloud"):
         out = simulate_service(
             SimConfig(num_devices=4, T=2000, algo=algo, B_n=0.06,
                       H=2 * 441e6, seed=1), pool)

@@ -45,9 +45,26 @@ def chunked_engine():
           f"max|dlam|={drift:.2e}")
 
 
+def composed_on_tiled_engine():
+    print("== compose(churn, outage) on the device-tiled chunked engine ==")
+    sc = Scenario("churn_outage", T=256, N=48, seed=3).with_extra(
+        churn_frac=0.3, n_outages=2, outage_len=40)
+    s_scan, f_scan, c = run_scenario(sc, engine="scan", use_kernel=False)
+    s_tile, f_tile, _ = run_scenario(sc, engine="chunked", chunk=16,
+                                     block_n=16)
+    down = c.meta["down"]
+    off = np.asarray(s_tile["offloads"])
+    drift = float(np.max(np.abs(np.asarray(f_scan.lam)
+                                - np.asarray(f_tile.lam))))
+    print(f"  M={c.M} (outage-mirrored) | offloads during outages: "
+          f"{off[down].sum():.0f} | outside: {off[~down].sum():.0f} | "
+          f"max|dlam| scan vs tiled={drift:.2e}")
+
+
 if __name__ == "__main__":
     tour_scenarios()
     batched_sweep()
     chunked_engine()
+    composed_on_tiled_engine()
     rule = StepRule.inv_sqrt(0.5)
     print("done", rule.a, rule.beta)

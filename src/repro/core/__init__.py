@@ -14,13 +14,13 @@ from repro.core.state_space import (StateSpace, RhoEstimator,
                                     default_paper_space, empirical_rho)
 from repro.core.onalgo import (OnAlgoParams, OnAlgoState, StepRule,
                                init_state, policy_matrix, decide, step)
-from repro.core.fleet import (Trace, simulate, simulate_chunked,
+from repro.core.fleet import (RawOverlay, Trace, simulate, simulate_chunked,
                               simulate_sharded)
 from repro.core import baselines, extensions, oracle, theory
 
 __all__ = [
     "StateSpace", "RhoEstimator", "default_paper_space", "empirical_rho",
     "OnAlgoParams", "OnAlgoState", "StepRule", "init_state", "policy_matrix",
-    "decide", "step", "Trace", "simulate", "simulate_chunked",
+    "decide", "step", "RawOverlay", "Trace", "simulate", "simulate_chunked",
     "simulate_sharded", "baselines", "extensions", "oracle", "theory",
 ]

@@ -2,7 +2,10 @@
 
 ``simulate`` rolls a (T, N) state-index trace through a policy, producing
 per-slot series (reward, power, load, duals, diagnostics) and the final
-algorithm state.  ``simulate_sharded`` wraps the same slot function in
+algorithm state.  With a ``RawOverlay`` it is also the engine behind the
+end-to-end service simulator (serve/compile.py lowers a SimConfig to the
+``(Trace, tables, params, overlay)`` contract).  ``simulate_sharded``
+wraps the same slot function in
 ``shard_map`` over the mesh ``data`` axis — devices are sharded, lambda is
 shard-local, and the single mu/psum is the only cross-shard communication,
 mirroring the paper's device<->cloudlet protocol.
@@ -51,6 +54,32 @@ def _lookup(tab, j):
     return jax.vmap(lambda row, idx: row[idx])(tab, j)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RawOverlay:
+    """Raw (unquantized) per-slot values riding alongside a quantized Trace.
+
+    The service tier observes RAW values each slot — channel-dependent power,
+    image-size cycles, predictor gains — and only the running distribution
+    rho uses the quantized state index.  Compiling a service run
+    (serve/compile.py) pre-samples these into (T, N) arrays so the fleet
+    engine can reproduce the end-to-end simulator's accounting exactly:
+    decisions and series use the raw values, rho uses ``trace.j_idx``.
+
+    o / h / w: (T, N) float32 observed power (W), cloudlet cycles, and
+      risk-adjusted predicted gain.
+    correct_local / correct_cloud: (T, N) float32 — whether the local /
+      cloudlet classifier got this slot's sampled image right (drives the
+      service accuracy series).
+    """
+
+    o: jax.Array
+    h: jax.Array
+    w: jax.Array
+    correct_local: jax.Array
+    correct_cloud: jax.Array
+
+
 @partial(jax.jit,
          static_argnames=("algo", "enforce_slot_capacity", "use_kernel",
                           "with_true_rho"))
@@ -63,7 +92,8 @@ def simulate(trace: Trace,
              enforce_slot_capacity: bool = False,
              use_kernel: bool = False,
              true_rho: Optional[jax.Array] = None,
-             with_true_rho: bool = False):
+             with_true_rho: bool = False,
+             overlay: Optional[RawOverlay] = None):
     """Roll a trace through a policy.
 
     Returns (series dict of (T,) arrays, final_state).  Accounting:
@@ -75,6 +105,15 @@ def simulate(trace: Trace,
       * with ``with_true_rho`` (requires true_rho) the series include
         f(y_t)/g(y_t) evaluated under the TRUE distribution — the quantities
         bounded by Theorem 1.
+      * with ``overlay`` (service tier) the per-slot values o/h/w come from
+        the raw arrays instead of table lookups — exactly what a device
+        observes — and the series gain ``correct``: per-slot count of tasks
+        whose final classification (cloudlet if admitted, local otherwise)
+        was right.
+
+    ``algo`` covers OnAlgo, the paper's three baselines, and the service
+    tier's two degenerate policies: ``local`` (never offload) and ``cloud``
+    (offload every task, cloudlet admission permitting).
     """
     o_tab, h_tab, w_tab = tables
     T, N = trace.j_idx.shape
@@ -87,18 +126,27 @@ def simulate(trace: Trace,
     elif algo == "rco":
         algo_state = bl.RCOState(energy=jnp.zeros((N,), jnp.float32),
                                  t=jnp.zeros((), jnp.int32))
-    elif algo == "ocos":
+    elif algo in ("ocos", "local", "cloud"):
         algo_state = bl.OCOSState()
     else:
         raise ValueError(f"unknown algo {algo!r}")
 
+    if overlay is None:
+        xs = (trace.j_idx, trace.d_local)
+    else:
+        xs = (trace.j_idx, trace.d_local, overlay.o, overlay.h, overlay.w,
+              overlay.correct_local, overlay.correct_cloud)
+
     def slot(carry, xs):
         state = carry
-        j, d_loc = xs
+        if overlay is None:
+            j, d_loc = xs
+            o_now = _lookup(o_tab, j)
+            h_now = _lookup(h_tab, j)
+            w_now = _lookup(w_tab, j)
+        else:
+            j, d_loc, o_now, h_now, w_now, c_loc, c_cloud = xs
         task = j > 0
-        o_now = _lookup(o_tab, j)
-        h_now = _lookup(h_tab, j)
-        w_now = _lookup(w_tab, j)
 
         if algo == "onalgo":
             state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
@@ -115,7 +163,11 @@ def simulate(trace: Trace,
             state, offload = bl.rco_step(state, o_now, params.B, task)
             lam_norm = jnp.float32(0.0)
             mu = jnp.float32(0.0)
-        else:  # ocos
+        elif algo == "local":
+            offload = jnp.zeros_like(task)
+            lam_norm = jnp.float32(0.0)
+            mu = jnp.float32(0.0)
+        else:  # ocos / cloud: offload every task
             state, offload = bl.ocos_step(state, task)
             lam_norm = jnp.float32(0.0)
             mu = jnp.float32(0.0)
@@ -139,6 +191,11 @@ def simulate(trace: Trace,
             "lam_norm": lam_norm,
             "mu": mu,
         }
+        if overlay is not None:
+            # final classification: cloudlet result if admitted, local else
+            out["correct"] = jnp.sum(
+                jnp.where(admitted, c_cloud, c_loc)
+                * task.astype(jnp.float32))
         if with_true_rho:
             # All Theorem-1 quantities live in the (optionally) preconditioned
             # constraint space — the space the duals are updated in.
@@ -171,22 +228,32 @@ def simulate(trace: Trace,
             out["lam_delta"] = jnp.sum(lam_ * d_pow) + mu_ * d_cap
         return state, out
 
-    final_state, series = jax.lax.scan(slot, algo_state,
-                                       (trace.j_idx, trace.d_local))
+    final_state, series = jax.lax.scan(slot, algo_state, xs)
     return series, final_state
 
 
-@partial(jax.jit, static_argnames=("chunk",))
+@partial(jax.jit, static_argnames=("chunk", "block_n",
+                                   "enforce_slot_capacity"))
 def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
-                     rule: StepRule, chunk: int = 8):
-    """OnAlgo rollout through the time-chunked Pallas kernel.
+                     rule: StepRule, chunk: int = 8,
+                     block_n: Optional[int] = None,
+                     enforce_slot_capacity: bool = False):
+    """OnAlgo rollout through the fused whole-simulation Pallas kernels.
 
     Equivalent to ``simulate(..., algo="onalgo")`` (same series keys, same
     final state) but the whole horizon runs as ONE fused kernel: ``chunk``
-    slots of rho-update + threshold policy + dual ascent per grid step,
-    with the value tables and algorithm state resident in VMEM throughout
-    (see kernels/onalgo_step.py).  A non-divisible tail of
-    ``T mod chunk`` slots is finished by the jnp slot step.
+    slots of rho-update + threshold policy + dual ascent per grid step
+    (see kernels/onalgo_step.py).  A non-divisible tail of ``T mod chunk``
+    slots is finished by the jnp slot step.
+
+    block_n: None keeps the whole fleet's tables/state VMEM-resident (the
+      time-chunked kernel, N*M-bounded); an int routes through the
+      device-tiled kernel — block_n devices per tile, O(block_n * M) VMEM —
+      so arbitrarily large fleets run chunked too.
+    enforce_slot_capacity: apply the paper's per-slot cloudlet admission
+      rule as a vmapped post-pass over the offload matrix, so reward / load
+      / admits match ``simulate(..., enforce_slot_capacity=True)``.  The
+      dual dynamics are untouched (they live on the average constraint).
     """
     from repro.kernels import ops as kops
 
@@ -203,7 +270,9 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     mu = jnp.float32(0.0)
     counts = jnp.zeros((N, M), jnp.float32)
     if T_main:
-        off, mu_seq, lnorm, lam, mu, counts = kops.onalgo_chunked(
+        kern = (kops.onalgo_chunked if block_n is None
+                else partial(kops.onalgo_tiled, block_n=block_n))
+        off, mu_seq, lnorm, lam, mu, counts = kern(
             j_seq[:T_main], lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
             rule.a, rule.beta, chunk=chunk)
     else:  # whole horizon shorter than one chunk: jnp tail does it all
@@ -239,13 +308,19 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     h_seq = lookup_t(h_tab, j_seq)
     w_seq = lookup_t(w_tab, j_seq)
     off_f = off.astype(jnp.float32)
+    if enforce_slot_capacity:
+        admitted = jax.vmap(bl.admit_by_capacity,
+                            in_axes=(0, 0, None))(off, h_seq, params.H)
+    else:
+        admitted = off
+    adm_f = admitted.astype(jnp.float32)
     series = {
-        "reward": jnp.sum(w_seq * off_f, axis=1),
+        "reward": jnp.sum(w_seq * adm_f, axis=1),
         "power": jnp.sum(o_seq * off_f, axis=1),
         "power_per_dev": jnp.mean(o_seq * off_f, axis=1),
-        "load": jnp.sum(h_seq * off_f, axis=1),
+        "load": jnp.sum(h_seq * adm_f, axis=1),
         "offloads": jnp.sum(off_f, axis=1),
-        "admits": jnp.sum(off_f, axis=1),
+        "admits": jnp.sum(adm_f, axis=1),
         "tasks": jnp.sum((j_seq > 0).astype(jnp.float32), axis=1),
         "lam_norm": lnorm,
         "mu": mu_seq,

@@ -174,6 +174,36 @@ def _onalgo_chunked_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
     counts_ref[...] = counts
 
 
+def _pad_fleet(j_seq, lam0, counts0, o_tab, h_tab, w_tab, B, *, n_mult):
+    """Shared padding for the whole-simulation kernels.
+
+    States pad to the lane multiple (128) with inert w = 0 columns; devices
+    pad to ``n_mult`` rows with B = o = h = w = 0 (their duals provably stay
+    0 and they contribute nothing to any reduction).  Padded devices sit in
+    the null state.  Returns the padded operands plus (Np, Mp).
+    """
+    T, N = j_seq.shape
+    M = counts0.shape[-1]
+    o = jnp.broadcast_to(o_tab, (N, M)).astype(jnp.float32)
+    h = jnp.broadcast_to(h_tab, (N, M)).astype(jnp.float32)
+    w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
+
+    M_pad = -M % 128
+    N_pad = -N % n_mult
+    if M_pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, M_pad)))
+        o, h, w = z(o), z(h), z(w)
+        counts0 = jnp.pad(counts0, ((0, 0), (0, M_pad)))
+    if N_pad:
+        zn = lambda x: jnp.pad(x, ((0, N_pad), (0, 0)))
+        o, h, w, counts0 = zn(o), zn(h), zn(w), zn(counts0)
+    lam_p = jnp.pad(lam0.astype(jnp.float32), (0, N_pad))[:, None]
+    B_p = jnp.pad(jnp.broadcast_to(B, (N,)).astype(jnp.float32),
+                  (0, N_pad))[:, None]
+    j_p = jnp.pad(j_seq.astype(jnp.int32), ((0, 0), (0, N_pad)))
+    return j_p, lam_p, counts0, o, h, w, B_p, o.shape
+
+
 def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                           B, H, a, beta, *, chunk=8, t0=0, interpret=True):
     """Fused T-slot OnAlgo rollout (matches kernels/ref.onalgo_chunked_ref).
@@ -193,26 +223,9 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
         raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
     K = T // chunk
     M = counts0.shape[-1]
-    o = jnp.broadcast_to(o_tab, (N, M)).astype(jnp.float32)
-    h = jnp.broadcast_to(h_tab, (N, M)).astype(jnp.float32)
-    w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
-
-    M_pad = -M % 128
-    N_pad = -N % 8
-    if M_pad:
-        z = lambda x: jnp.pad(x, ((0, 0), (0, M_pad)))
-        o, h, w = z(o), z(h), z(w)
-        counts0 = jnp.pad(counts0, ((0, 0), (0, M_pad)))
-    if N_pad:
-        zn = lambda x: jnp.pad(x, ((0, N_pad), (0, 0)))
-        o, h, w, counts0 = zn(o), zn(h), zn(w), zn(counts0)
-    Np, Mp = o.shape
-    lam_p = jnp.pad(lam0.astype(jnp.float32), (0, N_pad))[:, None]
-    B_p = jnp.pad(jnp.broadcast_to(B, (N,)).astype(jnp.float32),
-                  (0, N_pad))[:, None]
-    # padded devices always sit in the null state
-    j_kc = jnp.pad(j_seq.astype(jnp.int32), ((0, 0), (0, N_pad)))
-    j_kc = j_kc.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
+    j_p, lam_p, counts0, o, h, w, B_p, (Np, Mp) = _pad_fleet(
+        j_seq, lam0, counts0, o_tab, h_tab, w_tab, B, n_mult=8)
+    j_kc = j_p.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
     mu_arr = jnp.full((1, 1), mu0, jnp.float32)
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
                       jnp.float32(H)]).reshape(1, 3)
@@ -247,6 +260,192 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             jax.ShapeDtypeStruct((Np, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
             jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(j_kc, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+
+    offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
+    return (offload, mu_seq.reshape(T), lnorm.reshape(T),
+            lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])
+
+
+# ---------------------------------------------------------------------------
+# Device-tiled chunked kernel.
+#
+# The time-chunked kernel above keeps the WHOLE fleet's tables and state
+# resident in VMEM, which caps it at N*M <~ 2^19 per core.  This variant
+# removes the cap: the grid is (K chunks, C slots, n_tiles device tiles)
+# and only one (block_n, M) tile of the tables/state is resident per grid
+# step, so VMEM use is O(block_n * M) regardless of fleet size.
+#
+# The cloudlet dual mu couples every device each slot (g_cap sums the load
+# over the full fleet), so slots cannot be decoupled across tiles.  Each
+# slot therefore runs as a two-phase tile sweep:
+#   phase 1 (every tile): rho update, realized decision, tile-local lambda
+#     dual ascent, and the tile's PARTIAL load sum, accumulated into a
+#     persistent scalar accumulator;
+#   phase 2 (last tile of the slot): the mu reduction — g_cap from the
+#     accumulated load, one dual-ascent step on mu, and the ||(lam, mu)||
+#     series entry from the accumulated lambda norms.
+# mu lives in a constant-index output block (VMEM-resident for the whole
+# kernel) so phase 2's update is visible to every tile of the next slot.
+#
+# Per-tile state (lam, counts) lives in output blocks revisited every
+# n_tiles grid steps: the pipeline flushes a tile's block to HBM when the
+# sweep moves on and re-fetches it on revisit, i.e. the state *streams*
+# through VMEM instead of residing there.  The grid must execute in order
+# (slot-major, tiles minor) — the default sequential TPU grid traversal —
+# and per-slot HBM traffic is ~5 (N, M) tile streams, the same bytes the
+# jnp scan path pays, but fused into one pass with zero per-slot launches.
+# ---------------------------------------------------------------------------
+
+
+def _onalgo_tiled_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
+                         mu0_ref, counts0_ref, scal_ref,
+                         off_ref, museq_ref, lnorm_ref,
+                         lam_ref, mu_ref, counts_ref,
+                         load_acc, lam2_acc, *, chunk, n_tiles, t0):
+    k = pl.program_id(0)
+    c = pl.program_id(1)
+    i = pl.program_id(2)
+    first_slot = (k == 0) & (c == 0)
+
+    @pl.when(first_slot)
+    def _init_tile():  # each tile's first visit seeds its own state block
+        lam_ref[...] = lam0_ref[...]
+        counts_ref[...] = counts0_ref[...]
+
+    @pl.when(first_slot & (i == 0))
+    def _init_mu():
+        mu_ref[...] = mu0_ref[...]
+
+    o = o_ref[...].astype(jnp.float32)  # (bn, M)
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    B = b_ref[...].astype(jnp.float32)  # (bn, 1)
+    a = scal_ref[0, 0]
+    beta = scal_ref[0, 1]
+    H = scal_ref[0, 2]
+    col = jax.lax.broadcasted_iota(jnp.int32, o.shape, 1)
+
+    # --- phase 1: tile-local slot step under (lam_tile, mu_t)
+    j_col = j_ref[0]  # (bn, 1) int32
+    onehot = (col == j_col).astype(jnp.float32)
+    counts = counts_ref[...] + onehot
+    counts_ref[...] = counts
+    t = k * chunk + (c + 1 + t0)
+    tf = jnp.maximum(t, 1).astype(jnp.float32)
+    rho = counts * (1.0 / tf)
+
+    lam = lam_ref[...]  # (bn, 1)
+    mu = mu_ref[0, 0]  # mu_t: written by the previous slot's phase 2
+
+    o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (bn, 1)
+    h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
+    w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
+    off = (lam * o_now + mu * h_now < w_now) & (w_now > 0)
+    off_ref[0] = off.astype(jnp.float32)
+
+    price = lam * o + mu * h
+    y = jnp.where((price < w) & (w > 0), 1.0, 0.0)
+    ry = rho * y
+    g_pow = jnp.sum(o * ry, axis=1, keepdims=True) - B  # (bn, 1)
+    a_t = a / tf**beta
+    lam_new = jnp.maximum(lam + a_t * g_pow, 0.0)
+    lam_ref[...] = lam_new
+
+    @pl.when(i == 0)
+    def _reset_acc():
+        load_acc[0, 0] = 0.0
+        lam2_acc[0, 0] = 0.0
+    load_acc[0, 0] += jnp.sum(h * ry)
+    lam2_acc[0, 0] += jnp.sum(lam_new * lam_new)
+
+    # --- phase 2: mu reduction, once the last tile's partials are in
+    @pl.when(i == n_tiles - 1)
+    def _mu_reduce():
+        g_cap = load_acc[0, 0] - H
+        mu_new = jnp.maximum(mu + a_t * g_cap, 0.0)
+        mu_ref[0, 0] = mu_new
+        museq_ref[0, 0] = mu_new
+        lnorm_ref[0, 0] = jnp.sqrt(lam2_acc[0, 0] + mu_new * mu_new)
+
+
+def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
+                        B, H, a, beta, *, chunk=8, block_n=256, t0=0,
+                        interpret=True):
+    """Device-tiled fused OnAlgo rollout — same contract and results as
+    ``onalgo_chunked_pallas`` (and ``kernels/ref.onalgo_chunked_ref``), but
+    VMEM use is O(block_n * M) instead of O(N * M): fleets of any size run
+    chunked without sharding first.
+
+    block_n: devices per tile (multiple of 8); N is padded to it with inert
+      zero-value rows.  See the module comment above for the two-phase mu
+      sync that keeps the rollout bit-equivalent to the sequential oracle.
+    """
+    T, N = j_seq.shape
+    if T % chunk != 0:
+        raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
+    if block_n % 8 != 0:
+        raise ValueError(f"block_n={block_n} must be a multiple of 8")
+    K = T // chunk
+    M = counts0.shape[-1]
+    j_p, lam_p, counts0, o, h, w, B_p, (Np, Mp) = _pad_fleet(
+        j_seq, lam0, counts0, o_tab, h_tab, w_tab, B, n_mult=block_n)
+    n_tiles = Np // block_n
+    if not interpret and n_tiles > 1:
+        # Multi-tile state streaming relies on the pipeline re-fetching
+        # lam/counts output blocks on revisit (every n_tiles steps).  The
+        # interpreter guarantees that; Mosaic's native pipelining has not
+        # been validated on hardware yet (see ROADMAP), where a stale
+        # double-buffered block would silently corrupt the rollout.
+        import warnings
+        warnings.warn(
+            "onalgo_tiled_pallas: native TPU lowering with n_tiles > 1 is "
+            "pending hardware validation of revisited-output-block "
+            "streaming; verify against onalgo_chunked_ref before trusting "
+            "results (REPRO_KERNEL_INTERPRET=1 forces the validated "
+            "interpreter).", stacklevel=2)
+    j_kc = j_p.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
+    mu_arr = jnp.full((1, 1), mu0, jnp.float32)
+    scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
+                      jnp.float32(H)]).reshape(1, 3)
+
+    kern = functools.partial(_onalgo_tiled_kernel, chunk=chunk,
+                             n_tiles=n_tiles, t0=t0)
+    off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
+        kern,
+        grid=(K, chunk, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
+            pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
+            pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda k, c, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
+            pl.BlockSpec((1, 1), lambda k, c, i: (k, c)),
+            pl.BlockSpec((1, 1), lambda k, c, i: (k, c)),
+            pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
+            pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, Np, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
     )(j_kc, o, h, w, B_p, lam_p, mu_arr, counts0, scal)

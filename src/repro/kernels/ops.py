@@ -59,6 +59,18 @@ def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                                  interpret=interpret_mode())
 
 
+@partial(jax.jit, static_argnames=("chunk", "block_n", "t0"))
+def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
+                 a, beta, *, chunk=8, block_n=256, t0=0):
+    """Device-tiled fused rollout (see onalgo_step.onalgo_tiled_pallas):
+    same results as ``onalgo_chunked`` with O(block_n * M) VMEM."""
+    from repro.kernels.onalgo_step import onalgo_tiled_pallas
+    return onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
+                               w_tab, B, H, a, beta, chunk=chunk,
+                               block_n=block_n, t0=t0,
+                               interpret=interpret_mode())
+
+
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
     from repro.kernels.flash_attention import flash_attention_pallas

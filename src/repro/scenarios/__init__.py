@@ -1,9 +1,10 @@
 """Scenario engine: declarative fleet workloads + batched sweeps.
 
 Public API:
-  Scenario, CompiledScenario            (spec)
-  register, names, compile_scenario,
-  default_scenarios, SCENARIO_KINDS     (registry)
+  Scenario, CompiledScenario, compose   (spec)
+  register, register_modifier, names,
+  compile_scenario, default_scenarios,
+  SCENARIO_KINDS, MODIFIERS             (registry)
   SweepGrid, product_grid, grid_from_cells,
   stack_rules, stack_params,
   sweep_simulate, unstack_series        (sweeps)
@@ -11,9 +12,10 @@ Public API:
   resolve_engine, resolve_use_kernel    (runner)
 """
 
-from repro.scenarios.spec import CompiledScenario, Scenario
-from repro.scenarios.registry import (SCENARIO_KINDS, compile_scenario,
-                                      default_scenarios, names, register)
+from repro.scenarios.spec import CompiledScenario, Scenario, compose
+from repro.scenarios.registry import (MODIFIERS, SCENARIO_KINDS,
+                                      compile_scenario, default_scenarios,
+                                      names, register, register_modifier)
 from repro.scenarios.sweeps import (SweepGrid, grid_from_cells, product_grid,
                                     stack_params, stack_rules,
                                     sweep_simulate, unstack_series)
@@ -21,8 +23,9 @@ from repro.scenarios.runner import (resolve_engine, resolve_use_kernel,
                                     run_all_scenarios, run_scenario)
 
 __all__ = [
-    "Scenario", "CompiledScenario", "SCENARIO_KINDS", "compile_scenario",
-    "default_scenarios", "names", "register", "SweepGrid", "grid_from_cells",
+    "Scenario", "CompiledScenario", "compose", "MODIFIERS", "SCENARIO_KINDS",
+    "compile_scenario", "default_scenarios", "names", "register",
+    "register_modifier", "SweepGrid", "grid_from_cells",
     "product_grid", "stack_params", "stack_rules", "sweep_simulate",
     "unstack_series", "resolve_engine", "resolve_use_kernel",
     "run_all_scenarios", "run_scenario",

@@ -4,10 +4,16 @@ Each generator is a function ``Scenario -> CompiledScenario`` registered under
 its ``kind`` name.  All generators are host-side (numpy RNG, mirroring
 ``repro.data.traces``) and lower to the core ``(Trace, tables, params)``
 contract; jit'd simulation consumes the result unchanged.
+
+Kinds that act as pure transforms on an already-compiled scenario (churn
+masks activity windows, outage mirrors the state space) are additionally
+registered as *modifiers*, which ``spec.compose`` layers onto any base kind
+— e.g. the registered ``churn_outage`` kind is churn composed with outage.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List
 
 import jax.numpy as jnp
@@ -18,11 +24,20 @@ from repro.data.traces import TraceSpec, bursty_trace, iid_trace
 from repro.scenarios.spec import CompiledScenario, Scenario, scenario_space
 
 SCENARIO_KINDS: Dict[str, Callable[[Scenario], CompiledScenario]] = {}
+MODIFIERS: Dict[
+    str, Callable[[Scenario, CompiledScenario], CompiledScenario]] = {}
 
 
 def register(kind: str):
     def deco(fn):
         SCENARIO_KINDS[kind] = fn
+        return fn
+    return deco
+
+
+def register_modifier(kind: str):
+    def deco(fn):
+        MODIFIERS[kind] = fn
         return fn
     return deco
 
@@ -50,6 +65,8 @@ def default_scenarios() -> List[Scenario]:
                                                    event_len=60),
         Scenario("heterogeneous", **base).with_extra(o_spread=0.5),
         Scenario("outage", **base).with_extra(n_outages=2, outage_len=200),
+        Scenario("churn_outage", **base).with_extra(
+            churn_frac=0.3, n_outages=2, outage_len=150),
     ]
 
 
@@ -121,31 +138,39 @@ def _diurnal(sc: Scenario) -> CompiledScenario:
                             meta={"period": period, "amp": amp})
 
 
-@register("churn")
-def _churn(sc: Scenario) -> CompiledScenario:
-    """Device arrivals/departures via the task mask (null state).
+@register_modifier("churn")
+def _mod_churn(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
+    """Mask device activity windows onto an already-compiled scenario.
 
     Device n joins the fleet at ``arrive[n]`` and leaves at ``depart[n]``;
     outside its window it sits in the null state, so it generates no tasks
     and contributes nothing to the constraints — exactly how an absent
-    device looks to the cloudlet.
+    device looks to the cloudlet.  Invalidates any analytic true_rho.
     """
     churn_frac = float(sc.opt("churn_frac", 0.4))
-    space = scenario_space(sc)
-    trace, rho = iid_trace(space, _trace_spec(sc))
     rng = np.random.default_rng(sc.seed + 1)
-    T, N = sc.T, sc.N
+    T, N = base.trace.j_idx.shape
     span = max(int(T * churn_frac), 1)
     arrive = rng.integers(0, span, N)
     depart = T - rng.integers(0, span, N)
     slots = np.arange(T)[:, None]
     active = (slots >= arrive[None, :]) & (slots < depart[None, :])
-    j = np.where(active, np.asarray(trace.j_idx), 0)
-    d = np.where(active, np.asarray(trace.d_local), 0.0)
+    j = np.where(active, np.asarray(base.trace.j_idx), 0)
+    d = np.where(active, np.asarray(base.trace.d_local), 0.0)
     trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
                   d_local=jnp.asarray(d, jnp.float32))
-    return CompiledScenario(sc, trace, space.tables(), sc.params(),
-                            meta={"arrive": arrive, "depart": depart})
+    meta = dict(base.meta, arrive=arrive, depart=depart)
+    return CompiledScenario(base.scenario, trace, base.tables, base.params,
+                            meta=meta)
+
+
+@register("churn")
+def _churn(sc: Scenario) -> CompiledScenario:
+    """Device arrivals/departures over IID traffic (see ``_mod_churn``)."""
+    space = scenario_space(sc)
+    trace, _ = iid_trace(space, _trace_spec(sc))
+    base = CompiledScenario(sc, trace, space.tables(), sc.params())
+    return _mod_churn(sc, base)
 
 
 @register("flash_crowd")
@@ -212,39 +237,62 @@ def _heterogeneous(sc: Scenario) -> CompiledScenario:
                             meta={"o_scale": o_scale, "w_scale": w_scale})
 
 
-@register("outage")
-def _outage(sc: Scenario) -> CompiledScenario:
-    """Cloudlet capacity outages via mirrored w=0 states.
+@register_modifier("outage")
+def _mod_outage(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
+    """Mirror w=0 down-states onto an already-compiled scenario.
 
     The state space is doubled: states [M, 2M) copy (o, h) but zero the
     gain w.  During an outage window every task state j is remapped to
     j + M, so the threshold rule (which requires w > 0) provably never
     offloads — the cloudlet being down costs zero accuracy gain — while
-    rho keeps tracking the full process.  Tables stay shared (M',), so the
-    contract is untouched.
+    rho keeps tracking the full process.  Concatenating along the state
+    axis keeps both shared (M,) and per-device (N, M) table layouts on
+    the contract untouched.
     """
     n_outages = int(sc.opt("n_outages", 2))
     outage_len = int(sc.opt("outage_len", 200))
-    space = scenario_space(sc)
-    trace, _ = iid_trace(space, _trace_spec(sc))
     rng = np.random.default_rng(sc.seed + 4)
-    T = sc.T
-    M = space.M
+    T = base.trace.j_idx.shape[0]
+    M = base.M
 
     starts = np.sort(rng.integers(0, max(T - outage_len, 1), n_outages))
     down = np.zeros(T, bool)
     for s in starts:
         down[s:s + outage_len] = True
 
-    o_tab, h_tab, w_tab = space.tables()
-    o2 = jnp.concatenate([o_tab, o_tab])
-    h2 = jnp.concatenate([h_tab, h_tab])
-    w2 = jnp.concatenate([w_tab, jnp.zeros_like(w_tab)])
+    o_tab, h_tab, w_tab = base.tables
+    o2 = jnp.concatenate([o_tab, o_tab], axis=-1)
+    h2 = jnp.concatenate([h_tab, h_tab], axis=-1)
+    w2 = jnp.concatenate([w_tab, jnp.zeros_like(w_tab)], axis=-1)
 
-    j = np.asarray(trace.j_idx)
+    j = np.asarray(base.trace.j_idx)
     j = np.where(down[:, None] & (j > 0), j + M, j)
-    trace = Trace(j_idx=jnp.asarray(j, jnp.int32), d_local=trace.d_local)
-    return CompiledScenario(sc, trace, (o2, h2, w2), sc.params(),
-                            meta={"outage_starts": starts,
-                                  "outage_len": outage_len,
-                                  "down": down})
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=base.trace.d_local)
+    meta = dict(base.meta, outage_starts=starts, outage_len=outage_len,
+                down=down)
+    return CompiledScenario(base.scenario, trace, (o2, h2, w2), base.params,
+                            meta=meta)
+
+
+@register("outage")
+def _outage(sc: Scenario) -> CompiledScenario:
+    """Cloudlet capacity outages over IID traffic (see ``_mod_outage``)."""
+    space = scenario_space(sc)
+    trace, _ = iid_trace(space, _trace_spec(sc))
+    base = CompiledScenario(sc, trace, space.tables(), sc.params())
+    return _mod_outage(sc, base)
+
+
+@register("churn_outage")
+def _churn_outage(sc: Scenario) -> CompiledScenario:
+    """Composed scenario: device churn layered with cloudlet outages.
+
+    Built with ``spec.compose`` — churn's activity mask and outage's
+    mirrored down-states stack because both act purely through the
+    ``(Trace, tables, params)`` contract.
+    """
+    from repro.scenarios.spec import compose
+    c = compose(dataclasses.replace(sc, kind="churn"),
+                dataclasses.replace(sc, kind="outage"))
+    return dataclasses.replace(c, scenario=sc)

@@ -2,8 +2,9 @@
 
 Engines:
   * ``scan``    — ``fleet.simulate`` (per-slot scan; any algo / baseline).
-  * ``chunked`` — ``fleet.simulate_chunked`` (the fused time-chunked Pallas
-                  kernel; OnAlgo only).
+  * ``chunked`` — ``fleet.simulate_chunked`` (the fused whole-simulation
+                  Pallas kernels: time-chunked, or device-tiled when
+                  ``block_n`` is set; OnAlgo only).
   * ``auto``    — ``chunked`` when the kernels lower natively (TPU),
                   ``scan`` under the interpreter (CPU/CI), where a Python
                   interpreter pass per chunk would dominate.
@@ -47,10 +48,13 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
                  engine: str = "auto",
                  use_kernel: Union[bool, str] = "auto",
                  chunk: int = 8,
+                 block_n: Optional[int] = None,
                  with_true_rho: bool = False,
                  enforce_slot_capacity: bool = False):
     """Compile (if needed) and simulate one scenario.
 
+    ``block_n`` routes the chunked engine through the device-tiled kernel
+    (that many devices per tile; None = whole-fleet VMEM residency).
     Returns (series, final_state, CompiledScenario).
     """
     if isinstance(sc, str):
@@ -60,8 +64,7 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
     rule = rule if rule is not None else StepRule.inv_sqrt(0.5)
     # scan-only options pin 'auto' to the scan engine on every platform;
     # an EXPLICIT engine='chunked' with these still raises below.
-    if engine == "auto" and (algo != "onalgo" or with_true_rho
-                             or enforce_slot_capacity):
+    if engine == "auto" and (algo != "onalgo" or with_true_rho):
         engine = "scan"
     else:
         engine = resolve_engine(engine)
@@ -70,12 +73,14 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
         if algo != "onalgo":
             raise ValueError("the chunked engine only rolls OnAlgo; use "
                              f"engine='scan' for algo={algo!r}")
-        if with_true_rho or enforce_slot_capacity:
+        if with_true_rho:
             raise ValueError(
-                "the chunked engine does not support with_true_rho / "
-                "enforce_slot_capacity; use engine='scan' for those series")
-        series, final = simulate_chunked(sc.trace, sc.tables, sc.params,
-                                         rule, chunk=chunk)
+                "the chunked engine does not support with_true_rho; use "
+                "engine='scan' for the Theorem-1 series")
+        series, final = simulate_chunked(
+            sc.trace, sc.tables, sc.params, rule, chunk=chunk,
+            block_n=block_n,
+            enforce_slot_capacity=enforce_slot_capacity)
     else:
         kw = {}
         if with_true_rho:

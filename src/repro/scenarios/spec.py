@@ -130,3 +130,27 @@ class CompiledScenario:
 def scenario_space(sc: Scenario) -> StateSpace:
     from repro.core.state_space import default_paper_space
     return default_paper_space(num_w=sc.num_w)
+
+
+def compose(spec_a: Scenario, spec_b: Scenario) -> CompiledScenario:
+    """Layer scenario ``spec_b`` on top of compiled ``spec_a``.
+
+    ``spec_a`` can be any registered kind; ``spec_b.kind`` must have a
+    registered *modifier* (a pure transform on a CompiledScenario — e.g.
+    ``churn`` masks device activity windows, ``outage`` mirrors the state
+    space with w = 0 down-states).  Because modifiers act through the
+    ``(Trace, tables, params)`` contract, compositions run on every engine
+    (scan, chunked/tiled, sharded, the batched service tier) unchanged.
+
+    Both specs must describe the same (T, N) fleet.  Returns the composed
+    CompiledScenario; ``meta`` merges both generators' diagnostics.
+    """
+    from repro.scenarios.registry import MODIFIERS, compile_scenario
+    if (spec_a.T, spec_a.N) != (spec_b.T, spec_b.N):
+        raise ValueError(
+            f"cannot compose different fleets: {(spec_a.T, spec_a.N)} vs "
+            f"{(spec_b.T, spec_b.N)}")
+    if spec_b.kind not in MODIFIERS:
+        raise KeyError(f"scenario kind {spec_b.kind!r} has no registered "
+                       f"modifier; composable: {sorted(MODIFIERS)}")
+    return MODIFIERS[spec_b.kind](spec_b, compile_scenario(spec_a))

@@ -1,2 +1,4 @@
 # Serving substrate: engine (prefill/decode/classify), batcher, OnAlgo-gated
-# admission control, end-to-end edge-serving simulator.
+# admission control, end-to-end edge-serving simulator, and the compile
+# layer that lowers a service run to the vectorized fleet-engine contract
+# (compile.py: SimConfig + pool -> Trace/tables/params + RawOverlay).

@@ -12,7 +12,7 @@ FLOP/s budget per slot.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -22,6 +22,47 @@ import numpy as np
 from repro.core import onalgo
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
+
+
+@lru_cache(maxsize=None)
+def _space_levels(space: StateSpace):
+    """Per-space jnp level arrays, built once (StateSpace is frozen)."""
+    return (jnp.asarray(space.o_levels, jnp.float32),
+            jnp.asarray(space.h_levels, jnp.float32),
+            jnp.asarray(space.w_levels, jnp.float32))
+
+
+@jax.jit
+def _nearest_levels(o, h, w, o_lv, h_lv, w_lv):
+    """Fused nearest-level argmins, any batch shape; compile is keyed on
+    shapes/dtypes only (no static args), so pool-calibrated spaces that
+    differ only in level values share one XLA program."""
+    io = jnp.argmin(jnp.abs(o[..., None] - o_lv), axis=-1)
+    ih = jnp.argmin(jnp.abs(h[..., None] - h_lv), axis=-1)
+    iw = jnp.argmin(jnp.abs(w[..., None] - w_lv), axis=-1)
+    return io, ih, iw
+
+
+def quantize_states(space: StateSpace, o, h, w, task_mask) -> np.ndarray:
+    """Map raw (o, h, w) values to nearest state indices (0 = no task).
+
+    Accepts any matching batch shape — (N,) for one controller slot,
+    (T, N) for a whole compiled service horizon — in one jitted
+    nearest-level kernel; the null-aware flat encode stays with
+    ``StateSpace.encode``, the single source of truth for the state
+    layout the value tables use.  Ties break to the first level, like
+    the numpy argmin this replaces; distances are computed in float32,
+    so values within a float32 ulp of a level midpoint may round
+    differently than the old float64 host path.
+    """
+    o_lv, h_lv, w_lv = _space_levels(space)
+    io, ih, iw = _nearest_levels(jnp.asarray(o, jnp.float32),
+                                 jnp.asarray(h, jnp.float32),
+                                 jnp.asarray(w, jnp.float32),
+                                 o_lv, h_lv, w_lv)
+    j = np.asarray(space.encode(np.asarray(io), np.asarray(ih),
+                                np.asarray(iw)))
+    return np.where(np.asarray(task_mask, bool), j, 0).astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -39,22 +80,13 @@ class AdmissionController:
     def __post_init__(self):
         self.state = onalgo.init_state(self.num_devices, self.space.M)
         self.tables = self.space.tables()
-        self._o_tab, self._h_tab, self._w_tab = (np.asarray(t)
-                                                 for t in self.tables)
         self._step = jax.jit(partial(
             onalgo.step, tables=self.tables, params=self.params,
             rule=self.rule, use_kernel=self.use_kernel))
 
     def quantize(self, o, h, w, task_mask):
         """Map raw (o, h, w) to the nearest state index (0 = no task)."""
-        io = np.abs(o[:, None] - self._levels("o")).argmin(-1)
-        ih = np.abs(h[:, None] - self._levels("h")).argmin(-1)
-        iw = np.abs(w[:, None] - self._levels("w")).argmin(-1)
-        j = np.asarray(self.space.encode(io, ih, iw))
-        return np.where(task_mask, j, 0).astype(np.int32)
-
-    def _levels(self, which):
-        return np.asarray(getattr(self.space, f"{which}_levels"))
+        return quantize_states(self.space, o, h, w, task_mask)
 
     def admit(self, o, h, w, task_mask):
         """One slot. All args (N,) float/bool. Returns offload mask (N,)."""

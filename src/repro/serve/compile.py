@@ -1,0 +1,162 @@
+"""Compile the end-to-end service simulation to the core fleet contract.
+
+The paper's headline experiments (Figs. 5-8) run the *service* tier:
+trained classifier pairs, the measured power curve, the gain predictor,
+and per-slot cloudlet admission.  Historically that was a pure-Python
+``for t in range(T)`` loop with one jitted step per slot.  This module
+lowers a ``(SimConfig, PrecomputedPool)`` pair to the same
+``(Trace, tables, params)`` contract the fleet engine consumes — plus a
+:class:`~repro.core.fleet.RawOverlay` of raw per-slot values — so the
+whole horizon runs as ONE scanned (or chunked/sharded) fleet rollout:
+
+  * the image stream, Markov channel, and bursty arrivals are pre-sampled
+    host-side with the SAME RNG consumption order as the legacy loop
+    (identical seed => identical workload, slot for slot);
+  * raw (o, h, w) values are quantized into the pool-calibrated state
+    space in one fused call => the (T, N) ``Trace``;
+  * raw values, plus the local/cloudlet correctness of each sampled
+    image, ride along in the overlay so decisions and accounting match
+    the service semantics exactly (rho alone uses the quantized index).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import RawOverlay, Trace
+from repro.core.onalgo import OnAlgoParams, StepRule
+from repro.core.state_space import StateSpace
+from repro.serve.admission import quantize_states
+
+
+def bursty_arrivals(rng: np.random.Generator, T: int, N: int,
+                    burst_len: Tuple[int, int], mean_gap: float
+                    ) -> np.ndarray:
+    """The service tier's built-in ON/OFF bursty traffic, (T, N) bool.
+
+    Shared by the legacy loop and the compiler — byte-identical RNG
+    consumption is what makes the two paths replay the same workload.
+    """
+    on = np.zeros((T, N), bool)
+    for n in range(N):
+        t = int(rng.integers(0, burst_len[1]))
+        while t < T:
+            ln = int(rng.integers(burst_len[0], burst_len[1] + 1))
+            on[t:t + ln, n] = True
+            t += ln + 1 + int(rng.geometric(1.0 / mean_gap))
+    return on
+
+
+@dataclasses.dataclass
+class CompiledService:
+    """A service run lowered to the fleet-engine contract.
+
+    ``trace`` / ``tables`` / ``params`` / ``overlay`` feed
+    ``fleet.simulate(..., overlay=...)`` verbatim; ``space`` is the
+    pool-calibrated quantized state space behind ``trace.j_idx``; ``on``
+    is the realized (T, N) arrival matrix (useful for replaying the same
+    workload through other tiers).
+    """
+
+    sim: "SimConfig"  # noqa: F821 — forward ref, defined in simulator.py
+    space: StateSpace
+    trace: Trace
+    tables: Tuple[jax.Array, jax.Array, jax.Array]
+    params: OnAlgoParams
+    overlay: RawOverlay
+    on: np.ndarray
+
+    @property
+    def rule(self) -> StepRule:
+        return StepRule.inv_sqrt(self.sim.step_a)
+
+    def simulate_args(self):
+        """Positional args for ``fleet.simulate(trace, tables, params, ...)``."""
+        return self.trace, self.tables, self.params
+
+
+def compile_service(sim, pool, on: Optional[np.ndarray] = None
+                    ) -> CompiledService:
+    """Lower (SimConfig, PrecomputedPool) to a :class:`CompiledService`.
+
+    ``on``: optional (T, N) bool arrival matrix overriding the built-in
+    bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
+    scenario engine, so the service tier replays fleet-tier workloads.
+    """
+    from repro.serve.simulator import RATES, pool_space, power_of_rate
+
+    rng = np.random.default_rng(sim.seed)
+    N, T = sim.num_devices, sim.T
+    S = len(pool.local_correct)
+
+    if on is not None:
+        on = np.asarray(on, bool)
+        if on.shape != (T, N):
+            raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
+    else:
+        on = bursty_arrivals(rng, T, N, sim.burst_len, sim.mean_gap)
+
+    # Pre-sample the image stream and the Markov channel with the legacy
+    # loop's exact per-slot draw order (img, flip, candidate-rate).
+    rate_idx = rng.integers(0, len(RATES), N)
+    img = np.zeros((T, N), np.int64)
+    rates = np.zeros((T, N), np.int64)
+    for t in range(T):
+        img[t] = rng.integers(0, S, N)
+        flip = rng.random(N) > 0.9  # channel evolves (stay w.p. 0.9)
+        rate_idx = np.where(flip, rng.integers(0, len(RATES), N), rate_idx)
+        rates[t] = rate_idx
+
+    o_raw = power_of_rate(RATES[rates])  # (T, N) Watts
+    h_raw = pool.cycles[img]  # (T, N) cloudlet cycles
+    # risk-adjusted predicted gain (eq. 1), optionally delay-discounted (P3)
+    w_raw = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
+                    0.0, 1.0)
+    if sim.zeta:
+        w_raw = np.clip(w_raw - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
+                        0.0, 1.0)
+
+    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+    j = quantize_states(space, o_raw, h_raw, w_raw, on)
+
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(pool.d_local[img], jnp.float32))
+    overlay = RawOverlay(
+        o=jnp.asarray(o_raw, jnp.float32),
+        h=jnp.asarray(h_raw, jnp.float32),
+        w=jnp.asarray(w_raw, jnp.float32),
+        correct_local=jnp.asarray(pool.local_correct[img], jnp.float32),
+        correct_cloud=jnp.asarray(pool.cloud_correct[img], jnp.float32))
+    params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
+                          H=jnp.float32(sim.H))
+    return CompiledService(sim=sim, space=space, trace=trace,
+                           tables=space.tables(), params=params,
+                           overlay=overlay, on=on)
+
+
+def service_metrics(sim, series) -> dict:
+    """Fold fleet-engine series into the service-tier aggregate metrics
+    (same keys and semantics as the legacy slot loop)."""
+    tasks_raw = float(np.sum(np.asarray(series["tasks"])))
+    tasks = max(tasks_raw, 1.0)
+    admits = float(np.sum(np.asarray(series["admits"])))
+    # every task pays local processing; admitted ones add transmit + cloudlet
+    delay = sim.d_pr_dev * tasks_raw + (sim.d_tr + sim.d_pr_cloud) * admits
+    mu_seq = np.asarray(series["mu"])
+    return {
+        "accuracy": float(np.sum(np.asarray(series["correct"]))) / tasks,
+        "offload_frac": float(np.sum(np.asarray(series["offloads"]))) / tasks,
+        "admit_frac": admits / tasks,
+        "avg_power_per_dev": (float(np.sum(np.asarray(series["power"])))
+                              / (sim.num_devices * sim.T)),
+        "avg_load": float(np.sum(np.asarray(series["load"]))) / sim.T,
+        "avg_delay_ms": 1e3 * delay / tasks,
+        "tasks": tasks,
+        "mu_final": (float(mu_seq[-1])
+                     if sim.algo == "onalgo" and mu_seq.size else 0.0),
+    }

@@ -5,7 +5,12 @@ policy (OnAlgo or a baseline) -> cloudlet classifier for admitted tasks.
 Uses the synthetic datasets with *trained* classifier pairs, the paper's
 measured power curve p(rate) and cycle statistics, and bursty traffic.
 
-This is the substrate behind benchmarks/bench_fig5..8.
+This is the substrate behind benchmarks/bench_fig5..8.  ``simulate_service``
+is a thin wrapper over the vectorized fleet engine: serve/compile.py lowers
+the run to the core ``(Trace, tables, params, overlay)`` contract and
+``fleet.simulate`` rolls the whole horizon in one scan.
+``simulate_service_legacy`` keeps the original per-slot Python loop as the
+parity oracle (tests assert the two agree metric for metric).
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines as bl
+from repro.core.fleet import simulate
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
 from repro.data.predictor import GainPredictor, calibrate
@@ -116,11 +122,33 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
     only for admitted tasks (per-slot capacity enforced for every policy);
     non-offloaded / dropped tasks score the local classifier's result.
 
+    The run is compiled to the fleet contract (serve/compile.py) and rolled
+    through ``fleet.simulate`` in one scan — same metrics as the legacy
+    per-slot loop (``simulate_service_legacy``), orders of magnitude faster.
+
     ``on``: optional (T, N) bool arrival matrix overriding the built-in
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays the same workloads as
     the fleet simulator.
     """
+    from repro.serve.compile import compile_service, service_metrics
+
+    cs = compile_service(sim, pool, on)
+    series, _ = simulate(*cs.simulate_args(), cs.rule,
+                         algo=sim.algo, ato_theta=sim.ato_theta,
+                         enforce_slot_capacity=True, overlay=cs.overlay)
+    return service_metrics(sim, series)
+
+
+def simulate_service_legacy(sim: SimConfig, pool: PrecomputedPool,
+                            on: Optional[np.ndarray] = None) -> dict:
+    """The original per-slot Python-loop service simulator.
+
+    Kept as the parity oracle for ``simulate_service``: identical RNG
+    consumption, metrics match to float tolerance for every algo.
+    """
+    from repro.serve.compile import bursty_arrivals
+
     rng = np.random.default_rng(sim.seed)
     N, T = sim.num_devices, sim.T
     S = len(pool.local_correct)
@@ -130,15 +158,7 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
         if on.shape != (T, N):
             raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
     else:
-        # --- traffic: bursty ON/OFF per device
-        on = np.zeros((T, N), bool)
-        for n in range(N):
-            t = int(rng.integers(0, sim.burst_len[1]))
-            while t < T:
-                ln = int(rng.integers(sim.burst_len[0],
-                                      sim.burst_len[1] + 1))
-                on[t:t + ln, n] = True
-                t += ln + 1 + int(rng.geometric(1.0 / sim.mean_gap))
+        on = bursty_arrivals(rng, T, N, sim.burst_len, sim.mean_gap)
 
     # --- channel: Markov rate per device
     rate_idx = rng.integers(0, len(RATES), N)

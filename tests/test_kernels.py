@@ -9,7 +9,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.onalgo_step import onalgo_duals_pallas
+from repro.kernels.onalgo_step import (onalgo_duals_pallas,
+                                       onalgo_tiled_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
 
@@ -130,6 +131,70 @@ class TestOnAlgoKernel:
         np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
                                    rtol=1e-5, atol=1e-6)
         np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+    @pytest.mark.parametrize("N,M,T,chunk,block_n", [
+        (20, 16, 64, 8, 8),     # N not divisible by the tile (3 tiles)
+        (24, 37, 96, 16, 8),    # M needs lane padding
+        (50, 23, 40, 8, 16),    # 4 tiles, padded tail tile
+        (8, 16, 64, 8, 8),      # single-tile edge (phase 2 == phase 1 step)
+    ])
+    def test_tiled_matches_chunked_oracle(self, N, M, T, chunk, block_n):
+        """Device-tiled kernel == sequential oracle: same decisions, duals,
+        mu/lam_norm series, and visit counts."""
+        ks = jax.random.split(jax.random.PRNGKey(N + M), 6)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (M,))
+        h = jax.random.uniform(ks[2], (M,))
+        w = jax.random.uniform(ks[3], (M,)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        lam0 = jax.random.uniform(ks[5], (N,)) * 0.1
+        args = (j, lam0, jnp.float32(0.05), jnp.zeros((N, M)), o, h, w, B,
+                jnp.float32(2.0), 0.4, 0.5)
+        off_k, mu_k, ln_k, lam_k, mufin_k, cnt_k = onalgo_tiled_pallas(
+            *args, chunk=chunk, block_n=block_n, interpret=True)
+        off_r, mu_r, ln_r, lam_r, mufin_r, cnt_r = \
+            ref.onalgo_chunked_ref(*args)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+        np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(lam_k), np.asarray(lam_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ln_k), np.asarray(ln_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
+        assert float(mufin_k) == pytest.approx(float(mufin_r), rel=1e-5)
+
+    def test_tiled_per_device_tables(self):
+        """(N, M) heterogeneous tables stream tile by tile too."""
+        N, M, T = 20, 37, 48
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (N, M))
+        h = jax.random.uniform(ks[2], (N, M))
+        w = jax.random.uniform(ks[3], (N, M)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        args = (j, jnp.zeros((N,)), jnp.float32(0.0), jnp.zeros((N, M)),
+                o, h, w, B, jnp.float32(3.0), 0.5, 0.5)
+        out_k = onalgo_tiled_pallas(*args, chunk=8, block_n=8,
+                                    interpret=True)
+        out_r = ref.onalgo_chunked_ref(*args)
+        np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                      np.asarray(out_r[0]))
+        np.testing.assert_allclose(np.asarray(out_k[3]),
+                                   np.asarray(out_r[3]), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out_k[5]),
+                                      np.asarray(out_r[5]))
+
+    def test_tiled_rejects_bad_block(self):
+        args = (jnp.zeros((16, 4), jnp.int32), jnp.zeros(4),
+                jnp.float32(0), jnp.zeros((4, 8)), jnp.ones(8),
+                jnp.ones(8), jnp.ones(8), jnp.ones(4), jnp.float32(1),
+                0.5, 0.5)
+        with pytest.raises(ValueError):
+            onalgo_tiled_pallas(*args, chunk=8, block_n=6)  # not 8-mult
+        with pytest.raises(ValueError):
+            onalgo_tiled_pallas(*args, chunk=5, block_n=8)  # T % chunk
 
     def test_simulation_path_with_kernel(self):
         """fleet.simulate(use_kernel=True) == jnp path, slot for slot."""

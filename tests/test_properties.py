@@ -53,6 +53,37 @@ class TestPolicyProperties:
                                        jnp.asarray(js), M)), rtol=1e-6)
 
 
+class TestTiledKernelProperties:
+    @settings(max_examples=12, deadline=None)
+    @given(N=st.integers(2, 40), T=st.integers(1, 60),
+           block_n=st.sampled_from([8, 16]),
+           chunk=st.sampled_from([4, 8]),
+           seed=st.integers(0, 10_000))
+    def test_tiled_matches_chunked_any_shape(self, N, T, block_n, chunk,
+                                             seed):
+        """The device-tiled chunked engine == simulate_chunked for any
+        fleet size / horizon, divisible by the tile and chunk or not."""
+        from repro.core import OnAlgoParams, StepRule, default_paper_space
+        from repro.core.fleet import simulate_chunked
+        from repro.data.traces import TraceSpec, iid_trace
+        space = default_paper_space(num_w=3)
+        trace, _ = iid_trace(space, TraceSpec(T=T, N=N, seed=seed))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((N,), 0.08, jnp.float32),
+                              H=jnp.float32(N * 1.2e8))
+        rule = StepRule.inv_sqrt(0.5)
+        s1, f1 = simulate_chunked(trace, tables, params, rule, chunk=chunk)
+        s2, f2 = simulate_chunked(trace, tables, params, rule, chunk=chunk,
+                                  block_n=block_n)
+        for k in s1:
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(f1.rho.counts),
+                                      np.asarray(f2.rho.counts))
+
+
 class TestShardingProperties:
     @settings(max_examples=50, deadline=None)
     @given(dim=st.integers(1, 4096))

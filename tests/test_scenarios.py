@@ -13,10 +13,10 @@ from repro.core.fleet import simulate_chunked
 from repro.data.traces import TraceSpec, iid_trace
 from repro.kernels.onalgo_step import onalgo_chunked_pallas
 from repro.kernels.ref import onalgo_chunked_ref
-from repro.scenarios import (Scenario, compile_scenario, default_scenarios,
-                             grid_from_cells, names, product_grid,
-                             run_scenario, stack_params, stack_rules,
-                             sweep_simulate, unstack_series)
+from repro.scenarios import (MODIFIERS, Scenario, compile_scenario, compose,
+                             default_scenarios, grid_from_cells, names,
+                             product_grid, run_scenario, stack_params,
+                             stack_rules, sweep_simulate, unstack_series)
 
 RULE = StepRule.inv_sqrt(0.5)
 
@@ -211,6 +211,67 @@ class TestChunkedKernel:
         np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
                                    rtol=1e-5, atol=1e-7)
 
+    def test_tiled_engine_matches_scan_nondivisible(self):
+        """simulate_chunked(block_n=...) == simulate for N not a tile
+        multiple AND T not a chunk multiple (jnp tail + padded tail tile)."""
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=203, N=20, seed=7))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((20,), 0.08), H=jnp.float32(9e8))
+        s1, f1 = simulate(trace, tables, params, RULE)
+        s2, f2 = simulate_chunked(trace, tables, params, RULE, chunk=8,
+                                  block_n=8)
+        assert set(s1) == set(s2)
+        for k in s1:
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(f1.lam), np.asarray(f2.lam),
+                                   rtol=1e-4, atol=1e-6)
+        assert float(f1.mu) == pytest.approx(float(f2.mu), abs=1e-5)
+        np.testing.assert_array_equal(np.asarray(f1.rho.counts),
+                                      np.asarray(f2.rho.counts))
+
+    def test_tiled_engine_block_size_independence(self):
+        """Every tile width gives the same rollout as the whole-fleet
+        chunked kernel."""
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=96, N=24, seed=11))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((24,), 0.08), H=jnp.float32(9e8))
+        s0, f0 = simulate_chunked(trace, tables, params, RULE, chunk=8)
+        for bn in (8, 16, 24):
+            s, f = simulate_chunked(trace, tables, params, RULE, chunk=8,
+                                    block_n=bn)
+            for k in s0:
+                np.testing.assert_allclose(
+                    np.asarray(s0[k]), np.asarray(s[k]), rtol=2e-5,
+                    atol=1e-5, err_msg=f"block_n={bn} series {k}")
+            np.testing.assert_allclose(np.asarray(f0.lam),
+                                       np.asarray(f.lam), rtol=1e-4,
+                                       atol=1e-6)
+
+    def test_chunked_capacity_postpass_matches_scan(self):
+        """enforce_slot_capacity on the chunked engine == the scan path:
+        admits < offloads under a tight H, and every series agrees."""
+        space = default_paper_space(num_w=4)
+        trace, _ = iid_trace(space, TraceSpec(T=203, N=16, seed=9))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((16,), 0.08), H=jnp.float32(7e8))
+        s1, _ = simulate(trace, tables, params, RULE,
+                         enforce_slot_capacity=True)
+        s2, _ = simulate_chunked(trace, tables, params, RULE, chunk=8,
+                                 enforce_slot_capacity=True)
+        for k in s1:
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        # the capacity rule actually bites under this H
+        assert (float(np.sum(np.asarray(s2["admits"])))
+                < float(np.sum(np.asarray(s2["offloads"]))))
+        # and the default still reports admits == offloads
+        s3, _ = simulate_chunked(trace, tables, params, RULE, chunk=8)
+        np.testing.assert_array_equal(np.asarray(s3["admits"]),
+                                      np.asarray(s3["offloads"]))
+
     def test_scan_only_options_pin_auto_to_scan(self):
         sc = Scenario("stationary", T=60, N=4, seed=10)
         series, _, _ = run_scenario(sc, engine="auto", with_true_rho=True)
@@ -224,6 +285,61 @@ class TestChunkedKernel:
                 jnp.zeros((10, 4), jnp.int32), jnp.zeros(4), jnp.float32(0),
                 jnp.zeros((4, 8)), jnp.ones(8), jnp.ones(8), jnp.ones(8),
                 jnp.ones(4), jnp.float32(1), 0.5, 0.5, chunk=8)
+
+
+class TestCompose:
+    def test_churn_outage_stacks_both_effects(self):
+        sc = Scenario("churn_outage", T=500, N=8, seed=3).with_extra(
+            churn_frac=0.4, n_outages=2, outage_len=60)
+        c = compile_scenario(sc)
+        # outage doubled the state space
+        assert c.M == 2 * default_paper_space(num_w=sc.num_w).M
+        # churn: absent devices sit in the null state
+        j = np.asarray(c.trace.j_idx)
+        arrive, depart = c.meta["arrive"], c.meta["depart"]
+        slots = np.arange(sc.T)[:, None]
+        outside = (slots < arrive[None, :]) | (slots >= depart[None, :])
+        assert np.all(j[outside] == 0)
+        # outage: no offloads while down, some while up
+        series, _, _ = run_scenario(c, rule=RULE, engine="scan",
+                                    use_kernel=False)
+        off = np.asarray(series["offloads"])
+        down = c.meta["down"]
+        assert off[down].sum() == 0
+        assert off[~down].sum() > 0
+
+    def test_compose_explicit_specs(self):
+        """compose() layers any modifier kind over any base kind."""
+        a = Scenario("bursty", T=300, N=6, seed=4)
+        b = Scenario("outage", T=300, N=6, seed=4).with_extra(
+            n_outages=1, outage_len=50)
+        c = compose(a, b)
+        assert c.M == 2 * default_paper_space(num_w=a.num_w).M
+        assert "down" in c.meta
+        # base kind's traffic survives outside the outage
+        j = np.asarray(c.trace.j_idx)
+        assert (j > 0).any()
+
+    def test_compose_over_heterogeneous_tables(self):
+        """The outage mirror concatenates per-device (N, M) tables too."""
+        a = Scenario("heterogeneous", T=200, N=6, seed=5)
+        b = Scenario("outage", T=200, N=6, seed=5)
+        c = compose(a, b)
+        o, h, w = c.tables
+        M0 = default_paper_space(num_w=a.num_w).M
+        assert o.shape == (6, 2 * M0)
+        assert np.all(np.asarray(w[:, M0:]) == 0)
+
+    def test_compose_rejects_mismatched_fleets(self):
+        with pytest.raises(ValueError):
+            compose(Scenario("stationary", T=100, N=4),
+                    Scenario("outage", T=200, N=4))
+
+    def test_compose_rejects_non_modifier(self):
+        assert "bursty" not in MODIFIERS
+        with pytest.raises(KeyError):
+            compose(Scenario("stationary", T=100, N=4),
+                    Scenario("bursty", T=100, N=4))
 
 
 class TestSweeps:

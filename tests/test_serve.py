@@ -1,4 +1,5 @@
-"""Serving substrate: engine, batcher, admission controller, simulator."""
+"""Serving substrate: engine, batcher, admission controller, simulator,
+and the compiled/batched service path vs the legacy-loop parity oracle."""
 
 import jax
 import jax.numpy as jnp
@@ -9,8 +10,27 @@ from repro.configs import get_config
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
 from repro.models.api import ModelAPI
-from repro.serve.admission import AdmissionController, flops_per_request
+from repro.serve.admission import (AdmissionController, flops_per_request,
+                                   quantize_states)
 from repro.serve.engine import Batcher, ServingEngine
+from repro.serve.simulator import (PrecomputedPool, SimConfig,
+                                   simulate_service, simulate_service_legacy)
+
+SERVICE_METRICS = ("accuracy", "offload_frac", "admit_frac",
+                   "avg_power_per_dev", "avg_load", "avg_delay_ms",
+                   "tasks", "mu_final")
+
+
+def _toy_pool(S=64, seed=0) -> PrecomputedPool:
+    """A synthetic precomputed pool — no classifier training needed."""
+    rng = np.random.default_rng(seed)
+    return PrecomputedPool(
+        local_correct=(rng.random(S) < 0.6).astype(np.float64),
+        cloud_correct=(rng.random(S) < 0.85).astype(np.float64),
+        d_local=rng.uniform(0.3, 1.0, S),
+        phi_hat=rng.uniform(0.0, 0.3, S),
+        sigma=rng.uniform(0.0, 0.1, S),
+        cycles=np.clip(rng.normal(441e6, 90e6, S), 150e6, None))
 
 
 class TestEngine:
@@ -92,6 +112,75 @@ class TestAdmission:
         moe = get_config("olmoe_1b_7b")
         assert (flops_per_request(moe, 1024)
                 < 2.0 * moe.param_count() * 1024)
+
+
+class TestServiceParity:
+    """The compiled/batched service path == the legacy per-slot loop."""
+
+    @pytest.mark.parametrize(
+        "algo", ["onalgo", "ato", "rco", "ocos", "local", "cloud"])
+    def test_batched_matches_legacy_all_algos(self, algo):
+        pool = _toy_pool()
+        sim = SimConfig(num_devices=5, T=160, algo=algo, B_n=0.06,
+                        H=1.5 * 441e6, seed=3)
+        ref = simulate_service_legacy(sim, pool)
+        out = simulate_service(sim, pool)
+        assert set(out) == set(ref)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
+
+    def test_batched_matches_legacy_with_delay_weight(self):
+        pool = _toy_pool(seed=1)
+        sim = SimConfig(num_devices=4, T=120, algo="onalgo", seed=5,
+                        zeta=300.0)
+        ref = simulate_service_legacy(sim, pool)
+        out = simulate_service(sim, pool)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
+
+    def test_scenario_arrivals_drive_batched_service(self):
+        """A composed fleet scenario replays through the batched service."""
+        from repro.scenarios import Scenario, compile_scenario
+        c = compile_scenario(
+            Scenario("churn_outage", T=120, N=4, seed=6).with_extra(
+                churn_frac=0.3, n_outages=1, outage_len=30))
+        mask = c.task_mask()
+        pool = _toy_pool(seed=2)
+        sim = SimConfig(num_devices=4, T=120, algo="onalgo", seed=7)
+        ref = simulate_service_legacy(sim, pool, on=mask)
+        out = simulate_service(sim, pool, on=mask)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
+        # arrivals actually gate the workload
+        assert out["tasks"] == mask.sum()
+
+    def test_quantize_vectorized_matches_numpy(self):
+        """The fused jitted quantizer == the numpy argmin it replaced
+        (away from float32-ulp level-midpoint ties, where the old float64
+        path could differ), for one-slot (N,) and horizon (T, N) batches."""
+        space = StateSpace(o_levels=(0.2, 0.5, 0.9),
+                           h_levels=(0.5, 1.0, 1.5),
+                           w_levels=(0.0, 0.1, 0.2, 0.3))
+        rng = np.random.default_rng(0)
+        o = rng.uniform(0.0, 1.1, (40, 6))
+        h = rng.uniform(0.0, 2.0, (40, 6))
+        w = rng.uniform(0.0, 0.4, (40, 6))
+        task = rng.random((40, 6)) < 0.7
+
+        def legacy(o, h, w, task):
+            lv = lambda name: np.asarray(getattr(space, name))
+            io = np.abs(o[:, None] - lv("o_levels")).argmin(-1)
+            ih = np.abs(h[:, None] - lv("h_levels")).argmin(-1)
+            iw = np.abs(w[:, None] - lv("w_levels")).argmin(-1)
+            j = np.asarray(space.encode(io, ih, iw))
+            return np.where(task, j, 0).astype(np.int32)
+
+        want = np.stack([legacy(o[t], h[t], w[t], task[t])
+                         for t in range(40)])
+        np.testing.assert_array_equal(
+            quantize_states(space, o, h, w, task), want)
+        np.testing.assert_array_equal(
+            quantize_states(space, o[0], h[0], w[0], task[0]), want[0])
 
 
 @pytest.mark.slow
