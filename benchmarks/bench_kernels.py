@@ -62,7 +62,6 @@ def bench_ssd():
 
 
 def bench_onalgo():
-    import numpy as np
     N, M = 16384, 73
     ks = jax.random.split(jax.random.PRNGKey(3), 6)
     lam = jax.random.uniform(ks[0], (N,))
@@ -90,7 +89,6 @@ def bench_onalgo_chunked():
     keeps tables + state in VMEM for the entire horizon and streams only
     the (C, N) trace slice per grid step.
     """
-    import numpy as np
     from repro.kernels.ref import onalgo_chunked_ref
     N, M, T, C = 1024, 73, 256, 16
     ks = jax.random.split(jax.random.PRNGKey(4), 5)

@@ -21,7 +21,8 @@ from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.data.traces import TraceSpec, bursty_trace
 from repro.scenarios import grid_from_cells, sweep_simulate, unstack_series
 from repro.serve.simulator import (SimConfig, make_scenario, pool_space,
-                                   simulate_service, simulate_service_legacy)
+                                   simulate_service, simulate_service_legacy,
+                                   synthetic_pool)
 
 _SCENARIOS = {}
 
@@ -124,6 +125,39 @@ def bench_fig8_delay_pareto(T=2000):
              f"offl={out['offload_frac']:.3f}")
 
 
+def bench_compile_service(T=2000, reps=10):
+    """compile_service: legacy host-ordered RNG loop (v0) vs the
+    counter-based workload layer (v1) at the fig5 config (T=2000, N=4).
+
+    v0 replays the legacy loop's draw order with an O(T) host loop; v1
+    is one fused jitted device pass (counter streams + gathers +
+    quantization), so the whole service compile drops off the hot path
+    (>= 10x end-to-end required).  Uses the deterministic synthetic pool
+    — no classifier training — so this row also runs in the per-PR CI
+    bench artifact.
+    """
+    import dataclasses
+
+    pool = synthetic_pool()
+    sim = SimConfig(num_devices=4, T=T, algo="onalgo", B_n=0.06,
+                    H=2 * 441e6, seed=1)
+    sim_v0 = dataclasses.replace(sim, rng_version=0)
+    from repro.serve.compile import compile_service
+    compile_service(sim, pool)  # warm the v1 jit cache
+    compile_service(sim_v0, pool)  # warm v0's quantizer jit
+    t0 = time.time()
+    for _ in range(reps):
+        compile_service(sim, pool)
+    dt_v1 = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(max(reps // 2, 1)):
+        compile_service(sim_v0, pool)
+    dt_v0 = (time.time() - t0) / max(reps // 2, 1)
+    emit(f"compile_service/counter_v1/T={T}", dt_v1 * 1e6 / T,
+         f"speedup={dt_v0 / dt_v1:.1f}x;v1_ms={dt_v1 * 1e3:.2f};"
+         f"v0_host_loop_ms={dt_v0 * 1e3:.2f}")
+
+
 def bench_service_speedup(T=2000):
     """Batched service (compiled fleet scan) vs the legacy per-slot loop.
 
@@ -142,8 +176,10 @@ def bench_service_speedup(T=2000):
     """
     _, pair, _, pool = scenario("hard")
     for N in (4, 16, 64):
+        # rng_version=0 on both sides: the legacy loop only speaks the v0
+        # contract, and identical workloads make this a pure engine race.
         sim = SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
-                        H=2 * 441e6, seed=1)
+                        H=2 * 441e6, seed=1, rng_version=0)
         simulate_service(sim, pool)  # warm the scan compile cache
         t0 = time.time()
         out = simulate_service(sim, pool)
@@ -151,7 +187,9 @@ def bench_service_speedup(T=2000):
         t0 = time.time()
         ref = simulate_service_legacy(sim, pool)
         dt_legacy = time.time() - t0
-        assert abs(out["accuracy"] - ref["accuracy"]) < 1e-5
+        # float32 decision pricing vs the legacy float64 flips a handful
+        # of near-threshold slots over long horizons (see test_serve).
+        assert abs(out["accuracy"] - ref["accuracy"]) < 5e-3
         emit(f"service_speedup/N={N}", dt_batched * 1e6 / T,
              f"speedup={dt_legacy / dt_batched:.1f}x;"
              f"batched_devslots_per_s={N * T / dt_batched:.0f};"
@@ -164,4 +202,5 @@ def run_all():
     bench_fig6_benchmark_comparison()
     bench_fig7_tradeoffs()
     bench_fig8_delay_pareto()
+    bench_compile_service()
     bench_service_speedup()

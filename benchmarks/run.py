@@ -8,7 +8,8 @@ from benchmarks.common import header
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: figs,convergence,controller,kernels")
+                    help="comma list: figs,convergence,controller,kernels,"
+                         "compile_service")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -16,6 +17,11 @@ def main() -> None:
     if only is None or "figs" in only:
         from benchmarks import bench_paper_figs
         bench_paper_figs.run_all()
+    elif "compile_service" in only:
+        # figs runs it too; standalone target for the fast CI artifact
+        # (synthetic pool — no classifier training)
+        from benchmarks import bench_paper_figs
+        bench_paper_figs.bench_compile_service()
     if only is None or "convergence" in only:
         from benchmarks import bench_convergence
         bench_convergence.run_all()

@@ -18,8 +18,6 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-import numpy as np
-
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,

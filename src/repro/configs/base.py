@@ -8,7 +8,6 @@ dense / MoE / SSM / hybrid (Jamba) / encoder-decoder (audio) / VLM.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

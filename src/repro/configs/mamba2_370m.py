@@ -6,8 +6,6 @@ no separate FFN sublayer — the mixer IS the layer; we honour that by giving
 the dense FFN width 0 and skipping it (see blocks dispatch).
 """
 
-import dataclasses
-
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

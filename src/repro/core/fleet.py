@@ -232,11 +232,79 @@ def simulate(trace: Trace,
     return series, final_state
 
 
-@partial(jax.jit, static_argnames=("chunk", "block_n",
+def _series_from_offloads(j_seq, off, tables, params, mu_seq, lnorm,
+                          overlay: Optional[RawOverlay],
+                          enforce_slot_capacity: bool,
+                          smallest_first: bool = False):
+    """Whole-horizon series assembly shared by the offload-matrix engines.
+
+    The chunked/tiled kernels and the sharded scan produce the realized
+    (T, N) offload matrix plus the dual series; everything else in the
+    ``simulate`` series contract is a pure function of that matrix — the
+    per-slot cloudlet admission post-pass and the o/h/w accounting (table
+    lookups, or the raw overlay streams plus the ``correct`` series for
+    the service tier).  Centralizing it here keeps every engine's
+    accounting bit-identical.
+    """
+    o_tab, h_tab, w_tab = tables
+    if overlay is None:
+        lookup_t = jax.vmap(_lookup, in_axes=(None, 0))
+        o_seq = lookup_t(o_tab, j_seq)  # (T, N)
+        h_seq = lookup_t(h_tab, j_seq)
+        w_seq = lookup_t(w_tab, j_seq)
+    else:
+        o_seq, h_seq, w_seq = overlay.o, overlay.h, overlay.w
+    off_f = off.astype(jnp.float32)
+    if enforce_slot_capacity:
+        admit = partial(bl.admit_by_capacity, H_slot=params.H,
+                        smallest_first=smallest_first)
+        admitted = jax.vmap(admit)(off, h_seq)
+    else:
+        admitted = off
+    adm_f = admitted.astype(jnp.float32)
+    task_f = (j_seq > 0).astype(jnp.float32)
+    series = {
+        "reward": jnp.sum(w_seq * adm_f, axis=1),
+        "power": jnp.sum(o_seq * off_f, axis=1),
+        "power_per_dev": jnp.mean(o_seq * off_f, axis=1),
+        "load": jnp.sum(h_seq * adm_f, axis=1),
+        "offloads": jnp.sum(off_f, axis=1),
+        "admits": jnp.sum(adm_f, axis=1),
+        "tasks": jnp.sum(task_f, axis=1),
+        "lam_norm": lnorm,
+        "mu": mu_seq,
+    }
+    if overlay is not None:
+        series["correct"] = jnp.sum(
+            jnp.where(admitted, overlay.correct_cloud,
+                      overlay.correct_local) * task_f, axis=1)
+    return series
+
+
+def _trivial_policy_rollout(j_seq, algo: str):
+    """Offload matrix + (zero) dual series for the stateless policies."""
+    task = j_seq > 0
+    off = task if algo == "cloud" else jnp.zeros_like(task)
+    T = j_seq.shape[0]
+    zeros = jnp.zeros((T,), jnp.float32)
+    return off, zeros, zeros, bl.OCOSState()
+
+
+def _overlay_slot_values(overlay: RawOverlay, params: OnAlgoParams):
+    """The overlay's raw decision streams, mapped to the dual space the
+    kernels operate in (same diagonal preconditioner as onalgo.step)."""
+    if not params.precondition:
+        return (overlay.o, overlay.h, overlay.w)
+    return (overlay.o / params.B[None, :], overlay.h / params.H, overlay.w)
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_n", "algo",
                                    "enforce_slot_capacity"))
 def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
                      rule: StepRule, chunk: int = 8,
                      block_n: Optional[int] = None,
+                     algo: str = "onalgo",
+                     overlay: Optional[RawOverlay] = None,
                      enforce_slot_capacity: bool = False):
     """OnAlgo rollout through the fused whole-simulation Pallas kernels.
 
@@ -250,6 +318,12 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
       time-chunked kernel, N*M-bounded); an int routes through the
       device-tiled kernel — block_n devices per tile, O(block_n * M) VMEM —
       so arbitrarily large fleets run chunked too.
+    algo: ``onalgo`` (the kernels), or the service tier's stateless
+      ``local`` / ``cloud`` policies (no kernel needed).
+    overlay: optional service-tier RawOverlay — raw per-slot values drive
+      the realized decision and the accounting (and the series gain
+      ``correct``), while rho and the duals stay on the quantized tables,
+      exactly like ``simulate(..., overlay=...)``.
     enforce_slot_capacity: apply the paper's per-slot cloudlet admission
       rule as a vmapped post-pass over the offload matrix, so reward / load
       / admits match ``simulate(..., enforce_slot_capacity=True)``.  The
@@ -262,8 +336,20 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     M = o_tab.shape[-1]
     j_seq = trace.j_idx
 
+    if algo in ("local", "cloud"):
+        off, mu_seq, lnorm, final = _trivial_policy_rollout(j_seq, algo)
+        series = _series_from_offloads(j_seq, off, tables, params, mu_seq,
+                                       lnorm, overlay,
+                                       enforce_slot_capacity)
+        return series, final
+    if algo != "onalgo":
+        raise ValueError("the chunked engine rolls OnAlgo (plus the "
+                         f"stateless local/cloud policies); got {algo!r}")
+
     o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(o_tab, h_tab,
                                                         params)
+    slot_values = (None if overlay is None
+                   else _overlay_slot_values(overlay, params))
 
     T_main = (T // chunk) * chunk
     lam = jnp.zeros((N,), jnp.float32)
@@ -272,9 +358,11 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     if T_main:
         kern = (kops.onalgo_chunked if block_n is None
                 else partial(kops.onalgo_tiled, block_n=block_n))
+        sv_main = (None if slot_values is None
+                   else tuple(sv[:T_main] for sv in slot_values))
         off, mu_seq, lnorm, lam, mu, counts = kern(
             j_seq[:T_main], lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
-            rule.a, rule.beta, chunk=chunk)
+            rule.a, rule.beta, chunk=chunk, slot_values=sv_main)
     else:  # whole horizon shorter than one chunk: jnp tail does it all
         off = jnp.zeros((0, N), bool)
         mu_seq = jnp.zeros((0,), jnp.float32)
@@ -286,45 +374,33 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
             rho=onalgo.RhoEstimator(counts=counts,
                                     t=jnp.int32(T_main)))
 
-        def slot(state, j):
+        def slot(state, xs):
+            if overlay is None:
+                j = xs
+                o_now = _lookup(o_tab, j)
+                h_now = _lookup(h_tab, j)
+                w_now = _lookup(w_tab, j)
+            else:  # raw (unpreconditioned) values; step rescales them
+                j, o_now, h_now, w_now = xs
             task = j > 0
-            o_now = _lookup(o_tab, j)
-            h_now = _lookup(h_tab, j)
-            w_now = _lookup(w_tab, j)
             state, offload = onalgo.step(state, j, o_now, h_now, w_now,
                                          task, tables, params, rule)
             lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
             return state, (offload, state.mu, lam_norm)
 
-        state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state,
-                                                  j_seq[T_main:])
+        if overlay is None:
+            xs_tail = j_seq[T_main:]
+        else:
+            xs_tail = (j_seq[T_main:], overlay.o[T_main:],
+                       overlay.h[T_main:], overlay.w[T_main:])
+        state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state, xs_tail)
         off = jnp.concatenate([off, off_t], axis=0)
         mu_seq = jnp.concatenate([mu_seq, mu_t])
         lnorm = jnp.concatenate([lnorm, ln_t])
         lam, mu, counts = state.lam, state.mu, state.rho.counts
 
-    lookup_t = jax.vmap(_lookup, in_axes=(None, 0))
-    o_seq = lookup_t(o_tab, j_seq)  # (T, N)
-    h_seq = lookup_t(h_tab, j_seq)
-    w_seq = lookup_t(w_tab, j_seq)
-    off_f = off.astype(jnp.float32)
-    if enforce_slot_capacity:
-        admitted = jax.vmap(bl.admit_by_capacity,
-                            in_axes=(0, 0, None))(off, h_seq, params.H)
-    else:
-        admitted = off
-    adm_f = admitted.astype(jnp.float32)
-    series = {
-        "reward": jnp.sum(w_seq * adm_f, axis=1),
-        "power": jnp.sum(o_seq * off_f, axis=1),
-        "power_per_dev": jnp.mean(o_seq * off_f, axis=1),
-        "load": jnp.sum(h_seq * adm_f, axis=1),
-        "offloads": jnp.sum(off_f, axis=1),
-        "admits": jnp.sum(adm_f, axis=1),
-        "tasks": jnp.sum((j_seq > 0).astype(jnp.float32), axis=1),
-        "lam_norm": lnorm,
-        "mu": mu_seq,
-    }
+    series = _series_from_offloads(j_seq, off, tables, params, mu_seq,
+                                   lnorm, overlay, enforce_slot_capacity)
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
@@ -332,46 +408,94 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
 
 
 def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
-                     rule: StepRule, mesh, device_axis: str = "data"):
+                     rule: StepRule, mesh, device_axis: str = "data",
+                     algo: str = "onalgo",
+                     overlay: Optional[RawOverlay] = None,
+                     enforce_slot_capacity: bool = False):
     """Distributed OnAlgo over a fleet sharded on a mesh axis.
 
     Devices (the N axis) are split across ``device_axis`` shards; each shard
     runs the device-local threshold rule and lambda updates; the cloudlet
     capacity sum is a psum — one scalar collective per slot, exactly the
     paper's protocol cost.
+
+    Same ``(series, final_state)`` contract as ``simulate`` /
+    ``simulate_chunked``: the sharded scan produces the realized offload
+    matrix and the dual series; the accounting (including the optional
+    per-slot admission post-pass and the overlay's ``correct`` series) is
+    assembled globally from the gathered matrix, so the three engines'
+    metrics agree.  ``algo`` covers ``onalgo`` plus the stateless
+    ``local`` / ``cloud`` service policies.
     """
     o_tab, h_tab, w_tab = tables
     N = trace.N
+    T = trace.T
     M = o_tab.shape[-1]
 
+    if algo in ("local", "cloud"):  # stateless: nothing to distribute
+        off, mu_seq, lnorm, final = _trivial_policy_rollout(trace.j_idx,
+                                                            algo)
+        series = _series_from_offloads(trace.j_idx, off, tables, params,
+                                       mu_seq, lnorm, overlay,
+                                       enforce_slot_capacity)
+        return series, final
+    if algo != "onalgo":
+        raise ValueError("the sharded engine rolls OnAlgo (plus the "
+                         f"stateless local/cloud policies); got {algo!r}")
+
+    n_shards = mesh.shape[device_axis]
+    if N % n_shards:
+        raise ValueError(
+            f"fleet size N={N} must be a multiple of the {device_axis!r} "
+            f"axis shard count ({n_shards})")
+
     tab_spec = P(device_axis, None) if o_tab.ndim == 2 else P(None)
+    seq_spec = P(None, device_axis)
+    if overlay is None:
+        ov_args, ov_specs = (), ()
+    else:  # raw decision streams ride sharded like the trace
+        ov_args = (overlay.o, overlay.h, overlay.w)
+        ov_specs = (seq_spec,) * 3
 
     from repro.parallel.compat import shard_map
 
     @partial(shard_map, mesh=mesh,
-             in_specs=(P(None, device_axis), P(None, device_axis), tab_spec,
-                       tab_spec, tab_spec, P(device_axis), P()),
-             out_specs=(P(device_axis), P(), P()),
+             in_specs=(seq_spec, tab_spec, tab_spec, tab_spec,
+                       P(device_axis), P()) + ov_specs,
+             out_specs=(seq_spec, P(), P(), P(device_axis), P(),
+                        P(device_axis, None)),
              check_vma=False)
-    def run(j_idx, d_local, o_t, h_t, w_t, B, H):
+    def run(j_idx, o_t, h_t, w_t, B, H, *ov):
         n_local = j_idx.shape[1]
         state = onalgo.init_state(n_local, M)
         p_local = OnAlgoParams(B=B, H=H)
 
-        def slot(state, j):
+        def slot(state, xs):
+            j = xs[0]
             task = j > 0
-            o_now = _lookup(o_t, j)
-            h_now = _lookup(h_t, j)
-            w_now = _lookup(w_t, j)
+            if ov:  # raw (unpreconditioned) values; step rescales them
+                o_now, h_now, w_now = xs[1], xs[2], xs[3]
+            else:
+                o_now = _lookup(o_t, j)
+                h_now = _lookup(h_t, j)
+                w_now = _lookup(w_t, j)
             state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
                                          (o_t, h_t, w_t), p_local, rule,
                                          axis_name=device_axis)
-            reward = jax.lax.psum(
-                jnp.sum(w_now * offload.astype(jnp.float32)), device_axis)
-            return state, (reward, state.mu)
+            lam2 = jax.lax.psum(jnp.sum(state.lam**2), device_axis)
+            lam_norm = jnp.sqrt(lam2 + state.mu**2)
+            return state, (offload, state.mu, lam_norm)
 
-        state, (rewards, mus) = jax.lax.scan(slot, state, j_idx)
-        return state.lam, rewards, mus
+        state, (off, mu_seq, lnorm) = jax.lax.scan(slot, state,
+                                                   (j_idx,) + ov)
+        return (off, mu_seq, lnorm, state.lam, state.mu, state.rho.counts)
 
-    return run(trace.j_idx, trace.d_local, o_tab, h_tab, w_tab, params.B,
-               params.H)
+    off, mu_seq, lnorm, lam, mu, counts = run(
+        trace.j_idx, o_tab, h_tab, w_tab, params.B, params.H, *ov_args)
+    series = _series_from_offloads(trace.j_idx, off, tables, params,
+                                   mu_seq, lnorm, overlay,
+                                   enforce_slot_capacity)
+    final = onalgo.OnAlgoState(
+        lam=lam, mu=mu,
+        rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+    return series, final

@@ -26,7 +26,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import linprog
 
-from repro.core.onalgo import OnAlgoParams, policy_matrix
+from repro.core.onalgo import policy_matrix
 
 
 def _broadcast_tables(tables, N, M):

@@ -12,7 +12,6 @@ never materially repeated.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

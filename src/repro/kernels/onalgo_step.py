@@ -112,13 +112,28 @@ def onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B, *,
 # The whole fleet must fit one block: ~5 (N, M) fp32 buffers in VMEM,
 # i.e. N*M <~ 2^19 per core — beyond that, shard the fleet first
 # (fleet.simulate_sharded) and run one chunked kernel per shard.
+#
+# Service overlay (``slot_values``): the service tier's realized decision
+# uses RAW per-slot values (channel power, image cycles, predictor gain)
+# while rho and the dual subgradient stay on the quantized tables.  When
+# slot-value streams are provided they ride the same (K, N_pad, C)
+# layout as the trace and replace the one-hot table gather in the
+# realized decision (gated on j > 0, since a raw gain w > 0 can coexist
+# with the null state).
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_chunked_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
-                           mu0_ref, counts0_ref, scal_ref,
-                           off_ref, museq_ref, lnorm_ref,
-                           lam_ref, mu_ref, counts_ref, *, chunk, t0):
+def _onalgo_chunked_kernel(*refs, chunk, t0, has_slots):
+    if has_slots:
+        (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         off_ref, museq_ref, lnorm_ref,
+         lam_ref, mu_ref, counts_ref) = refs
+    else:
+        (j_ref, o_ref, h_ref, w_ref, b_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         off_ref, museq_ref, lnorm_ref,
+         lam_ref, mu_ref, counts_ref) = refs
     k = pl.program_id(0)
 
     @pl.when(k == 0)
@@ -148,13 +163,21 @@ def _onalgo_chunked_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
         tf = jnp.maximum(t, 1).astype(jnp.float32)
         rho = counts * (1.0 / tf)
 
-        # realized decision under (lam_t, mu_t) — the one-hot doubles as
-        # the table gather (o_now = o[n, j_n])
-        o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (N, 1)
-        h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
-        w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
+        # realized decision under (lam_t, mu_t) — raw slot values when the
+        # service overlay provides them, else the one-hot doubles as the
+        # table gather (o_now = o[n, j_n])
+        if has_slots:
+            o_now = svo_ref[0, :, c:c + 1]  # (N, 1) dual-space raw values
+            h_now = svh_ref[0, :, c:c + 1]
+            w_now = svw_ref[0, :, c:c + 1]
+            task = j_col > 0
+        else:
+            o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (N, 1)
+            h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
+            w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
+            task = True  # the null state's w = 0 already blocks offloading
         price_now = lam * o_now + mu * h_now
-        off = (price_now < w_now) & (w_now > 0)
+        off = (price_now < w_now) & (w_now > 0) & task
         off_ref[0, :, c:c + 1] = off.astype(jnp.float32)
 
         # dual subgradient from the full policy under rho_t
@@ -204,8 +227,21 @@ def _pad_fleet(j_seq, lam0, counts0, o_tab, h_tab, w_tab, B, *, n_mult):
     return j_p, lam_p, counts0, o, h, w, B_p, o.shape
 
 
+def _pad_slot_values(slot_values, K, chunk, Np):
+    """Pad (T, N) raw slot-value streams to (K, N_pad, C) kernel layout.
+
+    Padded devices get 0 values — with w = 0 they can never offload."""
+    out = []
+    for sv in slot_values:
+        T, N = sv.shape
+        svp = jnp.pad(sv.astype(jnp.float32), ((0, 0), (0, Np - N)))
+        out.append(svp.reshape(K, chunk, Np).transpose(0, 2, 1))
+    return tuple(out)
+
+
 def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
-                          B, H, a, beta, *, chunk=8, t0=0, interpret=True):
+                          B, H, a, beta, *, chunk=8, t0=0,
+                          slot_values=None, interpret=True):
     """Fused T-slot OnAlgo rollout (matches kernels/ref.onalgo_chunked_ref).
 
     j_seq: (T, N) int32 state indices, T a multiple of ``chunk``.
@@ -214,6 +250,10 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
       space the duals are updated in (preconditioned by the caller).
     B (N,), H (): constraint RHS in the same space; a, beta: step rule.
     t0: global slot count already consumed (for resuming mid-trace).
+    slot_values: optional (o_now, h_now, w_now) raw per-slot (T, N) value
+      streams — the service overlay, ALREADY in the dual space — driving
+      the realized decision instead of the table gather (rho and the
+      dual subgradient stay on the tables).
 
     Returns (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
              lam (N,), mu (), counts (N, M)).
@@ -230,12 +270,20 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
                       jnp.float32(H)]).reshape(1, 3)
 
-    kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk, t0=t0)
+    has_slots = slot_values is not None
+    sv_args = (_pad_slot_values(slot_values, K, chunk, Np) if has_slots
+               else ())
+    sv_specs = [pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0))
+                for _ in sv_args]
+
+    kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk, t0=t0,
+                             has_slots=has_slots)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K,),
         in_specs=[
             pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
+            *sv_specs,
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
@@ -262,7 +310,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
@@ -300,11 +348,19 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_tiled_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
-                         mu0_ref, counts0_ref, scal_ref,
-                         off_ref, museq_ref, lnorm_ref,
-                         lam_ref, mu_ref, counts_ref,
-                         load_acc, lam2_acc, *, chunk, n_tiles, t0):
+def _onalgo_tiled_kernel(*refs, chunk, n_tiles, t0, has_slots):
+    if has_slots:
+        (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         off_ref, museq_ref, lnorm_ref,
+         lam_ref, mu_ref, counts_ref,
+         load_acc, lam2_acc) = refs
+    else:
+        (j_ref, o_ref, h_ref, w_ref, b_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         off_ref, museq_ref, lnorm_ref,
+         lam_ref, mu_ref, counts_ref,
+         load_acc, lam2_acc) = refs
     k = pl.program_id(0)
     c = pl.program_id(1)
     i = pl.program_id(2)
@@ -340,10 +396,17 @@ def _onalgo_tiled_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
     lam = lam_ref[...]  # (bn, 1)
     mu = mu_ref[0, 0]  # mu_t: written by the previous slot's phase 2
 
-    o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (bn, 1)
-    h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
-    w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
-    off = (lam * o_now + mu * h_now < w_now) & (w_now > 0)
+    if has_slots:  # service overlay: raw values drive the decision
+        o_now = svo_ref[0]  # (bn, 1) dual-space raw values
+        h_now = svh_ref[0]
+        w_now = svw_ref[0]
+        task = j_col > 0
+    else:
+        o_now = jnp.sum(o * onehot, axis=1, keepdims=True)  # (bn, 1)
+        h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
+        w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
+        task = True  # the null state's w = 0 already blocks offloading
+    off = (lam * o_now + mu * h_now < w_now) & (w_now > 0) & task
     off_ref[0] = off.astype(jnp.float32)
 
     price = lam * o + mu * h
@@ -373,11 +436,12 @@ def _onalgo_tiled_kernel(j_ref, o_ref, h_ref, w_ref, b_ref, lam0_ref,
 
 def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                         B, H, a, beta, *, chunk=8, block_n=256, t0=0,
-                        interpret=True):
+                        slot_values=None, interpret=True):
     """Device-tiled fused OnAlgo rollout — same contract and results as
-    ``onalgo_chunked_pallas`` (and ``kernels/ref.onalgo_chunked_ref``), but
-    VMEM use is O(block_n * M) instead of O(N * M): fleets of any size run
-    chunked without sharding first.
+    ``onalgo_chunked_pallas`` (and ``kernels/ref.onalgo_chunked_ref``),
+    including the service-overlay ``slot_values`` streams, but VMEM use is
+    O(block_n * M) instead of O(N * M): fleets of any size run chunked
+    without sharding first.
 
     block_n: devices per tile (multiple of 8); N is padded to it with inert
       zero-value rows.  See the module comment above for the two-phase mu
@@ -411,13 +475,20 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
                       jnp.float32(H)]).reshape(1, 3)
 
+    has_slots = slot_values is not None
+    sv_args = (_pad_slot_values(slot_values, K, chunk, Np) if has_slots
+               else ())
+    sv_specs = [pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c))
+                for _ in sv_args]
+
     kern = functools.partial(_onalgo_tiled_kernel, chunk=chunk,
-                             n_tiles=n_tiles, t0=t0)
+                             n_tiles=n_tiles, t0=t0, has_slots=has_slots)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K, chunk, n_tiles),
         in_specs=[
             pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
+            *sv_specs,
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
@@ -448,7 +519,7 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),

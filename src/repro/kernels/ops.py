@@ -13,7 +13,6 @@ import os
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 
 _INTERPRET = None
@@ -51,23 +50,28 @@ def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
 
 @partial(jax.jit, static_argnames=("chunk", "t0"))
 def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                   a, beta, *, chunk=8, t0=0):
-    """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas)."""
+                   a, beta, *, chunk=8, t0=0, slot_values=None):
+    """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas).
+
+    ``slot_values``: optional (o, h, w) raw (T, N) streams (service
+    overlay, dual space) driving the realized decision."""
     from repro.kernels.onalgo_step import onalgo_chunked_pallas
     return onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                  w_tab, B, H, a, beta, chunk=chunk, t0=t0,
+                                 slot_values=slot_values,
                                  interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("chunk", "block_n", "t0"))
 def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                 a, beta, *, chunk=8, block_n=256, t0=0):
+                 a, beta, *, chunk=8, block_n=256, t0=0, slot_values=None):
     """Device-tiled fused rollout (see onalgo_step.onalgo_tiled_pallas):
     same results as ``onalgo_chunked`` with O(block_n * M) VMEM."""
     from repro.kernels.onalgo_step import onalgo_tiled_pallas
     return onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                w_tab, B, H, a, beta, chunk=chunk,
                                block_n=block_n, t0=t0,
+                               slot_values=slot_values,
                                interpret=interpret_mode())
 
 

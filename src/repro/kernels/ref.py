@@ -27,11 +27,13 @@ def onalgo_duals_ref(lam, mu, rho, o_tab, h_tab, w_tab, B):
 
 
 def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                       a, beta, t0=0):
+                       a, beta, t0=0, slot_values=None):
     """Slot-sequential oracle for the time-chunked kernel.
 
     Same contract as onalgo_step.onalgo_chunked_pallas: tables already in
-    the (preconditioned) dual space, j_seq (T, N).  Returns
+    the (preconditioned) dual space, j_seq (T, N); optional ``slot_values``
+    (o, h, w) raw (T, N) streams (service overlay, dual space) drive the
+    realized decision in place of the table gather.  Returns
     (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
      lam (N,), mu (), counts (N, M)).
     """
@@ -42,15 +44,22 @@ def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
     w = jnp.broadcast_to(w_tab, (N, M)).astype(jnp.float32)
     B = jnp.broadcast_to(B, (N,)).astype(jnp.float32)
     rows = jnp.arange(N)
+    has_slots = slot_values is not None
 
-    def slot(carry, j):
+    def slot(carry, x):
         lam, mu, counts, t = carry
+        j = x[0]
         counts = counts.at[rows, j].add(1.0)
         t = t + 1
         tf = jnp.maximum(t, 1).astype(jnp.float32)
         rho = counts / tf
-        o_now, h_now, w_now = o[rows, j], h[rows, j], w[rows, j]
-        off = (lam * o_now + mu * h_now < w_now) & (w_now > 0)
+        if has_slots:
+            o_now, h_now, w_now = x[1], x[2], x[3]
+            task = j > 0
+        else:
+            o_now, h_now, w_now = o[rows, j], h[rows, j], w[rows, j]
+            task = True
+        off = (lam * o_now + mu * h_now < w_now) & (w_now > 0) & task
         price = lam[:, None] * o + mu * h
         y = ((price < w) & (w > 0)).astype(jnp.float32)
         ry = rho * y
@@ -62,10 +71,13 @@ def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
         lnorm = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
         return (lam, mu, counts, t), (off, mu, lnorm)
 
+    xs = (j_seq.astype(jnp.int32),)
+    if has_slots:
+        xs = xs + tuple(sv.astype(jnp.float32) for sv in slot_values)
     init = (lam0.astype(jnp.float32), jnp.float32(mu0),
             counts0.astype(jnp.float32), jnp.int32(t0))
     (lam, mu, counts, _), (off, mu_seq, lnorm) = jax.lax.scan(
-        slot, init, j_seq.astype(jnp.int32))
+        slot, init, xs)
     return off, mu_seq, lnorm, lam, mu, counts
 
 

@@ -23,14 +23,13 @@ import traceback  # noqa: E402
 from functools import partial  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.analysis.hlo_stats import collective_stats, cost_summary  # noqa: E402
 from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.api import ModelAPI  # noqa: E402
-from repro.parallel import axis_rules, logical_to_spec  # noqa: E402
+from repro.parallel import axis_rules  # noqa: E402
 from repro.parallel.sharding import shape_aware_spec_tree  # noqa: E402
 from repro.train import optimizer as opt_lib  # noqa: E402
 from repro.train.trainer import TrainState, make_train_step  # noqa: E402

@@ -7,8 +7,6 @@ scans over pattern instances — HLO size stays O(pattern), not O(depth).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

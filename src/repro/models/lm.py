@@ -8,8 +8,6 @@ materializes the (tokens x vocab) logits tensor.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.parallel import compile_mode
 from repro.parallel.sharding import shard
 
 

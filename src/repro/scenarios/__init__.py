@@ -5,6 +5,9 @@ Public API:
   register, register_modifier, names,
   compile_scenario, default_scenarios,
   SCENARIO_KINDS, MODIFIERS             (registry)
+  CatalogEntry, load_catalog, load_entry,
+  catalog_dir, catalog_names,
+  compile_named                         (catalog: YAML named workloads)
   SweepGrid, product_grid, grid_from_cells,
   stack_rules, stack_params,
   sweep_simulate, unstack_series        (sweeps)
@@ -16,6 +19,9 @@ from repro.scenarios.spec import CompiledScenario, Scenario, compose
 from repro.scenarios.registry import (MODIFIERS, SCENARIO_KINDS,
                                       compile_scenario, default_scenarios,
                                       names, register, register_modifier)
+from repro.scenarios.catalog import (CatalogEntry, catalog_dir,
+                                     catalog_names, compile_named,
+                                     load_catalog, load_entry)
 from repro.scenarios.sweeps import (SweepGrid, grid_from_cells, product_grid,
                                     stack_params, stack_rules,
                                     sweep_simulate, unstack_series)
@@ -25,8 +31,9 @@ from repro.scenarios.runner import (resolve_engine, resolve_use_kernel,
 __all__ = [
     "Scenario", "CompiledScenario", "compose", "MODIFIERS", "SCENARIO_KINDS",
     "compile_scenario", "default_scenarios", "names", "register",
-    "register_modifier", "SweepGrid", "grid_from_cells",
-    "product_grid", "stack_params", "stack_rules", "sweep_simulate",
-    "unstack_series", "resolve_engine", "resolve_use_kernel",
-    "run_all_scenarios", "run_scenario",
+    "register_modifier", "CatalogEntry", "catalog_dir", "catalog_names",
+    "compile_named", "load_catalog", "load_entry", "SweepGrid",
+    "grid_from_cells", "product_grid", "stack_params", "stack_rules",
+    "sweep_simulate", "unstack_series", "resolve_engine",
+    "resolve_use_kernel", "run_all_scenarios", "run_scenario",
 ]

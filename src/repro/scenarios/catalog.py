@@ -1,0 +1,122 @@
+"""Declarative YAML scenario catalog.
+
+``scenarios/catalog/*.yaml`` names workloads once, so regression suites,
+benchmarks, and sweeps reference them declaratively instead of
+re-encoding spec kwargs at every call site:
+
+.. code-block:: yaml
+
+    name: metro_daily
+    description: city fleet with a day cycle and commuter churn
+    base:   {kind: bursty_counter, T: 2000, N: 16, seed: 3}
+    modifiers:
+      - {kind: diurnal, extra: {period: 500, amp: 0.7}}
+      - {kind: churn,   extra: {churn_frac: 0.25}}
+
+``base`` is any registered scenario kind; ``modifiers`` (optional) apply
+in order through ``spec.compose``, so an entry compiles to the same
+``(Trace, tables, params)`` contract every engine consumes.  Modifier
+entries inherit the base's (T, N, seed) unless they override them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Union
+
+from repro.scenarios.spec import CompiledScenario, Scenario, compose
+
+try:
+    import yaml
+except ImportError:  # pragma: no cover - pyyaml is a declared dependency
+    yaml = None
+
+
+def _require_yaml():
+    if yaml is None:
+        raise RuntimeError(
+            "the scenario catalog needs pyyaml (pip install pyyaml)")
+    return yaml
+
+
+def catalog_dir() -> Path:
+    """The packaged catalog directory (``repro/scenarios/catalog``)."""
+    return Path(__file__).resolve().parent / "catalog"
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogEntry:
+    """A named workload: base spec + ordered modifier chain."""
+
+    name: str
+    base: Scenario
+    modifiers: tuple = ()
+    description: str = ""
+
+    def compile(self) -> CompiledScenario:
+        from repro.scenarios.registry import compile_scenario
+        compiled = compile_scenario(self.base)
+        for mod in self.modifiers:
+            compiled = compose(compiled, mod)
+        return compiled
+
+
+def _spec_from_dict(d: dict, inherit: Optional[Scenario] = None) -> Scenario:
+    d = dict(d)
+    if "kind" not in d:
+        raise ValueError(f"scenario entry missing 'kind': {d!r}")
+    if inherit is not None:
+        for field in ("T", "N", "seed"):
+            d.setdefault(field, getattr(inherit, field))
+    extra = d.pop("extra", {})
+    sc = Scenario(**d)
+    return sc.with_extra(**extra) if extra else sc
+
+
+def parse_entry(doc: dict, name: Optional[str] = None) -> CatalogEntry:
+    """Build a :class:`CatalogEntry` from one parsed YAML document."""
+    if not isinstance(doc, dict) or "base" not in doc:
+        raise ValueError(f"catalog entry must be a mapping with a 'base' "
+                         f"spec, got: {doc!r}")
+    base = _spec_from_dict(doc["base"])
+    mods = tuple(_spec_from_dict(m, inherit=base)
+                 for m in doc.get("modifiers", []) or [])
+    return CatalogEntry(name=doc.get("name", name or "unnamed"),
+                        base=base, modifiers=mods,
+                        description=doc.get("description", ""))
+
+
+def load_entry(path: Union[str, Path]) -> CatalogEntry:
+    """Load one ``*.yaml`` catalog file."""
+    path = Path(path)
+    doc = _require_yaml().safe_load(path.read_text())
+    return parse_entry(doc, name=path.stem)
+
+
+def load_catalog(path: Optional[Union[str, Path]] = None
+                 ) -> Dict[str, CatalogEntry]:
+    """Load every entry of a catalog directory (default: the packaged
+    one), keyed by entry name."""
+    path = Path(path) if path is not None else catalog_dir()
+    entries = [load_entry(f) for f in sorted(path.glob("*.yaml"))]
+    out: Dict[str, CatalogEntry] = {}
+    for e in entries:
+        if e.name in out:
+            raise ValueError(f"duplicate catalog entry name {e.name!r}")
+        out[e.name] = e
+    return out
+
+
+def catalog_names() -> List[str]:
+    return sorted(load_catalog())
+
+
+def compile_named(name: str, path: Optional[Union[str, Path]] = None
+                  ) -> CompiledScenario:
+    """Compile a catalog entry by name (regression-suite entry point)."""
+    cat = load_catalog(path)
+    if name not in cat:
+        raise KeyError(f"unknown catalog scenario {name!r}; "
+                       f"available: {sorted(cat)}")
+    return cat[name].compile()

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,6 +60,7 @@ def default_scenarios() -> List[Scenario]:
     return [
         Scenario("stationary", **base),
         Scenario("bursty", **base),
+        Scenario("bursty_counter", **base),
         Scenario("diurnal", **base).with_extra(period=500, amp=0.8),
         Scenario("churn", **base).with_extra(churn_frac=0.4),
         Scenario("flash_crowd", **base).with_extra(n_events=3,
@@ -95,6 +97,57 @@ def _bursty(sc: Scenario) -> CompiledScenario:
     trace, rho = bursty_trace(space, _trace_spec(sc))
     return CompiledScenario(sc, trace, space.tables(), sc.params(),
                             true_rho=rho, meta={"rho_is_approx": True})
+
+
+@register("bursty_counter")
+def _bursty_counter(sc: Scenario) -> CompiledScenario:
+    """Bursty arrivals compiled through the workload layer (RNG v1).
+
+    The ON/OFF process is the counter-based Markov chain the service
+    tier's compiler uses (``repro.workload``: stationary-initialized,
+    burst/gap means matched to the legacy renewal process), so fleet
+    scenarios and compiled service runs share one arrival
+    implementation.  States are iid categorical draws as in
+    ``stationary``; the chain starts at its stationary law, so the
+    per-slot marginal rho is exact (the *process* is non-iid —
+    ``rho_is_approx`` flags the empirical-estimator caveat, as for
+    ``bursty``).
+    """
+    from repro.workload import arrival_chain_probs, streams
+
+    space = scenario_space(sc)
+    burst_len = tuple(sc.opt("burst_len", (5, 10)))
+    mean_gap = float(sc.opt("mean_gap", 8.0))
+    T, N = sc.T, sc.N
+    p_on, p_stay, p_init = arrival_chain_probs(burst_len, mean_gap)
+    u = streams.uniform_block(sc.seed, streams.STREAM_SCENARIO, T, N, 1)
+    u0 = jax.random.uniform(
+        streams.stream_key(sc.seed, streams.STREAM_ARRIVAL_INIT), (N,))
+    on = np.asarray(streams.markov_chain(u[0], u0 < p_init,
+                                         jnp.float32(p_on),
+                                         jnp.float32(p_stay)))
+
+    rng = np.random.default_rng(sc.seed)
+    Lo, Lh, Lw = space.num_levels
+    # same Dirichlet level priors as data.traces iid/bursty generators
+    probs = [rng.dirichlet(np.full(L, 3.0)) for L in (Lo, Lh, Lw)]
+    io = rng.choice(Lo, size=(T, N), p=probs[0])
+    ih = rng.choice(Lh, size=(T, N), p=probs[1])
+    iw = rng.choice(Lw, size=(T, N), p=probs[2])
+    j = np.where(on, np.asarray(space.encode(io, ih, iw)), 0)
+
+    w_tab = np.asarray(space.tables()[2])
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(_dloc(rng, w_tab[j]), jnp.float32))
+    joint = (probs[0][:, None, None] * probs[1][None, :, None]
+             * probs[2][None, None, :])
+    rho_row = np.concatenate([[1.0 - p_init], p_init * joint.reshape(-1)])
+    rho = jnp.asarray(np.broadcast_to(rho_row, (N, space.M)).copy(),
+                      jnp.float32)
+    return CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho,
+                            meta={"rho_is_approx": True,
+                                  "arrival_rng": "counter_v1"})
 
 
 @register("diurnal")
@@ -235,6 +288,74 @@ def _heterogeneous(sc: Scenario) -> CompiledScenario:
     return CompiledScenario(sc, trace, (o_nm, h_nm, w_nm), sc.params(),
                             true_rho=rho,
                             meta={"o_scale": o_scale, "w_scale": w_scale})
+
+
+@register_modifier("diurnal")
+def _mod_diurnal(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
+    """Thin an already-compiled scenario's traffic on a sinusoidal day
+    cycle: slot t keeps each task w.p. (1 - amp) + amp * day(t), so the
+    peak keeps everything and the trough keeps (1 - amp).  Acting purely
+    on the task mask (null-state thinning) keeps any table layout —
+    doubled outage spaces, per-device (N, M) tables — untouched, so it
+    composes with every other modifier.  Invalidates analytic true_rho.
+    """
+    period = int(sc.opt("period", max(sc.T // 4, 2)))
+    amp = float(sc.opt("amp", 0.8))
+    rng = np.random.default_rng(sc.seed + 5)
+    T, N = base.trace.j_idx.shape
+    day = 0.5 * (1.0 + np.sin(2 * np.pi * np.arange(T) / period))
+    keep_p = (1.0 - amp) + amp * day  # (T,) in [1 - amp, 1]
+    keep = rng.random((T, N)) < keep_p[:, None]
+    j = np.where(keep, np.asarray(base.trace.j_idx), 0)
+    d = np.where(keep, np.asarray(base.trace.d_local), 0.0)
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(d, jnp.float32))
+    meta = dict(base.meta, period=period, amp=amp)
+    return CompiledScenario(base.scenario, trace, base.tables, base.params,
+                            meta=meta)
+
+
+@register_modifier("flash_crowd")
+def _mod_flash_crowd(sc: Scenario, base: CompiledScenario
+                     ) -> CompiledScenario:
+    """Densify an already-compiled scenario during flash-crowd windows.
+
+    Within each event window every idle device draws a task w.p.
+    ``peak_prob`` by resampling a state from its OWN realized non-null
+    states (a bootstrap of the base scenario's marginal), so the state
+    distribution stays layout-compatible with whatever the base
+    generator produced (outage mirrors, heterogeneous tables, ...).
+    Devices with no task anywhere in the base trace stay silent.
+    Composition order matters: churn applied after this re-silences
+    absent devices.  Invalidates analytic true_rho.
+    """
+    n_events = int(sc.opt("n_events", 3))
+    event_len = int(sc.opt("event_len", 60))
+    peak_prob = float(sc.opt("peak_prob", 0.97))
+    rng = np.random.default_rng(sc.seed + 6)
+    T, N = base.trace.j_idx.shape
+
+    starts = np.sort(rng.integers(0, max(T - event_len, 1), n_events))
+    in_event = np.zeros(T, bool)
+    for s in starts:
+        in_event[s:s + event_len] = True
+
+    j = np.asarray(base.trace.j_idx).copy()
+    d = np.asarray(base.trace.d_local).copy()
+    fill = in_event[:, None] & (j == 0) & (rng.random((T, N)) < peak_prob)
+    for n in range(N):
+        busy = np.flatnonzero(j[:, n] > 0)
+        slots = np.flatnonzero(fill[:, n])
+        if busy.size == 0 or slots.size == 0:
+            continue
+        donors = busy[rng.integers(0, busy.size, slots.size)]
+        j[slots, n] = j[donors, n]
+        d[slots, n] = d[donors, n]
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(d, jnp.float32))
+    meta = dict(base.meta, event_starts=starts, event_len=event_len)
+    return CompiledScenario(base.scenario, trace, base.tables, base.params,
+                            meta=meta)
 
 
 @register_modifier("outage")

@@ -132,25 +132,39 @@ def scenario_space(sc: Scenario) -> StateSpace:
     return default_paper_space(num_w=sc.num_w)
 
 
-def compose(spec_a: Scenario, spec_b: Scenario) -> CompiledScenario:
-    """Layer scenario ``spec_b`` on top of compiled ``spec_a``.
+def compose(spec_a, spec_b: Scenario) -> CompiledScenario:
+    """Layer scenario ``spec_b`` on top of (compiled) ``spec_a``.
 
-    ``spec_a`` can be any registered kind; ``spec_b.kind`` must have a
-    registered *modifier* (a pure transform on a CompiledScenario — e.g.
-    ``churn`` masks device activity windows, ``outage`` mirrors the state
-    space with w = 0 down-states).  Because modifiers act through the
+    ``spec_a`` is any registered kind — as a :class:`Scenario` spec or an
+    already-compiled :class:`CompiledScenario` (so modifier chains fold:
+    ``compose(compose(a, b), c)`` — the YAML catalog compiles its modifier
+    lists this way).  ``spec_b.kind`` must have a registered *modifier*
+    (a pure transform on a CompiledScenario — e.g. ``churn`` masks device
+    activity windows, ``outage`` mirrors the state space with w = 0
+    down-states, ``diurnal`` thins traffic on a day cycle, ``flash_crowd``
+    densifies event windows).  Because modifiers act through the
     ``(Trace, tables, params)`` contract, compositions run on every engine
     (scan, chunked/tiled, sharded, the batched service tier) unchanged.
+    Modifiers apply in order, and order can matter (e.g. churn after
+    flash_crowd re-silences absent devices).
 
     Both specs must describe the same (T, N) fleet.  Returns the composed
     CompiledScenario; ``meta`` merges both generators' diagnostics.
     """
     from repro.scenarios.registry import MODIFIERS, compile_scenario
-    if (spec_a.T, spec_a.N) != (spec_b.T, spec_b.N):
+    if isinstance(spec_a, CompiledScenario):
+        base = spec_a
+        shape_a = (base.trace.T, base.trace.N)
+    else:
+        base = None
+        shape_a = (spec_a.T, spec_a.N)
+    if shape_a != (spec_b.T, spec_b.N):
         raise ValueError(
-            f"cannot compose different fleets: {(spec_a.T, spec_a.N)} vs "
+            f"cannot compose different fleets: {shape_a} vs "
             f"{(spec_b.T, spec_b.N)}")
     if spec_b.kind not in MODIFIERS:
         raise KeyError(f"scenario kind {spec_b.kind!r} has no registered "
                        f"modifier; composable: {sorted(MODIFIERS)}")
-    return MODIFIERS[spec_b.kind](spec_b, compile_scenario(spec_a))
+    if base is None:
+        base = compile_scenario(spec_a)
+    return MODIFIERS[spec_b.kind](spec_b, base)

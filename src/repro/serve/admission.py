@@ -12,8 +12,7 @@ FLOP/s budget per slot.
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache, partial
-from typing import Optional
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -24,23 +23,26 @@ from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
 
 
-@lru_cache(maxsize=None)
-def _space_levels(space: StateSpace):
-    """Per-space jnp level arrays, built once (StateSpace is frozen)."""
-    return (jnp.asarray(space.o_levels, jnp.float32),
-            jnp.asarray(space.h_levels, jnp.float32),
-            jnp.asarray(space.w_levels, jnp.float32))
+@partial(jax.jit, static_argnames=("space",))
+def quantize_states_device(space: StateSpace, o, h, w, task_mask
+                           ) -> jax.Array:
+    """Device-side :func:`quantize_states`: one fused jitted pass from raw
+    (o, h, w, task) to int32 state indices, jit-composable (the compiled
+    service uses it inside its single compile kernel).  ``space`` is
+    static (frozen/hashable), so the level grids fold into the program as
+    constants; ``StateSpace.encode`` stays the single source of truth for
+    the state layout.  Nearest-level ties break to the first level, in
+    float32 distances."""
+    def nearest(x, levels):
+        lv = jnp.asarray(levels, jnp.float32)
+        return jnp.argmin(jnp.abs(jnp.asarray(x, jnp.float32)[..., None]
+                                  - lv), axis=-1)
 
-
-@jax.jit
-def _nearest_levels(o, h, w, o_lv, h_lv, w_lv):
-    """Fused nearest-level argmins, any batch shape; compile is keyed on
-    shapes/dtypes only (no static args), so pool-calibrated spaces that
-    differ only in level values share one XLA program."""
-    io = jnp.argmin(jnp.abs(o[..., None] - o_lv), axis=-1)
-    ih = jnp.argmin(jnp.abs(h[..., None] - h_lv), axis=-1)
-    iw = jnp.argmin(jnp.abs(w[..., None] - w_lv), axis=-1)
-    return io, ih, iw
+    io = nearest(o, space.o_levels)
+    ih = nearest(h, space.h_levels)
+    iw = nearest(w, space.w_levels)
+    j = space.encode(io, ih, iw).astype(jnp.int32)
+    return jnp.where(jnp.asarray(task_mask, bool), j, jnp.int32(0))
 
 
 def quantize_states(space: StateSpace, o, h, w, task_mask) -> np.ndarray:
@@ -48,21 +50,13 @@ def quantize_states(space: StateSpace, o, h, w, task_mask) -> np.ndarray:
 
     Accepts any matching batch shape — (N,) for one controller slot,
     (T, N) for a whole compiled service horizon — in one jitted
-    nearest-level kernel; the null-aware flat encode stays with
-    ``StateSpace.encode``, the single source of truth for the state
-    layout the value tables use.  Ties break to the first level, like
-    the numpy argmin this replaces; distances are computed in float32,
-    so values within a float32 ulp of a level midpoint may round
-    differently than the old float64 host path.
+    nearest-level + encode kernel (:func:`quantize_states_device`).
+    Ties break to the first level, like the numpy argmin this replaced;
+    distances are computed in float32, so values within a float32 ulp of
+    a level midpoint may round differently than the old float64 host
+    path.
     """
-    o_lv, h_lv, w_lv = _space_levels(space)
-    io, ih, iw = _nearest_levels(jnp.asarray(o, jnp.float32),
-                                 jnp.asarray(h, jnp.float32),
-                                 jnp.asarray(w, jnp.float32),
-                                 o_lv, h_lv, w_lv)
-    j = np.asarray(space.encode(np.asarray(io), np.asarray(ih),
-                                np.asarray(iw)))
-    return np.where(np.asarray(task_mask, bool), j, 0).astype(np.int32)
+    return np.asarray(quantize_states_device(space, o, h, w, task_mask))
 
 
 @dataclasses.dataclass

@@ -9,9 +9,11 @@ lowers a ``(SimConfig, PrecomputedPool)`` pair to the same
 :class:`~repro.core.fleet.RawOverlay` of raw per-slot values — so the
 whole horizon runs as ONE scanned (or chunked/sharded) fleet rollout:
 
-  * the image stream, Markov channel, and bursty arrivals are pre-sampled
-    host-side with the SAME RNG consumption order as the legacy loop
-    (identical seed => identical workload, slot for slot);
+  * the image stream, Markov channel, and bursty arrivals come from the
+    workload layer (:mod:`repro.workload`) under the versioned RNG
+    contract ``sim.rng_version``: v1 (the default) generates them from
+    counter-based streams, jitted end to end on device; v0 replays the
+    legacy host loop's exact draw order (pinned golden fixture only);
   * raw (o, h, w) values are quantized into the pool-calibrated state
     space in one fused call => the (T, N) ``Trace``;
   * raw values, plus the local/cloudlet correctness of each sampled
@@ -22,6 +24,7 @@ whole horizon runs as ONE scanned (or chunked/sharded) fleet rollout:
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import jax
@@ -31,25 +34,10 @@ import numpy as np
 from repro.core.fleet import RawOverlay, Trace
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
-from repro.serve.admission import quantize_states
-
-
-def bursty_arrivals(rng: np.random.Generator, T: int, N: int,
-                    burst_len: Tuple[int, int], mean_gap: float
-                    ) -> np.ndarray:
-    """The service tier's built-in ON/OFF bursty traffic, (T, N) bool.
-
-    Shared by the legacy loop and the compiler — byte-identical RNG
-    consumption is what makes the two paths replay the same workload.
-    """
-    on = np.zeros((T, N), bool)
-    for n in range(N):
-        t = int(rng.integers(0, burst_len[1]))
-        while t < T:
-            ln = int(rng.integers(burst_len[0], burst_len[1] + 1))
-            on[t:t + ln, n] = True
-            t += ln + 1 + int(rng.geometric(1.0 / mean_gap))
-    return on
+from repro.serve.admission import quantize_states, quantize_states_device
+from repro.workload import (RNG_LEGACY_HOST, generate_service_workload,
+                            validate_rng_version)
+from repro.workload.legacy import legacy_service_workload
 
 
 @dataclasses.dataclass
@@ -57,10 +45,10 @@ class CompiledService:
     """A service run lowered to the fleet-engine contract.
 
     ``trace`` / ``tables`` / ``params`` / ``overlay`` feed
-    ``fleet.simulate(..., overlay=...)`` verbatim; ``space`` is the
-    pool-calibrated quantized state space behind ``trace.j_idx``; ``on``
-    is the realized (T, N) arrival matrix (useful for replaying the same
-    workload through other tiers).
+    ``fleet.simulate(..., overlay=...)`` (or the chunked/sharded engines)
+    verbatim; ``space`` is the pool-calibrated quantized state space
+    behind ``trace.j_idx``; ``on`` is the realized (T, N) arrival matrix
+    (useful for replaying the same workload through other tiers).
     """
 
     sim: "SimConfig"  # noqa: F821 — forward ref, defined in simulator.py
@@ -80,62 +68,127 @@ class CompiledService:
         return self.trace, self.tables, self.params
 
 
+@partial(jax.jit,
+         static_argnames=("T", "N", "pool_size", "num_rates", "burst_len",
+                          "space"))
+def _compile_v1(seed, T, N, pool_size, num_rates, burst_len, mean_gap,
+                space, on_override, o_levels, cycles, phi_hat, sigma,
+                d_local, corr_local, corr_cloud, v_risk, zeta_pen):
+    """The whole v1 lowering as ONE fused device pass: counter-based
+    workload generation, raw-value gathers, and state quantization.
+
+    Returns (on, j_idx, o, h, w, correct_local, correct_cloud, d_local).
+    ``zeta_pen`` is the P3 delay penalty (0 disables it exactly:
+    clip(w - 0, 0, 1) == w for w already in [0, 1]).  ``on_override``
+    replaces the generated arrivals when not None — the image and
+    channel streams are unaffected (counter addressing has no
+    draw-order coupling).
+    """
+    wl = generate_service_workload(seed, T, N, pool_size, num_rates,
+                                   burst_len, mean_gap)
+    on = wl.on if on_override is None else on_override
+    o_raw = o_levels[wl.rates]
+    h_raw = cycles[wl.img]
+    w_raw = jnp.clip(phi_hat[wl.img] - v_risk * sigma[wl.img], 0.0, 1.0)
+    w_raw = jnp.clip(w_raw - zeta_pen, 0.0, 1.0)
+    j = quantize_states_device(space, o_raw, h_raw, w_raw, on)
+    return (on, j, o_raw, h_raw, w_raw, corr_local[wl.img],
+            corr_cloud[wl.img], d_local[wl.img])
+
+
+def _pool_device_arrays(pool, fp):
+    """float32 device copies of the pool tables, cached on the pool object
+    under its content fingerprint (compile_service is called per run; the
+    pool is reused across runs)."""
+    cache = getattr(pool, "_f32_cache", None)
+    if cache is None or cache[0] != fp:
+        arrays = tuple(jnp.asarray(x, jnp.float32)
+                       for x in (pool.cycles, pool.phi_hat, pool.sigma,
+                                 pool.d_local, pool.local_correct,
+                                 pool.cloud_correct))
+        cache = pool._f32_cache = (fp, arrays)
+    return cache[1]
+
+
+@lru_cache(maxsize=None)
+def _space_tables(space: StateSpace):
+    """Per-space value tables, built once (StateSpace is frozen)."""
+    return space.tables()
+
+
 def compile_service(sim, pool, on: Optional[np.ndarray] = None
                     ) -> CompiledService:
     """Lower (SimConfig, PrecomputedPool) to a :class:`CompiledService`.
+
+    Workload generation follows ``sim.rng_version`` (see
+    :mod:`repro.workload`); there is no per-slot host loop on any path —
+    v1 is jitted counter-based streams, v0 delegates to the frozen
+    legacy sampler.
 
     ``on``: optional (T, N) bool arrival matrix overriding the built-in
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays fleet-tier workloads.
     """
-    from repro.serve.simulator import RATES, pool_space, power_of_rate
+    from repro.serve.simulator import (RATES, pool_fingerprint, pool_space,
+                                       power_of_rate)
 
-    rng = np.random.default_rng(sim.seed)
     N, T = sim.num_devices, sim.T
     S = len(pool.local_correct)
+    rng_version = validate_rng_version(sim.rng_version)
 
     if on is not None:
         on = np.asarray(on, bool)
         if on.shape != (T, N):
             raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
-    else:
-        on = bursty_arrivals(rng, T, N, sim.burst_len, sim.mean_gap)
 
-    # Pre-sample the image stream and the Markov channel with the legacy
-    # loop's exact per-slot draw order (img, flip, candidate-rate).
-    rate_idx = rng.integers(0, len(RATES), N)
-    img = np.zeros((T, N), np.int64)
-    rates = np.zeros((T, N), np.int64)
-    for t in range(T):
-        img[t] = rng.integers(0, S, N)
-        flip = rng.random(N) > 0.9  # channel evolves (stay w.p. 0.9)
-        rate_idx = np.where(flip, rng.integers(0, len(RATES), N), rate_idx)
-        rates[t] = rate_idx
-
-    o_raw = power_of_rate(RATES[rates])  # (T, N) Watts
-    h_raw = pool.cycles[img]  # (T, N) cloudlet cycles
-    # risk-adjusted predicted gain (eq. 1), optionally delay-discounted (P3)
-    w_raw = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
-                    0.0, 1.0)
-    if sim.zeta:
-        w_raw = np.clip(w_raw - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
+    if rng_version == RNG_LEGACY_HOST:
+        # v0: host-order draws + float64 host gathers, byte-compatible
+        # with the legacy loop (the pinned golden fixture).
+        on, img, rates = legacy_service_workload(
+            sim.seed, T, N, S, len(RATES), sim.burst_len, sim.mean_gap,
+            on=on)
+        o_raw = power_of_rate(RATES[rates])  # (T, N) Watts
+        h_raw = pool.cycles[img]  # (T, N) cloudlet cycles
+        # risk-adjusted predicted gain (eq. 1), delay-discounted (P3)
+        w_raw = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
                         0.0, 1.0)
-
-    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
-    j = quantize_states(space, o_raw, h_raw, w_raw, on)
+        if sim.zeta:
+            w_raw = np.clip(w_raw - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
+                            0.0, 1.0)
+        c_local = pool.local_correct[img]
+        c_cloud = pool.cloud_correct[img]
+        d_loc = pool.d_local[img]
+        space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+        j = quantize_states(space, o_raw, h_raw, w_raw, on)
+    else:
+        # v1: counter-based streams; workload generation, value gathers,
+        # and quantization run as one fused jitted device pass.
+        space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+        cycles, phi_hat, sigma, d_local, c_l, c_c = _pool_device_arrays(
+            pool, pool_fingerprint(pool))
+        on_dev, j, o_raw, h_raw, w_raw, c_local, c_cloud, d_loc = (
+            _compile_v1(sim.seed, T, N, S, len(RATES),
+                        tuple(sim.burst_len), sim.mean_gap, space,
+                        None if on is None else jnp.asarray(on),
+                        jnp.asarray(power_of_rate(RATES), jnp.float32),
+                        cycles, phi_hat, sigma, d_local, c_l, c_c,
+                        jnp.float32(sim.v_risk),
+                        jnp.float32(sim.zeta * (sim.d_tr
+                                                + sim.d_pr_cloud))))
+        on = np.asarray(on_dev, bool)
 
     trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
-                  d_local=jnp.asarray(pool.d_local[img], jnp.float32))
+                  d_local=jnp.asarray(d_loc, jnp.float32))
     overlay = RawOverlay(
         o=jnp.asarray(o_raw, jnp.float32),
         h=jnp.asarray(h_raw, jnp.float32),
         w=jnp.asarray(w_raw, jnp.float32),
-        correct_local=jnp.asarray(pool.local_correct[img], jnp.float32),
-        correct_cloud=jnp.asarray(pool.cloud_correct[img], jnp.float32))
+        correct_local=jnp.asarray(c_local, jnp.float32),
+        correct_cloud=jnp.asarray(c_cloud, jnp.float32))
     params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
                           H=jnp.float32(sim.H))
     return CompiledService(sim=sim, space=space, trace=trace,
-                           tables=space.tables(), params=params,
+                           tables=_space_tables(space), params=params,
                            overlay=overlay, on=on)
 
 

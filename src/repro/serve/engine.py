@@ -12,7 +12,6 @@ one compiled program per (batch, len) bucket).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -1,0 +1,22 @@
+"""Workload generation layer: versioned RNG contracts for fleet traffic.
+
+  streams  — counter-based draw primitives (v1 contract: every value is
+             a pure function of (seed, stream_id, t, n))
+  service  — the service tier's arrival / image / channel processes,
+             jitted end to end (ServiceWorkload)
+  legacy   — the v0 stateful host-order sampling, kept only for the
+             pinned golden fixture (simulate_service_legacy)
+"""
+
+from repro.workload import streams
+from repro.workload.streams import (RNG_COUNTER, RNG_LEGACY_HOST,
+                                    markov_chain, stream_key)
+from repro.workload.service import (ServiceWorkload, arrival_chain_probs,
+                                    generate_service_workload,
+                                    validate_rng_version)
+
+__all__ = [
+    "RNG_COUNTER", "RNG_LEGACY_HOST", "markov_chain", "stream_key",
+    "streams", "ServiceWorkload", "arrival_chain_probs",
+    "generate_service_workload", "validate_rng_version",
+]

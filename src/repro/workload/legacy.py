@@ -1,0 +1,65 @@
+"""RNG contract v0: the seed repo's stateful host-order workload sampling.
+
+The original service simulator drew its randomness from one
+``np.random.default_rng(seed)`` cursor in a fixed order (arrivals, then
+initial rates, then per slot: images, channel flips, candidate rates).
+Byte-identical draw order was what let the compiled service replay the
+legacy loop's workload slot for slot.
+
+That cursor is the reason the old ``compile_service`` had an O(T) host
+loop, so v0 is frozen here — used only by ``simulate_service_legacy``
+and the pinned golden-metrics fixture — while everything else runs the
+counter-based v1 contract (:mod:`repro.workload.service`).  Scheduled
+for deletion once enough parity history accrues (see ROADMAP).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def bursty_arrivals(rng: np.random.Generator, T: int, N: int,
+                    burst_len: Tuple[int, int], mean_gap: float
+                    ) -> np.ndarray:
+    """The v0 ON/OFF bursty traffic, (T, N) bool.
+
+    Shared by the legacy loop and the v0 compile path — byte-identical
+    RNG consumption is what makes the two replay the same workload.
+    """
+    on = np.zeros((T, N), bool)
+    for n in range(N):
+        t = int(rng.integers(0, burst_len[1]))
+        while t < T:
+            ln = int(rng.integers(burst_len[0], burst_len[1] + 1))
+            on[t:t + ln, n] = True
+            t += ln + 1 + int(rng.geometric(1.0 / mean_gap))
+    return on
+
+
+def legacy_service_workload(seed: int, T: int, N: int, pool_size: int,
+                            num_rates: int, burst_len: Tuple[int, int],
+                            mean_gap: float,
+                            on: Optional[np.ndarray] = None):
+    """Pre-sample the v0 workload with the legacy loop's exact draw order.
+
+    Returns ``(on, img, rates)`` numpy arrays, all (T, N).  ``on``
+    overrides the built-in bursty arrivals when given (consuming no
+    arrival draws, exactly like the legacy loop).
+    """
+    rng = np.random.default_rng(seed)
+    if on is None:
+        on = bursty_arrivals(rng, T, N, burst_len, mean_gap)
+    else:
+        on = np.asarray(on, bool)
+
+    rate_idx = rng.integers(0, num_rates, N)
+    img = np.zeros((T, N), np.int64)
+    rates = np.zeros((T, N), np.int64)
+    for t in range(T):
+        img[t] = rng.integers(0, pool_size, N)
+        flip = rng.random(N) > 0.9  # channel evolves (stay w.p. 0.9)
+        rate_idx = np.where(flip, rng.integers(0, num_rates, N), rate_idx)
+        rates[t] = rate_idx
+    return on, img, rates

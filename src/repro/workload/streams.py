@@ -1,0 +1,131 @@
+"""Counter-based random streams: the workload layer's RNG primitives.
+
+Every random value a workload consumes is addressed, not drawn: the
+value feeding process channel ``c`` at slot ``t`` for device ``n`` of
+stream ``sid`` is a pure function of ``(seed, sid, c, t, n)``.
+Concretely each stream owns a threefry key ``fold_in(PRNGKey(seed),
+sid)``, each *block* of ``ROW_BLOCK`` consecutive slots owns the key
+``fold_in(stream_key, t // ROW_BLOCK)``, and ``(t % ROW_BLOCK, c, n)``
+indexes the block's counters, so
+
+  * draws are reproducible regardless of host draw order — there is no
+    hidden RNG cursor to keep in sync between code paths;
+  * generation is fully jittable/vmappable and runs on device, one
+    fused threefry sweep per stream (all channels and all slots of a
+    block share one key — T/ROW_BLOCK folds, not T);
+  * for a fixed fleet width N and channel count, extending the horizon
+    T extends the stream without perturbing the prefix (block keys and
+    in-block counters don't move; ROW_BLOCK is a contract constant).
+
+This is the ``rng_version >= 1`` contract (``RNG_COUNTER``).  The legacy
+contract ``rng_version == 0`` (``RNG_LEGACY_HOST``) is the seed repo's
+stateful host-order numpy sampling; it survives only as a pinned golden
+fixture behind :mod:`repro.workload.legacy`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --- RNG contract versions -------------------------------------------------
+RNG_LEGACY_HOST = 0  # v0: host-order numpy draws (golden fixture only)
+RNG_COUNTER = 1  # v1: counter-based streams (this module)
+
+# --- stream ids (one per independent random process) -----------------------
+STREAM_SERVICE = 1  # the service workload block (arrival/image/channel)
+STREAM_ARRIVAL_INIT = 2  # initial ON/OFF state uniforms
+STREAM_SCENARIO = 3  # scenario-engine arrival processes
+
+# Slots per block key (a v1 contract constant: changing it changes every
+# stream's realized values, so it would need a new rng_version).
+ROW_BLOCK = 64
+
+
+def stream_key(seed, sid: int):
+    """The threefry key owning stream ``sid`` of workload ``seed``."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), sid)
+
+
+def _block_keys(seed, sid: int, n_blocks: int):
+    """(n_blocks,) keys — block b is ``fold_in(stream_key, b)``,
+    independent of the horizon."""
+    fold = jax.vmap(jax.random.fold_in, in_axes=(None, 0))
+    return fold(stream_key(seed, sid),
+                jnp.arange(n_blocks, dtype=jnp.uint32))
+
+
+def uniform_block(seed, sid: int, T: int, N: int, channels: int
+                  ) -> jax.Array:
+    """(channels, T, N) U[0, 1) grid addressed by (seed, sid, c, t, n).
+
+    All channels of a slot come from one block draw (counter
+    ((t % ROW_BLOCK) * channels + c) * N + n under the block's key), so
+    a stream that needs several independent per-(t, n) uniforms — e.g.
+    arrivals + image + channel flips — pays a single threefry sweep
+    instead of one per process.
+    """
+    n_blocks = -(-T // ROW_BLOCK)
+    draw = jax.vmap(
+        lambda k: jax.random.uniform(k, (ROW_BLOCK, channels, N)))
+    vals = draw(_block_keys(seed, sid, n_blocks))  # (nb, B, C, N)
+    return vals.reshape(n_blocks * ROW_BLOCK, channels, N)[:T].transpose(
+        1, 0, 2)
+
+
+def uniforms(seed, sid: int, T: int, N: int) -> jax.Array:
+    """(T, N) U[0, 1) grid addressed by (seed, sid, t, n)."""
+    return uniform_block(seed, sid, T, N, 1)[0]
+
+
+def levels_from_uniform(u: jax.Array, num_levels: int) -> jax.Array:
+    """Map U[0, 1) draws to uniform int32 levels [0, num_levels).
+
+    floor(u * L) with a defensive clamp at L - 1 (float32 rounding);
+    the ~L/2^24 non-uniformity is far below workload-model resolution.
+    """
+    idx = jnp.floor(u * num_levels).astype(jnp.int32)
+    return jnp.minimum(idx, num_levels - 1)
+
+
+def _compose_bool_maps(m1, m2):
+    """Composition for associative scans over {0,1}-state transition maps.
+
+    A map is a pair ``(a, b)``: the next state when the current state is
+    0 resp. 1.  ``m2 o m1`` applies m1 first — selecting m2's entry by
+    m1's output — which is associative, so a length-T chain of per-slot
+    maps reduces in O(log T) depth.
+    """
+    a1, b1 = m1
+    a2, b2 = m2
+    pick = lambda s: jnp.where(s, b2, a2)
+    return pick(a1), pick(b1)
+
+
+def markov_chain(u: jax.Array, s0: jax.Array, p_on, p_stay) -> jax.Array:
+    """(T, N) bool two-state Markov chain from per-slot uniforms ``u``.
+
+    OFF -> ON w.p. ``p_on``; ON stays ON w.p. ``p_stay``; ``s0`` (N,)
+    bool is the state entering slot 0's transition.  Evaluated with an
+    *associative* scan over per-slot transition maps — no per-slot host
+    loop, no sequential device scan, O(log T) depth.
+    """
+    # per-slot map: (next if OFF, next if ON)
+    maps = (u < p_on, u < p_stay)
+    a, b = jax.lax.associative_scan(_compose_bool_maps, maps, axis=0)
+    return jnp.where(s0[None, :], b, a)
+
+
+def hold_resample(change: jax.Array, candidates: jax.Array) -> jax.Array:
+    """(T, N) piecewise-constant process: at each ``change`` slot the
+    value jumps to that slot's ``candidates`` entry, else it holds.
+
+    Slot 0 always draws fresh.  Stateless formulation: the value at t is
+    the candidate at the most recent change-slot <= t, found with a
+    running max over change-slot indices — no sequential scan.
+    """
+    T = change.shape[0]
+    change = change.at[0].set(True)  # initial draw
+    t_idx = jnp.arange(T, dtype=jnp.int32)[:, None]
+    last = jax.lax.cummax(jnp.where(change, t_idx, -1), axis=0)  # (T, N)
+    return jnp.take_along_axis(candidates, last, axis=0)

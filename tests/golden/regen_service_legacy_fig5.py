@@ -1,0 +1,52 @@
+"""Regenerate the pinned golden metrics of the legacy service loop.
+
+Runs ``simulate_service_legacy`` (RNG contract v0 — the ONLY remaining
+consumer of the legacy per-slot loop) at the fig5 service configuration
+(T=2000, N=4, B_n=0.06 W, H=2*441e6 cycles, seed=1) over the
+deterministic synthetic pool, for every policy plus the delay-weighted
+(P3, zeta=300) variant, and freezes the metrics to
+``service_legacy_fig5.json``.
+
+tests/test_serve.py checks the compiled v0 path against this file (fast,
+no legacy loop) and re-runs the legacy loop itself for one entry (the
+single legacy regression check).  Regenerate ONLY when the v0 contract
+intentionally changes:
+
+    PYTHONPATH=src python tests/golden/regen_service_legacy_fig5.py
+"""
+
+import dataclasses
+import json
+import pathlib
+
+from repro.serve.simulator import (SimConfig, simulate_service_legacy,
+                                   synthetic_pool)
+
+FIG5_SIM = dict(num_devices=4, T=2000, B_n=0.06, H=2 * 441e6, seed=1,
+                rng_version=0)
+POOL = dict(S=64, seed=0)
+OUT = pathlib.Path(__file__).parent / "service_legacy_fig5.json"
+
+
+def entries():
+    for algo in ("onalgo", "ato", "rco", "ocos", "local", "cloud"):
+        yield algo, SimConfig(algo=algo, **FIG5_SIM)
+    yield "onalgo_zeta300", SimConfig(algo="onalgo", zeta=300.0, **FIG5_SIM)
+
+
+def main():
+    pool = synthetic_pool(**POOL)
+    doc = {"config": FIG5_SIM, "pool": POOL, "entries": {}}
+    for name, sim in entries():
+        doc["entries"][name] = {
+            "sim": dataclasses.asdict(sim),
+            "metrics": simulate_service_legacy(sim, pool),
+        }
+        print(f"{name}: acc="
+              f"{doc['entries'][name]['metrics']['accuracy']:.4f}")
+    OUT.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

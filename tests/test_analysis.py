@@ -1,7 +1,5 @@
 """HLO collective parser + roofline table machinery."""
 
-import numpy as np
-
 from repro.analysis.hlo_stats import _shape_bytes, collective_stats
 
 

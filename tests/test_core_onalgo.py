@@ -1,7 +1,6 @@
 """Core OnAlgo behaviour: Theorem-1 validation, oracle comparison, baselines."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -6,8 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -46,14 +44,71 @@ class TestShardedFleet:
             series, fin = simulate(trace, tables, params, rule)
 
             mesh = make_test_mesh((4, 2), ("data", "model"))
-            lam, rewards, mus = simulate_sharded(trace, tables, params,
-                                                 rule, mesh,
-                                                 device_axis="data")
-            np.testing.assert_allclose(np.asarray(lam),
+            s_sh, fin_sh = simulate_sharded(trace, tables, params,
+                                            rule, mesh,
+                                            device_axis="data")
+            assert set(s_sh) == set(series)
+            for k in ("reward", "power", "load", "offloads", "tasks",
+                      "mu", "lam_norm"):
+                np.testing.assert_allclose(np.asarray(s_sh[k]),
+                                           np.asarray(series[k]),
+                                           rtol=1e-4, atol=1e-5,
+                                           err_msg=k)
+            np.testing.assert_allclose(np.asarray(fin_sh.lam),
                                        np.asarray(fin.lam), rtol=1e-4,
                                        atol=1e-6)
-            np.testing.assert_allclose(np.asarray(mus)[-1],
+            np.testing.assert_allclose(float(fin_sh.mu),
                                        float(fin.mu), rtol=1e-4, atol=1e-7)
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_sharded_overlay_matches_single_device(self):
+        """The service overlay's raw decision streams shard correctly:
+        across 4 real shards, simulate_sharded(overlay=...) reproduces
+        the single-process scan engine series for series (incl. the
+        ``correct`` accounting and the admission post-pass)."""
+        out = run_with_devices("""
+            import numpy as np, jax, jax.numpy as jnp
+            from repro.core import (OnAlgoParams, StepRule,
+                                    default_paper_space, simulate,
+                                    simulate_sharded)
+            from repro.core.fleet import RawOverlay
+            from repro.data.traces import TraceSpec, iid_trace
+            from repro.launch.mesh import make_test_mesh
+
+            space = default_paper_space(num_w=4)
+            N, T = 16, 150
+            trace, _ = iid_trace(space, TraceSpec(T=T, N=N, seed=4))
+            tables = space.tables()
+            params = OnAlgoParams(B=jnp.full((N,), 0.08),
+                                  H=jnp.float32(7e8))
+            rule = StepRule.inv_sqrt(0.5)
+            rng = np.random.default_rng(1)
+            ov = RawOverlay(
+                o=jnp.asarray(rng.uniform(0.05, 0.12, (T, N)), jnp.float32),
+                h=jnp.asarray(rng.uniform(3e8, 6e8, (T, N)), jnp.float32),
+                w=jnp.asarray(rng.uniform(0.0, 0.3, (T, N)), jnp.float32),
+                correct_local=jnp.asarray(rng.random((T, N)) < 0.6,
+                                          jnp.float32),
+                correct_cloud=jnp.asarray(rng.random((T, N)) < 0.85,
+                                          jnp.float32))
+            s_ref, f_ref = simulate(trace, tables, params, rule,
+                                    overlay=ov,
+                                    enforce_slot_capacity=True)
+            mesh = make_test_mesh((4,), ("data",))
+            s_sh, f_sh = simulate_sharded(trace, tables, params, rule,
+                                          mesh, overlay=ov,
+                                          enforce_slot_capacity=True)
+            assert set(s_sh) == set(s_ref)
+            for k in s_ref:
+                np.testing.assert_allclose(np.asarray(s_sh[k]),
+                                           np.asarray(s_ref[k]),
+                                           rtol=1e-4, atol=1e-5,
+                                           err_msg=k)
+            np.testing.assert_allclose(np.asarray(f_sh.lam),
+                                       np.asarray(f_ref.lam), rtol=1e-4,
+                                       atol=1e-6)
             print("OK")
         """)
         assert "OK" in out

@@ -1,6 +1,8 @@
 """Per-kernel allclose vs pure-jnp oracles, swept over shapes and dtypes
 (interpret mode executes the kernel body on CPU)."""
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +11,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.onalgo_step import (onalgo_duals_pallas,
+from repro.kernels.onalgo_step import (onalgo_chunked_pallas,
+                                       onalgo_duals_pallas,
                                        onalgo_tiled_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
@@ -163,6 +166,38 @@ class TestOnAlgoKernel:
                                    rtol=1e-5, atol=1e-6)
         np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
         assert float(mufin_k) == pytest.approx(float(mufin_r), rel=1e-5)
+
+    @pytest.mark.parametrize("block_n", [None, 8])
+    def test_slot_values_overlay_matches_oracle(self, block_n):
+        """The service-overlay slot-value streams drive the realized
+        decision identically in the chunked/tiled kernels and the
+        sequential oracle (raw values for decisions, tables for duals,
+        null slots gated)."""
+        N, M, T, chunk = 20, 16, 64, 8
+        ks = jax.random.split(jax.random.PRNGKey(11), 9)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (M,))
+        h = jax.random.uniform(ks[2], (M,))
+        w = jax.random.uniform(ks[3], (M,)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        lam0 = jax.random.uniform(ks[5], (N,)) * 0.1
+        sv = (jax.random.uniform(ks[6], (T, N)),
+              jax.random.uniform(ks[7], (T, N)),
+              jax.random.uniform(ks[8], (T, N)) - 0.1)
+        args = (j, lam0, jnp.float32(0.05), jnp.zeros((N, M)), o, h, w, B,
+                jnp.float32(2.0), 0.4, 0.5)
+        kern = (onalgo_chunked_pallas if block_n is None
+                else partial(onalgo_tiled_pallas, block_n=block_n))
+        out_k = kern(*args, chunk=chunk, slot_values=sv, interpret=True)
+        out_r = ref.onalgo_chunked_ref(*args, slot_values=sv)
+        np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                      np.asarray(out_r[0]))
+        for i in (1, 2, 3):
+            np.testing.assert_allclose(np.asarray(out_k[i]),
+                                       np.asarray(out_r[i]), rtol=1e-5,
+                                       atol=1e-6)
+        # null slots never offload, whatever the raw gain says
+        assert not np.asarray(out_k[0])[np.asarray(j) == 0].any()
 
     def test_tiled_per_device_tables(self):
         """(N, M) heterogeneous tables stream tile by tile too."""

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import lm
 from repro.models.api import ModelAPI
 from repro.models.layers import lm_logits

@@ -16,7 +16,7 @@ from repro.kernels.ref import onalgo_chunked_ref
 from repro.scenarios import (MODIFIERS, Scenario, compile_scenario, compose,
                              default_scenarios, grid_from_cells, names,
                              product_grid, run_scenario, stack_params,
-                             stack_rules, sweep_simulate, unstack_series)
+                             sweep_simulate, unstack_series)
 
 RULE = StepRule.inv_sqrt(0.5)
 
@@ -340,6 +340,113 @@ class TestCompose:
         with pytest.raises(KeyError):
             compose(Scenario("stationary", T=100, N=4),
                     Scenario("bursty", T=100, N=4))
+
+    def test_diurnal_modifier_thins_by_day_cycle(self):
+        """diurnal composes as a modifier: traffic peaks at day, thins at
+        night, on top of any base kind."""
+        T, N = 800, 16
+        base = Scenario("bursty", T=T, N=N, seed=1)
+        c = compose(base, Scenario("diurnal", T=T, N=N, seed=1).with_extra(
+            period=200, amp=0.9))
+        base_j = np.asarray(compile_scenario(base).trace.j_idx)
+        j = np.asarray(c.trace.j_idx)
+        # thinning only: never adds tasks
+        assert np.all((j > 0) <= (base_j > 0))
+        tasks = (j > 0).mean(axis=1)
+        phase = np.sin(2 * np.pi * np.arange(T) / 200)
+        assert tasks[phase > 0.7].mean() > tasks[phase < -0.7].mean() + 0.1
+
+    def test_flash_crowd_modifier_densifies_events(self):
+        T, N = 400, 8
+        base = Scenario("stationary", T=T, N=N, seed=2, task_prob=0.3)
+        c = compose(base, Scenario("flash_crowd", T=T, N=N,
+                                   seed=2).with_extra(n_events=2,
+                                                      event_len=50))
+        j = np.asarray(c.trace.j_idx)
+        in_event = np.zeros(T, bool)
+        for s in c.meta["event_starts"]:
+            in_event[s:s + c.meta["event_len"]] = True
+        assert (j[in_event] > 0).mean() > (j[~in_event] > 0).mean() + 0.3
+        # bootstrap resampling keeps the base state support
+        base_j = np.asarray(compile_scenario(base).trace.j_idx)
+        for n in range(N):
+            assert set(np.unique(j[:, n])) <= set(np.unique(base_j[:, n]))
+
+    def test_modifier_chain_composes_three_deep(self):
+        """flash_crowd + outage + churn stack through compose(), and the
+        composed trace runs on the chunked engine unchanged."""
+        kw = dict(T=320, N=8, seed=5)
+        c = compose(compose(compose(Scenario("bursty_counter", **kw),
+                                    Scenario("flash_crowd", **kw)),
+                            Scenario("outage", **kw).with_extra(
+                                n_outages=1, outage_len=60)),
+                    Scenario("churn", **kw).with_extra(churn_frac=0.3))
+        # outage doubled the space; churn + flash_crowd left tables alone
+        assert c.M == 2 * default_paper_space(num_w=c.scenario.num_w).M
+        for key in ("event_starts", "down", "arrive"):
+            assert key in c.meta
+        s1, _, _ = run_scenario(c, rule=RULE, engine="scan",
+                                use_kernel=False)
+        s2, _, _ = run_scenario(c, rule=RULE, engine="chunked", chunk=8)
+        for k in ("reward", "offloads", "tasks", "mu"):
+            np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                       rtol=2e-5, atol=1e-5, err_msg=k)
+        off = np.asarray(s1["offloads"])
+        assert off[c.meta["down"]].sum() == 0
+
+
+class TestCatalog:
+    def test_packaged_catalog_loads_and_compiles(self):
+        from repro.scenarios import load_catalog
+        cat = load_catalog()
+        assert {"paper_bursty", "metro_daily",
+                "stadium_flash_outage"} <= set(cat)
+        for name, entry in cat.items():
+            c = entry.compile()
+            assert c.trace.j_idx.shape == (entry.base.T, entry.base.N), name
+
+    def test_compile_named_runs_on_engines(self):
+        from repro.scenarios import compile_named
+        c = compile_named("stadium_flash_outage")
+        s1, _, _ = run_scenario(c, rule=RULE, engine="scan",
+                                use_kernel=False)
+        off = np.asarray(s1["offloads"])
+        down = c.meta["down"]
+        assert off[down].sum() == 0 and off[~down].sum() > 0
+
+    def test_modifiers_inherit_base_fleet(self, tmp_path):
+        from repro.scenarios.catalog import load_entry
+        f = tmp_path / "mini.yaml"
+        f.write_text(
+            "name: mini\n"
+            "base: {kind: stationary, T: 120, N: 4, seed: 1}\n"
+            "modifiers:\n"
+            "  - {kind: churn, extra: {churn_frac: 0.5}}\n")
+        entry = load_entry(f)
+        assert entry.modifiers[0].T == 120
+        assert entry.modifiers[0].N == 4
+        c = entry.compile()
+        assert "arrive" in c.meta
+
+    def test_unknown_catalog_name_raises(self):
+        from repro.scenarios import compile_named
+        with pytest.raises(KeyError, match="catalog"):
+            compile_named("no_such_workload")
+
+    def test_bursty_counter_uses_workload_layer(self):
+        """The bursty_counter kind's arrivals == the workload layer's
+        chain, verbatim (scenario tier and service tier share it)."""
+        from repro.workload import arrival_chain_probs, streams
+        sc = Scenario("bursty_counter", T=300, N=6, seed=4)
+        c = compile_scenario(sc)
+        p_on, p_stay, p_init = arrival_chain_probs((5, 10), 8.0)
+        u = streams.uniform_block(4, streams.STREAM_SCENARIO, 300, 6, 1)
+        u0 = jax.random.uniform(
+            streams.stream_key(4, streams.STREAM_ARRIVAL_INIT), (6,))
+        on = np.asarray(streams.markov_chain(
+            u[0], u0 < p_init, jnp.float32(p_on), jnp.float32(p_stay)))
+        np.testing.assert_array_equal(np.asarray(c.trace.j_idx) > 0, on)
+        assert c.true_rho is not None
 
 
 class TestSweeps:

@@ -1,5 +1,8 @@
 """Serving substrate: engine, batcher, admission controller, simulator,
-and the compiled/batched service path vs the legacy-loop parity oracle."""
+the golden v0 fixture, and cross-engine parity of the compiled service."""
+
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -13,24 +16,14 @@ from repro.models.api import ModelAPI
 from repro.serve.admission import (AdmissionController, flops_per_request,
                                    quantize_states)
 from repro.serve.engine import Batcher, ServingEngine
-from repro.serve.simulator import (PrecomputedPool, SimConfig,
-                                   simulate_service, simulate_service_legacy)
+from repro.serve.simulator import (SimConfig, simulate_service,
+                                   simulate_service_legacy, synthetic_pool)
 
 SERVICE_METRICS = ("accuracy", "offload_frac", "admit_frac",
                    "avg_power_per_dev", "avg_load", "avg_delay_ms",
                    "tasks", "mu_final")
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "service_legacy_fig5.json"
 
-
-def _toy_pool(S=64, seed=0) -> PrecomputedPool:
-    """A synthetic precomputed pool — no classifier training needed."""
-    rng = np.random.default_rng(seed)
-    return PrecomputedPool(
-        local_correct=(rng.random(S) < 0.6).astype(np.float64),
-        cloud_correct=(rng.random(S) < 0.85).astype(np.float64),
-        d_local=rng.uniform(0.3, 1.0, S),
-        phi_hat=rng.uniform(0.0, 0.3, S),
-        sigma=rng.uniform(0.0, 0.1, S),
-        cycles=np.clip(rng.normal(441e6, 90e6, S), 150e6, None))
 
 
 class TestEngine:
@@ -114,45 +107,154 @@ class TestAdmission:
                 < 2.0 * moe.param_count() * 1024)
 
 
-class TestServiceParity:
-    """The compiled/batched service path == the legacy per-slot loop."""
+def _golden():
+    return json.loads(GOLDEN.read_text())
 
-    @pytest.mark.parametrize(
-        "algo", ["onalgo", "ato", "rco", "ocos", "local", "cloud"])
-    def test_batched_matches_legacy_all_algos(self, algo):
-        pool = _toy_pool()
-        sim = SimConfig(num_devices=5, T=160, algo=algo, B_n=0.06,
-                        H=1.5 * 441e6, seed=3)
-        ref = simulate_service_legacy(sim, pool)
-        out = simulate_service(sim, pool)
-        assert set(out) == set(ref)
+
+def _sim_from_entry(entry) -> SimConfig:
+    return SimConfig(**entry["sim"])
+
+
+class TestGoldenFixture:
+    """RNG contract v0 is pinned by tests/golden/service_legacy_fig5.json.
+
+    The compiled v0 service path is checked against the frozen legacy
+    metrics for every policy (fast — no legacy loop); the legacy loop
+    itself re-runs for ONE entry, its single remaining job before
+    deletion (see ROADMAP)."""
+
+    @pytest.fixture(scope="class")
+    def golden(self):
+        return _golden()
+
+    @pytest.fixture(scope="class")
+    def pool(self):
+        g = _golden()
+        return synthetic_pool(**g["pool"])
+
+    def test_fixture_covers_all_policies(self, golden):
+        assert {"onalgo", "ato", "rco", "ocos", "local", "cloud",
+                "onalgo_zeta300"} <= set(golden["entries"])
+
+    @pytest.mark.parametrize("name", ["onalgo", "ato", "rco", "ocos",
+                                      "local", "cloud", "onalgo_zeta300"])
+    def test_compiled_v0_matches_golden(self, golden, pool, name):
+        """rel=5e-3: the compiled path prices decisions in float32 while
+        the legacy loop used float64, so over T=2000 slots a handful of
+        near-threshold offload/admit decisions flip (max observed metric
+        deviation 7e-4).  Contract regressions are O(1), far outside."""
+        entry = golden["entries"][name]
+        out = simulate_service(_sim_from_entry(entry), pool)
         for k in SERVICE_METRICS:
-            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
+            assert out[k] == pytest.approx(entry["metrics"][k], rel=5e-3,
+                                           abs=1e-6), k
 
-    def test_batched_matches_legacy_with_delay_weight(self):
-        pool = _toy_pool(seed=1)
-        sim = SimConfig(num_devices=4, T=120, algo="onalgo", seed=5,
-                        zeta=300.0)
-        ref = simulate_service_legacy(sim, pool)
-        out = simulate_service(sim, pool)
+    def test_legacy_loop_reproduces_golden(self, golden, pool):
+        """The one remaining legacy-loop execution in the suite.
+
+        rel=5e-3 like the compiled check: the loop's jitted admission
+        step also prices in float32, so XLA-version changes can flip the
+        same kind of near-threshold decisions."""
+        entry = golden["entries"]["onalgo"]
+        ref = simulate_service_legacy(_sim_from_entry(entry), pool)
         for k in SERVICE_METRICS:
-            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
+            assert ref[k] == pytest.approx(entry["metrics"][k], rel=5e-3,
+                                           abs=1e-6), k
 
+    def test_legacy_rejects_counter_contract(self):
+        with pytest.raises(ValueError, match="rng_version"):
+            simulate_service_legacy(SimConfig(num_devices=2, T=40),
+                                    synthetic_pool())
+
+    def test_unknown_rng_version_rejected(self):
+        with pytest.raises(ValueError, match="rng_version"):
+            simulate_service(SimConfig(num_devices=2, T=40, rng_version=7),
+                             synthetic_pool())
+
+
+class TestServiceEngines:
+    """simulate_service(engine=...) — identical metrics on the same
+    compiled workload across scan / chunked / tiled / sharded, including
+    non-divisible N (5) and T (203)."""
+
+    @pytest.fixture(scope="class")
+    def pool(self):
+        return synthetic_pool()
+
+    @pytest.mark.parametrize("algo", ["onalgo", "local", "cloud"])
+    def test_engines_agree(self, pool, algo):
+        sim = SimConfig(num_devices=5, T=203, algo=algo, B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
+        ref = simulate_service(sim, pool, engine="scan")
+        runs = {
+            "chunked": simulate_service(sim, pool, engine="chunked",
+                                        chunk=8),
+            "tiled": simulate_service(sim, pool, engine="chunked",
+                                      chunk=8, block_n=8),
+            "sharded": simulate_service(sim, pool, engine="sharded"),
+        }
+        for eng, out in runs.items():
+            assert set(out) == set(ref)
+            for k in SERVICE_METRICS:
+                assert out[k] == pytest.approx(ref[k], rel=2e-5,
+                                               abs=1e-5), (eng, k)
+
+    def test_chunked_rejects_stateful_baselines(self, pool):
+        sim = SimConfig(num_devices=4, T=64, algo="ato")
+        with pytest.raises(ValueError, match="chunked"):
+            simulate_service(sim, pool, engine="chunked")
+
+    def test_unknown_engine_rejected(self, pool):
+        with pytest.raises(ValueError, match="engine"):
+            simulate_service(SimConfig(num_devices=4, T=64), pool,
+                             engine="warp")
+
+    def test_engine_selector_on_v0_contract(self, pool):
+        """The engine selector composes with the pinned v0 workload."""
+        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=3,
+                        rng_version=0)
+        ref = simulate_service(sim, pool, engine="scan")
+        out = simulate_service(sim, pool, engine="chunked", chunk=16)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref[k], rel=2e-5, abs=1e-5), k
+
+
+class TestServiceWorkloads:
     def test_scenario_arrivals_drive_batched_service(self):
-        """A composed fleet scenario replays through the batched service."""
+        """A composed fleet scenario replays through the service tier on
+        every engine, and the arrivals actually gate the workload."""
         from repro.scenarios import Scenario, compile_scenario
         c = compile_scenario(
             Scenario("churn_outage", T=120, N=4, seed=6).with_extra(
                 churn_frac=0.3, n_outages=1, outage_len=30))
         mask = c.task_mask()
-        pool = _toy_pool(seed=2)
+        pool = synthetic_pool(seed=2)
         sim = SimConfig(num_devices=4, T=120, algo="onalgo", seed=7)
-        ref = simulate_service_legacy(sim, pool, on=mask)
         out = simulate_service(sim, pool, on=mask)
-        for k in SERVICE_METRICS:
-            assert out[k] == pytest.approx(ref[k], rel=1e-5, abs=1e-7), k
-        # arrivals actually gate the workload
         assert out["tasks"] == mask.sum()
+        chunked = simulate_service(sim, pool, on=mask, engine="chunked",
+                                   chunk=8)
+        for k in SERVICE_METRICS:
+            assert chunked[k] == pytest.approx(out[k], rel=2e-5,
+                                               abs=1e-5), k
+
+    def test_arrival_override_keeps_other_streams(self):
+        """Overriding arrivals must not perturb the image/channel draws:
+        counter addressing has no draw-order coupling (unlike v0, where
+        skipping the arrival draws shifted every later draw)."""
+        from repro.serve.compile import compile_service
+        pool = synthetic_pool(seed=2)
+        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=9)
+        cs_default = compile_service(sim, pool)
+        cs_forced = compile_service(
+            sim, pool, on=np.ones((sim.T, sim.num_devices), bool))
+        # raw value streams are identical; only the task gating differs
+        for field in ("o", "h", "w", "correct_local", "correct_cloud"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cs_default.overlay, field)),
+                np.asarray(getattr(cs_forced.overlay, field)), err_msg=field)
+        assert cs_forced.on.all()
+        assert not cs_default.on.all()
 
     def test_quantize_vectorized_matches_numpy(self):
         """The fused jitted quantizer == the numpy argmin it replaced

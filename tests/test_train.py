@@ -1,7 +1,6 @@
 """Training substrate: optimizers, checkpointing, fault tolerance."""
 
 import os
-import signal
 import tempfile
 import time
 
@@ -166,7 +165,7 @@ class TestCompression:
     def test_error_feedback_unbiased_over_time(self):
         """Repeated compression of a constant gradient with error feedback
         recovers the exact mean in the long run."""
-        from repro.train.compression import compressed_psum, init_residual
+        from repro.train.compression import init_residual
         # single-shard psum == identity: emulate axis with vmap-style loop
         g = {"w": jnp.asarray([0.001, -3.0, 7.0, 0.3])}
         r = init_residual(g)

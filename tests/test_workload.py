@@ -1,0 +1,144 @@
+"""Workload layer: counter-based streams, the versioned RNG contract,
+and the service workload processes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.workload import (RNG_COUNTER, RNG_LEGACY_HOST,
+                            arrival_chain_probs, generate_service_workload,
+                            streams, validate_rng_version)
+from repro.workload.legacy import legacy_service_workload
+
+
+class TestStreams:
+    def test_draws_are_addressed_not_ordered(self):
+        """Same (seed, sid) => identical grid, independent of call order;
+        different sids / seeds decorrelate."""
+        a1 = np.asarray(streams.uniforms(0, 1, 100, 8))
+        _ = streams.uniforms(3, 2, 50, 4)  # unrelated draw in between
+        a2 = np.asarray(streams.uniforms(0, 1, 100, 8))
+        np.testing.assert_array_equal(a1, a2)
+        b = np.asarray(streams.uniforms(0, 2, 100, 8))
+        c = np.asarray(streams.uniforms(1, 1, 100, 8))
+        assert np.abs(a1 - b).max() > 1e-3
+        assert np.abs(a1 - c).max() > 1e-3
+
+    def test_horizon_extension_preserves_prefix(self):
+        """Extending T must not perturb already-generated slots (block
+        keys and in-block counters are horizon-independent), including
+        non-multiples of the ROW_BLOCK contract constant."""
+        short = np.asarray(streams.uniform_block(5, 1, 200, 6, 4))
+        for T in (201, 256, 1000):
+            long = np.asarray(streams.uniform_block(5, 1, T, 6, 4))
+            np.testing.assert_array_equal(long[:, :200], short)
+
+    def test_uniform_block_channels_decorrelated(self):
+        u = np.asarray(streams.uniform_block(0, 1, 500, 4, 3))
+        assert u.shape == (3, 500, 4)
+        for c in range(1, 3):
+            r = np.corrcoef(u[0].ravel(), u[c].ravel())[0, 1]
+            assert abs(r) < 0.1
+
+    def test_levels_from_uniform_covers_range(self):
+        u = streams.uniforms(0, 1, 400, 8)
+        lv = np.asarray(streams.levels_from_uniform(u, 5))
+        assert lv.min() == 0 and lv.max() == 4
+        # roughly uniform occupancy
+        counts = np.bincount(lv.ravel(), minlength=5) / lv.size
+        assert np.all(np.abs(counts - 0.2) < 0.05)
+
+    def test_markov_chain_matches_transition_probs(self):
+        T, N = 4000, 16
+        u = streams.uniforms(0, 1, T, N)
+        on = np.asarray(streams.markov_chain(
+            u, jnp.zeros((N,), bool), jnp.float32(0.2), jnp.float32(0.7)))
+        prev, cur = on[:-1].ravel(), on[1:].ravel()
+        p_on = cur[~prev].mean()
+        p_stay = cur[prev].mean()
+        assert p_on == pytest.approx(0.2, abs=0.02)
+        assert p_stay == pytest.approx(0.7, abs=0.02)
+
+    def test_markov_chain_equals_sequential_reference(self):
+        """The associative-scan chain == a plain per-slot host rollout."""
+        T, N = 257, 5
+        u = np.asarray(streams.uniforms(9, 1, T, N))
+        s0 = np.asarray(
+            jax.random.uniform(streams.stream_key(9, 2), (N,))) < 0.5
+        on = np.asarray(streams.markov_chain(
+            jnp.asarray(u), jnp.asarray(s0), jnp.float32(0.15),
+            jnp.float32(0.85)))
+        ref = np.zeros((T, N), bool)
+        s = s0.copy()
+        for t in range(T):
+            s = np.where(s, u[t] < 0.85, u[t] < 0.15)
+            ref[t] = s
+        np.testing.assert_array_equal(on, ref)
+
+    def test_hold_resample_holds_between_changes(self):
+        T, N = 300, 4
+        u = streams.uniform_block(3, 1, T, N, 2)
+        cand = streams.levels_from_uniform(u[1], 7)
+        out = np.asarray(streams.hold_resample(u[0] < 0.1, cand))
+        change = np.array(u[0] < 0.1)
+        change[0] = True
+        cand = np.asarray(cand)
+        # at change slots the value is that slot's candidate...
+        np.testing.assert_array_equal(out[change], cand[change])
+        # ...elsewhere it equals the previous slot's value
+        hold = ~change[1:]
+        np.testing.assert_array_equal(out[1:][hold], out[:-1][hold])
+
+
+class TestServiceWorkload:
+    def test_generation_is_jitted_and_deterministic(self):
+        wl1 = generate_service_workload(4, 300, 6, 64, 3)
+        wl2 = generate_service_workload(4, 300, 6, 64, 3)
+        for f in ("on", "img", "rates"):
+            np.testing.assert_array_equal(np.asarray(getattr(wl1, f)),
+                                          np.asarray(getattr(wl2, f)))
+        assert np.asarray(wl1.img).max() < 64
+        assert np.asarray(wl1.rates).max() < 3
+
+    def test_arrival_stats_match_chain_targets(self):
+        p_on, p_stay, p_init = arrival_chain_probs((5, 10), 8.0)
+        wl = generate_service_workload(0, 6000, 16, 64, 3)
+        on = np.asarray(wl.on)
+        assert on.mean() == pytest.approx(p_init, abs=0.03)
+        prev, cur = on[:-1].ravel(), on[1:].ravel()
+        assert cur[prev].mean() == pytest.approx(p_stay, abs=0.02)
+        assert cur[~prev].mean() == pytest.approx(p_on, abs=0.02)
+
+    def test_channel_stay_probability(self):
+        wl = generate_service_workload(2, 6000, 8, 64, 3)
+        r = np.asarray(wl.rates)
+        same = (r[1:] == r[:-1]).mean()
+        # stay w.p. 0.9 plus 1/3 chance a redraw repeats the level
+        assert same == pytest.approx(0.9 + 0.1 / 3, abs=0.02)
+
+    def test_rng_contract_validation(self):
+        assert validate_rng_version(RNG_LEGACY_HOST) == 0
+        assert validate_rng_version(RNG_COUNTER) == 1
+        with pytest.raises(ValueError, match="rng_version"):
+            validate_rng_version(2)
+
+    def test_legacy_v0_draw_order_is_stable(self):
+        """The frozen v0 sampler replays the legacy loop's draw order —
+        pinned here so refactors can't silently move it."""
+        on, img, rates = legacy_service_workload(0, 50, 3, 16, 3, (5, 10),
+                                                 8.0)
+        rng = np.random.default_rng(0)
+        from repro.workload.legacy import bursty_arrivals
+        on_ref = bursty_arrivals(rng, 50, 3, (5, 10), 8.0)
+        rate_idx = rng.integers(0, 3, 3)
+        np.testing.assert_array_equal(on, on_ref)
+        img_ref = np.zeros((50, 3), np.int64)
+        rates_ref = np.zeros((50, 3), np.int64)
+        for t in range(50):
+            img_ref[t] = rng.integers(0, 16, 3)
+            flip = rng.random(3) > 0.9
+            rate_idx = np.where(flip, rng.integers(0, 3, 3), rate_idx)
+            rates_ref[t] = rate_idx
+        np.testing.assert_array_equal(img, img_ref)
+        np.testing.assert_array_equal(rates, rates_ref)
