@@ -1,0 +1,119 @@
+"""Fleet-scale service benchmark: the (T, N) memory story, measured.
+
+Drives fig5-style end-to-end service runs (OnAlgo, synthetic pool,
+per-slot cloudlet admission) at fleet sizes far beyond the paper's
+testbed — N in {10^4, 10^5, 3*10^5} — through the STREAMING chunked
+engine (``simulate_service(engine="chunked", materialize=False)``):
+workload slabs are generated on device from counters inside the engine
+loop, so peak memory is O(slab * N) + O(N * M) state, independent of
+the horizon.  Emitted columns per N:
+
+  * fig5-style metrics (accuracy / offload fraction / power per device);
+  * slots/sec device-slot throughput and wall-clock per slot;
+  * measured peak device bytes (``benchmarks.common.PeakTracker``) next
+    to the O(T * N) bytes the materialized lowering would need — the
+    materialized run itself only executes while its arrays fit under
+    ``MATERIALIZE_BYTE_CAP`` (it would OOM CI above that) and is emitted
+    as ``skipped`` otherwise;
+  * the ``fleet.autotune`` pick for (chunk, block_n) from a short probe.
+
+Horizons scale down as N grows (fig5's T=2500 is a *convergence*
+horizon; throughput and memory scaling need only a few hundred slots),
+keeping the whole sweep CI-sized.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PeakTracker, emit
+from repro.core import fleet
+from repro.serve.compile import compile_service_streaming
+from repro.serve.simulator import SimConfig, simulate_service, synthetic_pool
+
+# Above this, the materialized (T, N) trace+overlay (7 arrays: int32 j,
+# 6 float32 streams incl. d_local) is not worth CI's memory/minutes —
+# the comparison row runs at the smallest N and is skipped beyond.
+MATERIALIZE_BYTE_CAP = 3.0e8
+
+# Streaming slab: 64 slots = one ROW_BLOCK of on-device generation per
+# slab and a multiple of every probed chunk; peak memory ~ SLAB * N.
+SLAB = 64
+
+
+def _horizon(N: int) -> int:
+    """Fig5-style but CI-sized: shrink T as N grows, floored at 4 * SLAB
+    so the streaming walk is never a single degenerate slab and the
+    O(SLAB * N) vs O(T * N) gap stays observable at every N."""
+    return int(min(512, max(4 * SLAB, (1 << 24) // N)))
+
+
+def _sim(N: int, T: int) -> SimConfig:
+    # fig5 per-device budget; cloudlet capacity scaled with the fleet
+    # (the paper's H = 2 tasks/slot per 4 devices)
+    return SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
+                     H=N / 4 * 2 * 441e6, seed=1)
+
+
+def _materialized_bytes(N: int, T: int) -> int:
+    return T * N * 4 * 7
+
+
+def bench_fleet_scale(Ns=(10_000, 100_000, 300_000)):
+    pool = synthetic_pool()
+    for N in Ns:
+        T = _horizon(N)
+        sim = _sim(N, T)
+
+        # autotune (chunk, block_n) on a short streaming probe
+        cs = compile_service_streaming(sim, pool)
+        tune = fleet.autotune(cs.tables, cs.params, cs.rule,
+                              source=cs.slab, T=T, N=N, chunks=(8, 16),
+                              probe_slots=32, slab=SLAB, repeats=1)
+
+        kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
+                      chunk=tune.chunk, block_n=tune.block_n)
+        with PeakTracker() as peak:
+            simulate_service(sim, pool, **kwargs)  # warm the jits
+            t0 = time.perf_counter()
+            out = simulate_service(sim, pool, **kwargs)
+            dt = time.perf_counter() - t0
+        mat_bytes = _materialized_bytes(N, T)
+        emit(f"fleet_scale/N={N}/T={T}/streaming", dt * 1e6 / T,
+             f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+             f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
+             f"devslots_per_s={N * T / dt:.0f};"
+             f"peak_mb={peak.peak_bytes / 1e6:.0f};"
+             f"materialized_mb={mat_bytes / 1e6:.0f};"
+             f"materialized_fig5_mb={_materialized_bytes(N, 2500) / 1e6:.0f};"
+             f"chunk={tune.chunk};block_n={tune.block_n}")
+
+        if mat_bytes <= MATERIALIZE_BYTE_CAP:
+            with PeakTracker() as peak_m:
+                simulate_service(sim, pool, engine="chunked",
+                                 chunk=tune.chunk, block_n=tune.block_n)
+                t0 = time.perf_counter()
+                ref = simulate_service(sim, pool, engine="chunked",
+                                       chunk=tune.chunk,
+                                       block_n=tune.block_n)
+                dt_m = time.perf_counter() - t0
+            # same chunk => the two paths must agree exactly
+            assert abs(ref["accuracy"] - out["accuracy"]) < 1e-9, (
+                ref["accuracy"], out["accuracy"])
+            emit(f"fleet_scale/N={N}/T={T}/materialized", dt_m * 1e6 / T,
+                 f"acc={ref['accuracy']:.4f};"
+                 f"devslots_per_s={N * T / dt_m:.0f};"
+                 f"peak_mb={peak_m.peak_bytes / 1e6:.0f}")
+        else:
+            emit(f"fleet_scale/N={N}/T={T}/materialized", float("nan"),
+                 f"skipped=would_materialize_{mat_bytes / 1e6:.0f}_mb")
+
+
+def run_all():
+    bench_fleet_scale()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run_all()

@@ -4,8 +4,9 @@ All four use the end-to-end simulator (trained classifier pairs on synthetic
 easy/hard datasets, paper-measured power/cycle constants, bursty traffic).
 The whole service tier now runs on the vectorized fleet engine: fig5 as one
 vmapped sweep, figs 6-8 through the compiled/batched ``simulate_service``
-(serve/compile.py), with ``bench_service_speedup`` tracking the batched
-path's advantage over the legacy per-slot loop it replaced.
+(serve/compile.py), with ``bench_service_speedup`` racing the scan /
+chunked / streaming engines on the identical compiled workload (see
+``bench_fleet_scale`` for the N >> 10^4 memory story).
 """
 
 from __future__ import annotations
@@ -21,8 +22,7 @@ from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.data.traces import TraceSpec, bursty_trace
 from repro.scenarios import grid_from_cells, sweep_simulate, unstack_series
 from repro.serve.simulator import (SimConfig, make_scenario, pool_space,
-                                   simulate_service, simulate_service_legacy,
-                                   synthetic_pool)
+                                   simulate_service, synthetic_pool)
 
 _SCENARIOS = {}
 
@@ -126,75 +126,78 @@ def bench_fig8_delay_pareto(T=2000):
 
 
 def bench_compile_service(T=2000, reps=10):
-    """compile_service: legacy host-ordered RNG loop (v0) vs the
-    counter-based workload layer (v1) at the fig5 config (T=2000, N=4).
+    """The two v1 service lowerings at the fig5 config (T=2000, N=4):
+    materialized (``compile_service``: one fused jit pass producing the
+    (T, N) trace + overlay) vs streaming (``compile_service_streaming``
+    boundary-state lowering plus one generated slab, i.e. the cost the
+    stream engines pay before their first kernel launch).
 
-    v0 replays the legacy loop's draw order with an O(T) host loop; v1
-    is one fused jitted device pass (counter streams + gathers +
-    quantization), so the whole service compile drops off the hot path
-    (>= 10x end-to-end required).  Uses the deterministic synthetic pool
-    — no classifier training — so this row also runs in the per-PR CI
-    bench artifact.
+    Uses the deterministic synthetic pool — no classifier training — so
+    this row also runs in the per-PR CI bench artifact.  (The retired v0
+    host loop this replaced was >= 10-20x slower than the materialized
+    pass; tests/golden pins its metrics.)
     """
-    import dataclasses
-
     pool = synthetic_pool()
     sim = SimConfig(num_devices=4, T=T, algo="onalgo", B_n=0.06,
                     H=2 * 441e6, seed=1)
-    sim_v0 = dataclasses.replace(sim, rng_version=0)
-    from repro.serve.compile import compile_service
-    compile_service(sim, pool)  # warm the v1 jit cache
-    compile_service(sim_v0, pool)  # warm v0's quantizer jit
+    from repro.serve.compile import (compile_service,
+                                     compile_service_streaming)
+
+    def stream_lower():
+        cs = compile_service_streaming(sim, pool)
+        return cs.slab(0, 256)
+
+    compile_service(sim, pool)  # warm the jit caches
+    stream_lower()
     t0 = time.time()
     for _ in range(reps):
         compile_service(sim, pool)
-    dt_v1 = (time.time() - t0) / reps
+    dt_mat = (time.time() - t0) / reps
     t0 = time.time()
-    for _ in range(max(reps // 2, 1)):
-        compile_service(sim_v0, pool)
-    dt_v0 = (time.time() - t0) / max(reps // 2, 1)
-    emit(f"compile_service/counter_v1/T={T}", dt_v1 * 1e6 / T,
-         f"speedup={dt_v0 / dt_v1:.1f}x;v1_ms={dt_v1 * 1e3:.2f};"
-         f"v0_host_loop_ms={dt_v0 * 1e3:.2f}")
+    for _ in range(reps):
+        stream_lower()
+    dt_str = (time.time() - t0) / reps
+    emit(f"compile_service/counter_v1/T={T}", dt_mat * 1e6 / T,
+         f"materialized_ms={dt_mat * 1e3:.2f};"
+         f"streaming_lower_plus_slab_ms={dt_str * 1e3:.2f}")
 
 
 def bench_service_speedup(T=2000):
-    """Batched service (compiled fleet scan) vs the legacy per-slot loop.
-
-    Same seed => identical workloads, so this is a pure engine comparison
-    on the fig5 configuration (T=2000, N=4) and growing fleets.  The
-    batched timing is steady-state (jit warmed by a first call); the
-    legacy loop amortizes its per-slot jits over the horizon, as it
-    always did.  Two scaling views:
-      * speedup  — wall-clock ratio at the same workload (>= 10x required
-        at N=4; largest there because the legacy loop is per-slot
-        DISPATCH-bound, so its cost barely grows with N);
-      * batched device-slot throughput — the number that must (and does)
-        grow with N: one scan amortizes its fixed per-slot overhead over
-        the whole fleet, which is what makes million-device fleets
-        reachable at all.
+    """Service engine race on the identical compiled workload: the scan
+    engine vs the fused chunked kernel vs the STREAMING chunked engine
+    (materialize=False — no (T, N) arrays), fig5 config across growing
+    fleets.  All three produce identical metrics (asserted); the
+    emitted numbers are steady-state (jits warmed by a first call).
+    The device-slot throughput column is the one that must grow with N
+    — one fused rollout amortizes its per-slot overhead over the fleet,
+    which is what makes million-device fleets reachable at all.
     """
     _, pair, _, pool = scenario("hard")
     for N in (4, 16, 64):
-        # rng_version=0 on both sides: the legacy loop only speaks the v0
-        # contract, and identical workloads make this a pure engine race.
         sim = SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
-                        H=2 * 441e6, seed=1, rng_version=0)
-        simulate_service(sim, pool)  # warm the scan compile cache
-        t0 = time.time()
-        out = simulate_service(sim, pool)
-        dt_batched = time.time() - t0
-        t0 = time.time()
-        ref = simulate_service_legacy(sim, pool)
-        dt_legacy = time.time() - t0
-        # float32 decision pricing vs the legacy float64 flips a handful
-        # of near-threshold slots over long horizons (see test_serve).
-        assert abs(out["accuracy"] - ref["accuracy"]) < 5e-3
-        emit(f"service_speedup/N={N}", dt_batched * 1e6 / T,
-             f"speedup={dt_legacy / dt_batched:.1f}x;"
-             f"batched_devslots_per_s={N * T / dt_batched:.0f};"
-             f"legacy_us={dt_legacy * 1e6 / T:.1f};"
-             f"acc={out['accuracy']:.4f}")
+                        H=2 * 441e6, seed=1)
+        runs = {
+            "scan": lambda: simulate_service(sim, pool),
+            "chunked": lambda: simulate_service(sim, pool,
+                                                engine="chunked"),
+            "stream": lambda: simulate_service(sim, pool,
+                                               engine="chunked",
+                                               materialize=False),
+        }
+        out, dt = {}, {}
+        for name, fn in runs.items():
+            fn()  # warm the compile caches
+            t0 = time.time()
+            out[name] = fn()
+            dt[name] = time.time() - t0
+        for name in ("chunked", "stream"):
+            assert abs(out[name]["accuracy"]
+                       - out["scan"]["accuracy"]) < 5e-4, name
+        emit(f"service_speedup/N={N}", dt["scan"] * 1e6 / T,
+             f"scan_devslots_per_s={N * T / dt['scan']:.0f};"
+             f"chunked_devslots_per_s={N * T / dt['chunked']:.0f};"
+             f"stream_devslots_per_s={N * T / dt['stream']:.0f};"
+             f"acc={out['scan']['accuracy']:.4f}")
 
 
 def run_all():

@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, peak-memory tracking."""
 
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -32,3 +33,67 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def header():
     print("name,us_per_call,derived", flush=True)
+
+
+def live_bytes() -> int:
+    """Bytes currently held by live jax device buffers."""
+    total = 0
+    for x in jax.live_arrays():
+        try:
+            total += int(x.nbytes)
+        except Exception:  # deleted/donated buffer raced us
+            pass
+    return total
+
+
+class PeakTracker:
+    """Peak device-memory tracker around a benchmark region.
+
+    A daemon thread samples current usage — the backend's
+    ``memory_stats()['bytes_in_use']`` where kept (TPU/GPU), summed
+    ``jax.live_arrays()`` otherwise (CPU) — and records the region max.
+    (The backends' ``peak_bytes_in_use`` is a process-lifetime
+    high-water mark, useless for a region that isn't the process's
+    biggest so far; sampling sidesteps that.)  Peak is good to the
+    sampling interval, which is plenty to tell O(chunk * N) from
+    O(T * N).
+
+    Usage::
+
+        with PeakTracker() as peak:
+            run()
+        print(peak.peak_bytes)
+    """
+
+    def __init__(self, interval: float = 0.005):
+        self.interval = interval
+        self.peak_bytes = 0
+        self._stop = threading.Event()
+        self._thread = None
+
+    @staticmethod
+    def _current_bytes() -> int:
+        try:
+            stats = jax.local_devices()[0].memory_stats() or {}
+            if "bytes_in_use" in stats:
+                return int(stats["bytes_in_use"])
+        except Exception:
+            pass
+        return live_bytes()
+
+    def _sample(self):
+        while not self._stop.is_set():
+            self.peak_bytes = max(self.peak_bytes, self._current_bytes())
+            self._stop.wait(self.interval)
+
+    def __enter__(self):
+        self.peak_bytes = self._current_bytes()
+        self._thread = threading.Thread(target=self._sample, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+        self.peak_bytes = max(self.peak_bytes, self._current_bytes())
+        return False

@@ -5,7 +5,8 @@ Public API:
   OnAlgoParams, OnAlgoState, StepRule, step, ...  (onalgo)
   ATO/RCO/OCOS baselines                          (baselines)
   solve_lp, solve_dual_ascent                     (oracle)
-  Trace, simulate, simulate_sharded               (fleet)
+  Trace, simulate, simulate_sharded,
+  *_stream engines, autotune                      (fleet)
   Theorem-1 terms                                 (theory)
   P3 delay / bandwidth extensions                 (extensions)
 """
@@ -14,13 +15,17 @@ from repro.core.state_space import (StateSpace, RhoEstimator,
                                     default_paper_space, empirical_rho)
 from repro.core.onalgo import (OnAlgoParams, OnAlgoState, StepRule,
                                init_state, policy_matrix, decide, step)
-from repro.core.fleet import (RawOverlay, Trace, simulate, simulate_chunked,
-                              simulate_sharded)
+from repro.core.fleet import (AutotuneResult, RawOverlay, Trace, autotune,
+                              simulate, simulate_chunked,
+                              simulate_chunked_stream, simulate_sharded,
+                              simulate_sharded_stream)
 from repro.core import baselines, extensions, oracle, theory
 
 __all__ = [
     "StateSpace", "RhoEstimator", "default_paper_space", "empirical_rho",
     "OnAlgoParams", "OnAlgoState", "StepRule", "init_state", "policy_matrix",
     "decide", "step", "RawOverlay", "Trace", "simulate", "simulate_chunked",
-    "simulate_sharded", "baselines", "extensions", "oracle", "theory",
+    "simulate_chunked_stream", "simulate_sharded", "simulate_sharded_stream",
+    "autotune", "AutotuneResult", "baselines", "extensions", "oracle",
+    "theory",
 ]

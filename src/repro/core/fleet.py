@@ -298,6 +298,38 @@ def _overlay_slot_values(overlay: RawOverlay, params: OnAlgoParams):
     return (overlay.o / params.B[None, :], overlay.h / params.H, overlay.w)
 
 
+def _onalgo_tail(state, j_tail, overlay_tail: Optional[RawOverlay],
+                 tables, params: OnAlgoParams, rule: StepRule):
+    """Finish a sub-chunk tail with the jnp slot step.
+
+    Shared by the materialized and streaming chunked engines so the two
+    tails cannot drift.  Returns (state, off (Lt, N) bool, mu_seq (Lt,),
+    lam_norm (Lt,)).
+    """
+    o_tab, h_tab, w_tab = tables
+
+    def slot(state, xs):
+        if overlay_tail is None:
+            j = xs
+            o_now = _lookup(o_tab, j)
+            h_now = _lookup(h_tab, j)
+            w_now = _lookup(w_tab, j)
+        else:  # raw (unpreconditioned) values; step rescales them
+            j, o_now, h_now, w_now = xs
+        task = j > 0
+        state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                     task, tables, params, rule)
+        lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+        return state, (offload, state.mu, lam_norm)
+
+    if overlay_tail is None:
+        xs_tail = j_tail
+    else:
+        xs_tail = (j_tail, overlay_tail.o, overlay_tail.h, overlay_tail.w)
+    state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state, xs_tail)
+    return state, off_t, mu_t, ln_t
+
+
 @partial(jax.jit, static_argnames=("chunk", "block_n", "algo",
                                    "enforce_slot_capacity"))
 def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
@@ -373,27 +405,13 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
             lam=lam, mu=mu,
             rho=onalgo.RhoEstimator(counts=counts,
                                     t=jnp.int32(T_main)))
-
-        def slot(state, xs):
-            if overlay is None:
-                j = xs
-                o_now = _lookup(o_tab, j)
-                h_now = _lookup(h_tab, j)
-                w_now = _lookup(w_tab, j)
-            else:  # raw (unpreconditioned) values; step rescales them
-                j, o_now, h_now, w_now = xs
-            task = j > 0
-            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
-                                         task, tables, params, rule)
-            lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
-            return state, (offload, state.mu, lam_norm)
-
-        if overlay is None:
-            xs_tail = j_seq[T_main:]
-        else:
-            xs_tail = (j_seq[T_main:], overlay.o[T_main:],
-                       overlay.h[T_main:], overlay.w[T_main:])
-        state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state, xs_tail)
+        overlay_tail = None if overlay is None else RawOverlay(
+            o=overlay.o[T_main:], h=overlay.h[T_main:],
+            w=overlay.w[T_main:],
+            correct_local=overlay.correct_local[T_main:],
+            correct_cloud=overlay.correct_cloud[T_main:])
+        state, off_t, mu_t, ln_t = _onalgo_tail(
+            state, j_seq[T_main:], overlay_tail, tables, params, rule)
         off = jnp.concatenate([off, off_t], axis=0)
         mu_seq = jnp.concatenate([mu_seq, mu_t])
         lnorm = jnp.concatenate([lnorm, ln_t])
@@ -405,6 +423,108 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
     return series, final
+
+
+def _cat_series(parts):
+    """Concatenate per-slab series dicts along the time axis."""
+    return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+
+def _stream_trivial(source, T: int, N: int, slab: int, tables,
+                    params: OnAlgoParams, algo: str,
+                    enforce_slot_capacity: bool):
+    """local / cloud policies over a streamed workload: stateless, so the
+    rollout is just per-slab accounting."""
+    parts = []
+    for t0 in range(0, T, slab):
+        L = min(slab, T - t0)
+        j_slab, overlay = source(t0, L)
+        off, mu_seq, lnorm, final = _trivial_policy_rollout(j_slab, algo)
+        parts.append(_series_from_offloads(j_slab, off, tables, params,
+                                           mu_seq, lnorm, overlay,
+                                           enforce_slot_capacity))
+    return _cat_series(parts), final
+
+
+def simulate_chunked_stream(source, T: int, N: int, tables,
+                            params: OnAlgoParams, rule: StepRule, *,
+                            chunk: int = 16, slab: Optional[int] = None,
+                            block_n: Optional[int] = None,
+                            algo: str = "onalgo",
+                            enforce_slot_capacity: bool = False):
+    """The chunked engine over a *streamed* workload: no (T, N) horizon.
+
+    ``source(t0, length)`` yields slots [t0, t0 + length) of the
+    workload as ``(j_slab (L, N) int32, overlay: RawOverlay | None)`` —
+    e.g. a jitted closure over a
+    :class:`~repro.workload.streaming.StreamingWorkload` lowering.  The
+    rollout walks the horizon ``slab`` slots at a time: generate the
+    slab on device, run the fused Pallas kernel on it (resuming via its
+    traced ``t0`` — one compile for every slab), fold the slab's
+    accounting, drop the slab.  Peak device memory is O(slab * N) +
+    O(N * M) state (or O(block_n * M) tiles with ``block_n``),
+    independent of T * N; only the O(T) per-slot series survive.
+
+    Metrics are identical to materializing the workload and calling
+    ``simulate_chunked`` with the same ``chunk`` — the kernel calls see
+    the same fp32 state and the same slab values (counter-addressed
+    draws are slab-invariant), so the rollout is bit-equal.
+
+    Returns the standard ``(series, final_state)`` contract.
+    """
+    from repro.kernels import ops as kops
+
+    o_tab, h_tab, w_tab = tables
+    M = o_tab.shape[-1]
+    if slab is None:
+        slab = chunk * 16
+    if slab % chunk:
+        raise ValueError(f"slab={slab} must be a multiple of chunk={chunk}")
+
+    if algo in ("local", "cloud"):
+        return _stream_trivial(source, T, N, slab, tables, params, algo,
+                               enforce_slot_capacity)
+    if algo != "onalgo":
+        raise ValueError("the chunked streaming engine rolls OnAlgo (plus "
+                         "the stateless local/cloud policies); got "
+                         f"{algo!r}")
+
+    o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(o_tab, h_tab,
+                                                        params)
+    kern = (kops.onalgo_chunked if block_n is None
+            else partial(kops.onalgo_tiled, block_n=block_n))
+    T_main = (T // chunk) * chunk
+    lam = jnp.zeros((N,), jnp.float32)
+    mu = jnp.float32(0.0)
+    counts = jnp.zeros((N, M), jnp.float32)
+    parts = []
+    for t0 in range(0, T_main, slab):
+        L = min(slab, T_main - t0)
+        j_slab, overlay = source(t0, L)
+        sv = (None if overlay is None
+              else _overlay_slot_values(overlay, params))
+        off, mu_seq, lnorm, lam, mu, counts = kern(
+            j_slab, lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
+            rule.a, rule.beta, chunk=chunk, t0=jnp.int32(t0),
+            slot_values=sv)
+        parts.append(_series_from_offloads(j_slab, off, tables, params,
+                                           mu_seq, lnorm, overlay,
+                                           enforce_slot_capacity))
+    if T_main < T:  # finish the tail with the jnp slot step
+        j_tail, overlay_t = source(T_main, T - T_main)
+        state = onalgo.OnAlgoState(
+            lam=lam, mu=mu,
+            rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T_main)))
+        state, off_t, mu_t, ln_t = _onalgo_tail(state, j_tail, overlay_t,
+                                                tables, params, rule)
+        parts.append(_series_from_offloads(j_tail, off_t, tables, params,
+                                           mu_t, ln_t, overlay_t,
+                                           enforce_slot_capacity))
+        lam, mu, counts = state.lam, state.mu, state.rho.counts
+    final = onalgo.OnAlgoState(
+        lam=lam, mu=mu,
+        rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+    return _cat_series(parts), final
 
 
 def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
@@ -443,31 +563,60 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
         raise ValueError("the sharded engine rolls OnAlgo (plus the "
                          f"stateless local/cloud policies); got {algo!r}")
 
+    _validate_shards(N, mesh, device_axis)
+    run = _make_sharded_run(mesh, device_axis, rule,
+                            per_device_tables=o_tab.ndim == 2,
+                            has_overlay=overlay is not None)
+    ov_args = (() if overlay is None
+               else (overlay.o, overlay.h, overlay.w))
+    off, mu_seq, lnorm, lam, mu, counts = run(
+        trace.j_idx, o_tab, h_tab, w_tab, params.B, params.H,
+        jnp.zeros((N,), jnp.float32), jnp.float32(0.0),
+        jnp.zeros((N, M), jnp.float32), jnp.int32(0), *ov_args)
+    series = _series_from_offloads(trace.j_idx, off, tables, params,
+                                   mu_seq, lnorm, overlay,
+                                   enforce_slot_capacity)
+    final = onalgo.OnAlgoState(
+        lam=lam, mu=mu,
+        rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+    return series, final
+
+
+def _validate_shards(N: int, mesh, device_axis: str):
     n_shards = mesh.shape[device_axis]
     if N % n_shards:
         raise ValueError(
             f"fleet size N={N} must be a multiple of the {device_axis!r} "
             f"axis shard count ({n_shards})")
 
-    tab_spec = P(device_axis, None) if o_tab.ndim == 2 else P(None)
-    seq_spec = P(None, device_axis)
-    if overlay is None:
-        ov_args, ov_specs = (), ()
-    else:  # raw decision streams ride sharded like the trace
-        ov_args = (overlay.o, overlay.h, overlay.w)
-        ov_specs = (seq_spec,) * 3
 
+def _make_sharded_run(mesh, device_axis: str, rule: StepRule, *,
+                      per_device_tables: bool, has_overlay: bool):
+    """The shard_map'd fleet rollout, resumable from any (state, t0).
+
+    Shared by ``simulate_sharded`` (one call, zero state) and
+    ``simulate_sharded_stream`` (one call per workload slab, state
+    carried across calls).  lam/counts ride sharded on ``device_axis``;
+    mu and the slot counter are replicated scalars; the per-slot load
+    psum stays the only cross-shard communication.
+    """
     from repro.parallel.compat import shard_map
+
+    tab_spec = P(device_axis, None) if per_device_tables else P(None)
+    seq_spec = P(None, device_axis)
+    ov_specs = (seq_spec,) * 3 if has_overlay else ()
 
     @partial(shard_map, mesh=mesh,
              in_specs=(seq_spec, tab_spec, tab_spec, tab_spec,
-                       P(device_axis), P()) + ov_specs,
+                       P(device_axis), P(), P(device_axis), P(),
+                       P(device_axis, None), P()) + ov_specs,
              out_specs=(seq_spec, P(), P(), P(device_axis), P(),
                         P(device_axis, None)),
              check_vma=False)
-    def run(j_idx, o_t, h_t, w_t, B, H, *ov):
-        n_local = j_idx.shape[1]
-        state = onalgo.init_state(n_local, M)
+    def run(j_idx, o_t, h_t, w_t, B, H, lam0, mu0, counts0, t0, *ov):
+        state = onalgo.OnAlgoState(
+            lam=lam0, mu=mu0,
+            rho=onalgo.RhoEstimator(counts=counts0, t=t0))
         p_local = OnAlgoParams(B=B, H=H)
 
         def slot(state, xs):
@@ -490,12 +639,147 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
                                                    (j_idx,) + ov)
         return (off, mu_seq, lnorm, state.lam, state.mu, state.rho.counts)
 
-    off, mu_seq, lnorm, lam, mu, counts = run(
-        trace.j_idx, o_tab, h_tab, w_tab, params.B, params.H, *ov_args)
-    series = _series_from_offloads(trace.j_idx, off, tables, params,
-                                   mu_seq, lnorm, overlay,
-                                   enforce_slot_capacity)
+    return run
+
+
+def simulate_sharded_stream(source, T: int, N: int, tables,
+                            params: OnAlgoParams, rule: StepRule, mesh,
+                            device_axis: str = "data", *,
+                            slab: Optional[int] = None,
+                            algo: str = "onalgo",
+                            enforce_slot_capacity: bool = False):
+    """The sharded engine over a *streamed* workload: no (T, N) horizon.
+
+    Same source contract and memory story as
+    :func:`simulate_chunked_stream` — the horizon is walked ``slab``
+    slots at a time, each slab generated on device from counters,
+    rolled through one jitted shard_map scan resuming from the carried
+    (state, t0), and folded into the series before the next slab is
+    generated.  Peak memory is O(slab * N) regardless of T.  (The slab
+    itself is generated full-width before sharding: counter addressing
+    is strided in the device axis, so shard-local generation of an
+    N-slice is a follow-up — the transient is still T-independent.)
+    """
+    o_tab, h_tab, w_tab = tables
+    M = o_tab.shape[-1]
+    _validate_shards(N, mesh, device_axis)
+    if slab is None:
+        slab = 256
+
+    if algo in ("local", "cloud"):
+        return _stream_trivial(source, T, N, slab, tables, params, algo,
+                               enforce_slot_capacity)
+    if algo != "onalgo":
+        raise ValueError("the sharded streaming engine rolls OnAlgo (plus "
+                         "the stateless local/cloud policies); got "
+                         f"{algo!r}")
+
+    run = None
+    lam = jnp.zeros((N,), jnp.float32)
+    mu = jnp.float32(0.0)
+    counts = jnp.zeros((N, M), jnp.float32)
+    parts = []
+    for t0 in range(0, T, slab):
+        L = min(slab, T - t0)
+        j_slab, overlay = source(t0, L)
+        if run is None:
+            run = jax.jit(_make_sharded_run(
+                mesh, device_axis, rule,
+                per_device_tables=o_tab.ndim == 2,
+                has_overlay=overlay is not None))
+        ov_args = (() if overlay is None
+                   else (overlay.o, overlay.h, overlay.w))
+        off, mu_seq, lnorm, lam, mu, counts = run(
+            j_slab, o_tab, h_tab, w_tab, params.B, params.H, lam, mu,
+            counts, jnp.int32(t0), *ov_args)
+        parts.append(_series_from_offloads(j_slab, off, tables, params,
+                                           mu_seq, lnorm, overlay,
+                                           enforce_slot_capacity))
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
-    return series, final
+    return _cat_series(parts), final
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    """The winning chunked-engine configuration and the probe timings."""
+
+    chunk: int
+    block_n: Optional[int]
+    seconds: float  # best probe wall-time
+    timings: dict  # (chunk, block_n) -> probe seconds
+
+    @property
+    def kwargs(self) -> dict:
+        """Ready to splat into simulate_chunked / simulate_service."""
+        return {"chunk": self.chunk, "block_n": self.block_n}
+
+
+def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
+             trace: Optional[Trace] = None,
+             overlay: Optional[RawOverlay] = None,
+             source=None, T: Optional[int] = None, N: Optional[int] = None,
+             chunks=(8, 16, 32), block_ns=(None,),
+             probe_slots: int = 128, slab: Optional[int] = None,
+             algo: str = "onalgo", enforce_slot_capacity: bool = False,
+             repeats: int = 2) -> AutotuneResult:
+    """Pick (chunk, block_n) for the chunked engines by timing probes.
+
+    Runs a short rollout (the first ``probe_slots`` slots) for every
+    candidate in ``chunks`` x ``block_ns`` and returns the fastest —
+    wall-clock, steady-state (each candidate is warmed once before
+    timing, so compiles don't vote).  Probe either a materialized
+    ``trace`` (+ optional ``overlay``) or a streaming ``source`` with
+    its ``(T, N)``; candidates with ``chunk > probe_slots`` are skipped.
+    """
+    import time
+
+    if (trace is None) == (source is None):
+        raise ValueError("autotune needs exactly one of trace= or source=")
+    if trace is not None:
+        probe_T = min(trace.T, probe_slots)
+        p_trace = Trace(j_idx=trace.j_idx[:probe_T],
+                        d_local=trace.d_local[:probe_T])
+        p_overlay = None if overlay is None else RawOverlay(
+            o=overlay.o[:probe_T], h=overlay.h[:probe_T],
+            w=overlay.w[:probe_T],
+            correct_local=overlay.correct_local[:probe_T],
+            correct_cloud=overlay.correct_cloud[:probe_T])
+
+        def probe(chunk, block_n):
+            return simulate_chunked(p_trace, tables, params, rule,
+                                    chunk=chunk, block_n=block_n, algo=algo,
+                                    overlay=p_overlay,
+                                    enforce_slot_capacity=(
+                                        enforce_slot_capacity))
+    else:
+        if T is None or N is None:
+            raise ValueError("autotune(source=...) needs T= and N=")
+        probe_T = min(T, probe_slots)
+
+        def probe(chunk, block_n):
+            return simulate_chunked_stream(
+                source, probe_T, N, tables, params, rule, chunk=chunk,
+                slab=slab, block_n=block_n, algo=algo,
+                enforce_slot_capacity=enforce_slot_capacity)
+
+    timings = {}
+    for chunk in chunks:
+        if chunk > probe_T:
+            continue
+        for block_n in block_ns:
+            jax.block_until_ready(probe(chunk, block_n))  # warm the jits
+            best = float("inf")
+            for _ in range(repeats):
+                t_start = time.perf_counter()
+                jax.block_until_ready(probe(chunk, block_n))
+                best = min(best, time.perf_counter() - t_start)
+            timings[(chunk, block_n)] = best
+    if not timings:
+        raise ValueError(
+            f"no viable candidates: chunks={chunks} all exceed the probe "
+            f"horizon ({probe_T} slots)")
+    (chunk, block_n), seconds = min(timings.items(), key=lambda kv: kv[1])
+    return AutotuneResult(chunk=chunk, block_n=block_n, seconds=seconds,
+                          timings=timings)

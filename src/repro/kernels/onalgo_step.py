@@ -123,18 +123,19 @@ def onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B, *,
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_chunked_kernel(*refs, chunk, t0, has_slots):
+def _onalgo_chunked_kernel(*refs, chunk, has_slots):
     if has_slots:
         (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
          off_ref, museq_ref, lnorm_ref,
          lam_ref, mu_ref, counts_ref) = refs
     else:
         (j_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
          off_ref, museq_ref, lnorm_ref,
          lam_ref, mu_ref, counts_ref) = refs
     k = pl.program_id(0)
+    t0 = t0_ref[0, 0]  # global slots already consumed (traced resume)
 
     @pl.when(k == 0)
     def _init():
@@ -249,7 +250,9 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     o/h/w: value tables, (M,) shared or (N, M) per-device, ALREADY in the
       space the duals are updated in (preconditioned by the caller).
     B (N,), H (): constraint RHS in the same space; a, beta: step rule.
-    t0: global slot count already consumed (for resuming mid-trace).
+    t0: global slot count already consumed (resuming mid-trace).  May be
+      a traced int32 scalar — the streaming engines sweep it across slab
+      launches under a single compile.
     slot_values: optional (o_now, h_now, w_now) raw per-slot (T, N) value
       streams — the service overlay, ALREADY in the dual space — driving
       the realized decision instead of the table gather (rho and the
@@ -269,6 +272,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     mu_arr = jnp.full((1, 1), mu0, jnp.float32)
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
                       jnp.float32(H)]).reshape(1, 3)
+    t0_arr = jnp.asarray(t0, jnp.int32).reshape(1, 1)
 
     has_slots = slot_values is not None
     sv_args = (_pad_slot_values(slot_values, K, chunk, Np) if has_slots
@@ -276,7 +280,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     sv_specs = [pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0))
                 for _ in sv_args]
 
-    kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk, t0=t0,
+    kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk,
                              has_slots=has_slots)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
@@ -292,6 +296,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             pl.BlockSpec((1, 1), lambda k: (0, 0)),
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((1, 3), lambda k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda k: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
@@ -310,7 +315,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal, t0_arr)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
@@ -348,20 +353,21 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_tiled_kernel(*refs, chunk, n_tiles, t0, has_slots):
+def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots):
     if has_slots:
         (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
          off_ref, museq_ref, lnorm_ref,
          lam_ref, mu_ref, counts_ref,
          load_acc, lam2_acc) = refs
     else:
         (j_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref,
+         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
          off_ref, museq_ref, lnorm_ref,
          lam_ref, mu_ref, counts_ref,
          load_acc, lam2_acc) = refs
     k = pl.program_id(0)
+    t0 = t0_ref[0, 0]  # global slots already consumed (traced resume)
     c = pl.program_id(1)
     i = pl.program_id(2)
     first_slot = (k == 0) & (c == 0)
@@ -474,6 +480,7 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     mu_arr = jnp.full((1, 1), mu0, jnp.float32)
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
                       jnp.float32(H)]).reshape(1, 3)
+    t0_arr = jnp.asarray(t0, jnp.int32).reshape(1, 1)
 
     has_slots = slot_values is not None
     sv_args = (_pad_slot_values(slot_values, K, chunk, Np) if has_slots
@@ -482,7 +489,7 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                 for _ in sv_args]
 
     kern = functools.partial(_onalgo_tiled_kernel, chunk=chunk,
-                             n_tiles=n_tiles, t0=t0, has_slots=has_slots)
+                             n_tiles=n_tiles, has_slots=has_slots)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K, chunk, n_tiles),
@@ -497,6 +504,7 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((1, 3), lambda k, c, i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
@@ -519,7 +527,7 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal)
+    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal, t0_arr)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),

@@ -48,13 +48,15 @@ def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
                                interpret=interpret_mode())
 
 
-@partial(jax.jit, static_argnames=("chunk", "t0"))
+@partial(jax.jit, static_argnames=("chunk",))
 def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                    a, beta, *, chunk=8, t0=0, slot_values=None):
     """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas).
 
     ``slot_values``: optional (o, h, w) raw (T, N) streams (service
-    overlay, dual space) driving the realized decision."""
+    overlay, dual space) driving the realized decision.  ``t0`` is
+    traced: slab launches resuming at different offsets share one
+    compile (the streaming engines)."""
     from repro.kernels.onalgo_step import onalgo_chunked_pallas
     return onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                  w_tab, B, H, a, beta, chunk=chunk, t0=t0,
@@ -62,7 +64,7 @@ def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                                  interpret=interpret_mode())
 
 
-@partial(jax.jit, static_argnames=("chunk", "block_n", "t0"))
+@partial(jax.jit, static_argnames=("chunk", "block_n"))
 def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                  a, beta, *, chunk=8, block_n=256, t0=0, slot_values=None):
     """Device-tiled fused rollout (see onalgo_step.onalgo_tiled_pallas):

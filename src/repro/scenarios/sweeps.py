@@ -20,7 +20,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fleet import Trace, simulate
+from repro.core.fleet import Trace, simulate, simulate_chunked
 from repro.core.onalgo import OnAlgoParams, StepRule
 
 
@@ -86,12 +86,38 @@ def sweep_simulate(trace: Trace,
                    true_rho: Optional[jax.Array] = None,
                    with_true_rho: bool = False,
                    use_kernel: bool = False,
-                   enforce_slot_capacity: bool = False):
-    """Run ``simulate`` for every grid cell in one vmapped scan.
+                   enforce_slot_capacity: bool = False,
+                   engine: str = "scan",
+                   chunk: int = 8,
+                   block_n: Optional[int] = None):
+    """Run every grid cell in one vmapped rollout of the chosen engine.
+
+    engine="scan" vmaps ``simulate`` (any algo, Theorem-1 series
+    available); engine="chunked" vmaps ``simulate_chunked`` — the whole
+    grid runs as ONE batched launch of the fused Pallas kernel
+    (``block_n`` routes device-tiled), bit-for-bit with a loop of
+    per-cell ``simulate_chunked`` calls.  The Theorem-1 options
+    (``true_rho`` / ``with_true_rho``) and ``use_kernel`` are scan-only.
 
     Returns (series, final_state) with a leading G axis on every leaf:
     series values are (G, T), final duals (G, N) / (G,).
     """
+    if engine == "chunked":
+        if with_true_rho or true_rho is not None or use_kernel:
+            raise ValueError(
+                "true_rho / with_true_rho / use_kernel are scan-only "
+                "sweep options; the chunked engine IS the kernel")
+
+        def one_chunked(params, rule):
+            return simulate_chunked(
+                trace, tables, params, rule, chunk=chunk, block_n=block_n,
+                algo=algo, enforce_slot_capacity=enforce_slot_capacity)
+
+        return jax.vmap(one_chunked)(grid.params, grid.rules)
+    if engine != "scan":
+        raise ValueError(f"unknown sweep engine {engine!r}; "
+                         "expected scan | chunked")
+
     def one(params, rule):
         return simulate(trace, tables, params, rule, algo=algo,
                         enforce_slot_capacity=enforce_slot_capacity,

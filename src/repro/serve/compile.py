@@ -11,14 +11,19 @@ whole horizon runs as ONE scanned (or chunked/sharded) fleet rollout:
 
   * the image stream, Markov channel, and bursty arrivals come from the
     workload layer (:mod:`repro.workload`) under the versioned RNG
-    contract ``sim.rng_version``: v1 (the default) generates them from
-    counter-based streams, jitted end to end on device; v0 replays the
-    legacy host loop's exact draw order (pinned golden fixture only);
+    contract ``sim.rng_version`` (v1, counter-based streams — the only
+    live contract), jitted end to end on device;
   * raw (o, h, w) values are quantized into the pool-calibrated state
     space in one fused call => the (T, N) ``Trace``;
   * raw values, plus the local/cloudlet correctness of each sampled
     image, ride along in the overlay so decisions and accounting match
     the service semantics exactly (rho alone uses the quantized index).
+
+At fleet scale the (T, N) arrays themselves are the ceiling:
+``compile_service_streaming`` lowers the same run to a
+:class:`StreamingService` whose jitted ``slab(t0, L)`` produces any
+horizon slab — trace and overlay — bit-identical to the materialized
+arrays, from O(L * N) work, for the ``fleet.*_stream`` engines.
 """
 
 from __future__ import annotations
@@ -34,10 +39,9 @@ import numpy as np
 from repro.core.fleet import RawOverlay, Trace
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
-from repro.serve.admission import quantize_states, quantize_states_device
-from repro.workload import (RNG_LEGACY_HOST, generate_service_workload,
-                            validate_rng_version)
-from repro.workload.legacy import legacy_service_workload
+from repro.serve.admission import quantize_states_device
+from repro.workload import (StreamingWorkload, generate_service_workload,
+                            lower_service_workload, validate_rng_version)
 
 
 @dataclasses.dataclass
@@ -68,14 +72,12 @@ class CompiledService:
         return self.trace, self.tables, self.params
 
 
-@partial(jax.jit,
-         static_argnames=("T", "N", "pool_size", "num_rates", "burst_len",
-                          "space"))
-def _compile_v1(seed, T, N, pool_size, num_rates, burst_len, mean_gap,
-                space, on_override, o_levels, cycles, phi_hat, sigma,
-                d_local, corr_local, corr_cloud, v_risk, zeta_pen):
-    """The whole v1 lowering as ONE fused device pass: counter-based
-    workload generation, raw-value gathers, and state quantization.
+def _lower_values(wl, space, on_override, o_levels, cycles, phi_hat,
+                  sigma, d_local, corr_local, corr_cloud, v_risk,
+                  zeta_pen):
+    """Raw-value gathers + quantization for a realized workload (whole
+    horizon or slab) — the one definition both the materialized and the
+    streaming lowerings go through, so their outputs are bit-identical.
 
     Returns (on, j_idx, o, h, w, correct_local, correct_cloud, d_local).
     ``zeta_pen`` is the P3 delay penalty (0 disables it exactly:
@@ -84,8 +86,6 @@ def _compile_v1(seed, T, N, pool_size, num_rates, burst_len, mean_gap,
     channel streams are unaffected (counter addressing has no
     draw-order coupling).
     """
-    wl = generate_service_workload(seed, T, N, pool_size, num_rates,
-                                   burst_len, mean_gap)
     on = wl.on if on_override is None else on_override
     o_raw = o_levels[wl.rates]
     h_raw = cycles[wl.img]
@@ -94,6 +94,21 @@ def _compile_v1(seed, T, N, pool_size, num_rates, burst_len, mean_gap,
     j = quantize_states_device(space, o_raw, h_raw, w_raw, on)
     return (on, j, o_raw, h_raw, w_raw, corr_local[wl.img],
             corr_cloud[wl.img], d_local[wl.img])
+
+
+@partial(jax.jit,
+         static_argnames=("T", "N", "pool_size", "num_rates", "burst_len",
+                          "space"))
+def _compile_v1(seed, T, N, pool_size, num_rates, burst_len, mean_gap,
+                space, on_override, o_levels, cycles, phi_hat, sigma,
+                d_local, corr_local, corr_cloud, v_risk, zeta_pen):
+    """The whole v1 lowering as ONE fused device pass: counter-based
+    workload generation, raw-value gathers, and state quantization."""
+    wl = generate_service_workload(seed, T, N, pool_size, num_rates,
+                                   burst_len, mean_gap)
+    return _lower_values(wl, space, on_override, o_levels, cycles, phi_hat,
+                         sigma, d_local, corr_local, corr_cloud, v_risk,
+                         zeta_pen)
 
 
 def _pool_device_arrays(pool, fp):
@@ -116,66 +131,51 @@ def _space_tables(space: StateSpace):
     return space.tables()
 
 
+def _service_inputs(sim, pool):
+    """Shared pieces of both lowerings: validated contract, calibrated
+    space/tables/params, device pool arrays, scalar knobs."""
+    from repro.serve.simulator import (RATES, pool_fingerprint, pool_space,
+                                       power_of_rate)
+
+    validate_rng_version(sim.rng_version)
+    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+    arrays = ((jnp.asarray(power_of_rate(RATES), jnp.float32),)
+              + _pool_device_arrays(pool, pool_fingerprint(pool)))
+    params = OnAlgoParams(B=jnp.full((sim.num_devices,), sim.B_n,
+                                     jnp.float32),
+                          H=jnp.float32(sim.H))
+    knobs = (jnp.float32(sim.v_risk),
+             jnp.float32(sim.zeta * (sim.d_tr + sim.d_pr_cloud)))
+    return space, arrays, params, knobs, len(RATES)
+
+
 def compile_service(sim, pool, on: Optional[np.ndarray] = None
                     ) -> CompiledService:
     """Lower (SimConfig, PrecomputedPool) to a :class:`CompiledService`.
 
-    Workload generation follows ``sim.rng_version`` (see
-    :mod:`repro.workload`); there is no per-slot host loop on any path —
-    v1 is jitted counter-based streams, v0 delegates to the frozen
-    legacy sampler.
+    Workload generation, value gathers, and quantization run as one
+    fused jitted device pass over counter-based streams (RNG contract
+    v1, the only live one) — no per-slot host loop anywhere.
 
     ``on``: optional (T, N) bool arrival matrix overriding the built-in
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays fleet-tier workloads.
     """
-    from repro.serve.simulator import (RATES, pool_fingerprint, pool_space,
-                                       power_of_rate)
-
     N, T = sim.num_devices, sim.T
     S = len(pool.local_correct)
-    rng_version = validate_rng_version(sim.rng_version)
+    space, arrays, params, knobs, num_rates = _service_inputs(sim, pool)
 
     if on is not None:
         on = np.asarray(on, bool)
         if on.shape != (T, N):
             raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
 
-    if rng_version == RNG_LEGACY_HOST:
-        # v0: host-order draws + float64 host gathers, byte-compatible
-        # with the legacy loop (the pinned golden fixture).
-        on, img, rates = legacy_service_workload(
-            sim.seed, T, N, S, len(RATES), sim.burst_len, sim.mean_gap,
-            on=on)
-        o_raw = power_of_rate(RATES[rates])  # (T, N) Watts
-        h_raw = pool.cycles[img]  # (T, N) cloudlet cycles
-        # risk-adjusted predicted gain (eq. 1), delay-discounted (P3)
-        w_raw = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
-                        0.0, 1.0)
-        if sim.zeta:
-            w_raw = np.clip(w_raw - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
-                            0.0, 1.0)
-        c_local = pool.local_correct[img]
-        c_cloud = pool.cloud_correct[img]
-        d_loc = pool.d_local[img]
-        space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
-        j = quantize_states(space, o_raw, h_raw, w_raw, on)
-    else:
-        # v1: counter-based streams; workload generation, value gathers,
-        # and quantization run as one fused jitted device pass.
-        space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
-        cycles, phi_hat, sigma, d_local, c_l, c_c = _pool_device_arrays(
-            pool, pool_fingerprint(pool))
-        on_dev, j, o_raw, h_raw, w_raw, c_local, c_cloud, d_loc = (
-            _compile_v1(sim.seed, T, N, S, len(RATES),
-                        tuple(sim.burst_len), sim.mean_gap, space,
-                        None if on is None else jnp.asarray(on),
-                        jnp.asarray(power_of_rate(RATES), jnp.float32),
-                        cycles, phi_hat, sigma, d_local, c_l, c_c,
-                        jnp.float32(sim.v_risk),
-                        jnp.float32(sim.zeta * (sim.d_tr
-                                                + sim.d_pr_cloud))))
-        on = np.asarray(on_dev, bool)
+    on_dev, j, o_raw, h_raw, w_raw, c_local, c_cloud, d_loc = (
+        _compile_v1(sim.seed, T, N, S, num_rates, tuple(sim.burst_len),
+                    sim.mean_gap, space,
+                    None if on is None else jnp.asarray(on),
+                    *arrays, *knobs))
+    on = np.asarray(on_dev, bool)
 
     trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
                   d_local=jnp.asarray(d_loc, jnp.float32))
@@ -185,11 +185,70 @@ def compile_service(sim, pool, on: Optional[np.ndarray] = None
         w=jnp.asarray(w_raw, jnp.float32),
         correct_local=jnp.asarray(c_local, jnp.float32),
         correct_cloud=jnp.asarray(c_cloud, jnp.float32))
-    params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
-                          H=jnp.float32(sim.H))
     return CompiledService(sim=sim, space=space, trace=trace,
                            tables=_space_tables(space), params=params,
                            overlay=overlay, on=on)
+
+
+@partial(jax.jit, static_argnames=("space", "length"))
+def _service_slab(wl: StreamingWorkload, space, t0, length, o_levels,
+                  cycles, phi_hat, sigma, d_local, corr_local, corr_cloud,
+                  v_risk, zeta_pen):
+    """One fused device pass from counters to a service slab: workload
+    slab -> gathers -> quantization, slots [t0, t0 + length)."""
+    return _lower_values(wl.slab(t0, length), space, None, o_levels,
+                         cycles, phi_hat, sigma, d_local, corr_local,
+                         corr_cloud, v_risk, zeta_pen)
+
+
+@dataclasses.dataclass
+class StreamingService:
+    """A service run lowered to chunk-addressable (streaming) form.
+
+    Instead of (T, N) trace/overlay arrays, holds the
+    :class:`~repro.workload.streaming.StreamingWorkload` boundary states
+    plus the device pool tables; ``slab(t0, L)`` produces the
+    ``(j_idx, RawOverlay)`` slab for any [t0, t0 + L) — bit-identical
+    to the corresponding slices of ``compile_service``'s arrays — which
+    is exactly the ``source`` contract of the ``fleet.*_stream``
+    engines.  Peak memory: O(L * N), never O(T * N).
+    """
+
+    sim: "SimConfig"  # noqa: F821 — forward ref, defined in simulator.py
+    space: StateSpace
+    tables: Tuple[jax.Array, jax.Array, jax.Array]
+    params: OnAlgoParams
+    wl: StreamingWorkload
+    arrays: tuple  # (o_levels, cycles, phi_hat, sigma, d_local, cl, cc)
+    knobs: tuple  # (v_risk, zeta_pen) traced scalars
+
+    @property
+    def rule(self) -> StepRule:
+        return StepRule.inv_sqrt(self.sim.step_a)
+
+    def slab(self, t0, length: int):
+        """(j_idx (L, N) int32, RawOverlay slab) for [t0, t0 + length)."""
+        _, j, o_raw, h_raw, w_raw, c_local, c_cloud, _ = _service_slab(
+            self.wl, self.space, t0, length, *self.arrays, *self.knobs)
+        return j, RawOverlay(o=o_raw, h=h_raw, w=w_raw,
+                             correct_local=c_local, correct_cloud=c_cloud)
+
+
+def compile_service_streaming(sim, pool) -> StreamingService:
+    """Lower (SimConfig, PrecomputedPool) to a :class:`StreamingService`.
+
+    The only O(T)-sized work is the workload layer's boundary-state
+    lowering (one jitted scan over ROW_BLOCK-aligned blocks, O(T/64 * N)
+    output); nothing (T, N)-sized is ever materialized.  Arrival
+    overrides need the materialized path — use ``compile_service``.
+    """
+    space, arrays, params, knobs, num_rates = _service_inputs(sim, pool)
+    wl = lower_service_workload(sim.seed, sim.T, sim.num_devices,
+                                len(pool.local_correct), num_rates,
+                                tuple(sim.burst_len), sim.mean_gap)
+    return StreamingService(sim=sim, space=space,
+                            tables=_space_tables(space), params=params,
+                            wl=wl, arrays=arrays, knobs=knobs)
 
 
 def service_metrics(sim, series) -> dict:

@@ -7,10 +7,14 @@ measured power curve p(rate) and cycle statistics, and bursty traffic.
 
 This is the substrate behind benchmarks/bench_fig5..8.  ``simulate_service``
 is a thin wrapper over the vectorized fleet engine: serve/compile.py lowers
-the run to the core ``(Trace, tables, params, overlay)`` contract and
-``fleet.simulate`` rolls the whole horizon in one scan.
-``simulate_service_legacy`` keeps the original per-slot Python loop as the
-parity oracle (tests assert the two agree metric for metric).
+the run to the core ``(Trace, tables, params, overlay)`` contract and the
+selected engine rolls the whole horizon.  With ``materialize=False`` the
+lowering is streaming — workload slabs are generated on device inside the
+engine loop, so fleet size is bounded by compute, not by (T, N) arrays.
+
+The original per-slot Python loop (and its v0 host RNG contract) is gone;
+its metrics stay pinned by tests/golden/service_legacy_fig5.json via the
+frozen sampler in tests/legacy_workload.py.
 """
 
 from __future__ import annotations
@@ -22,13 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
 from repro.core.fleet import simulate
-from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.core.state_space import StateSpace
 from repro.data.predictor import GainPredictor, calibrate
 from repro.data.synthetic import ClassifierPair, Dataset, build_scenario
-from repro.serve.admission import AdmissionController
 
 RATES = np.array([10.0, 25.0, 40.0])  # Mbps (testbed operating points)
 
@@ -54,7 +55,8 @@ class SimConfig:
     num_w_levels: int = 8
     zeta: float = 0.0  # P3 delay weight (0 = accuracy only)
     # workload RNG contract (see repro.workload): 1 = counter-based
-    # streams (default), 0 = legacy host draw order (golden fixture only)
+    # streams, the only live contract (0, the legacy host draw order, is
+    # retired — tests/golden pins its metrics via a frozen test sampler)
     rng_version: int = 1
     # paper-measured delays (seconds)
     d_tr: float = 0.157e-3
@@ -157,7 +159,8 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                      on: Optional[np.ndarray] = None, *,
                      engine: str = "scan", chunk: int = 16,
                      block_n: Optional[int] = None, mesh=None,
-                     device_axis: str = "data") -> dict:
+                     device_axis: str = "data", materialize: bool = True,
+                     slab: Optional[int] = None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
@@ -177,12 +180,55 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                         a 1-axis mesh over all local devices); N must be
                         a multiple of the ``device_axis`` shard count.
 
+    ``materialize=False`` switches the chunked/sharded engines to the
+    STREAMING lowering (``compile_service_streaming``): no (T, N) trace
+    or overlay is ever built — each ``slab`` (default 16 * chunk) slots
+    of workload are generated on device from counters inside the engine
+    loop and dropped after their accounting folds, so peak memory is
+    O(slab * N) independent of the horizon and metrics are identical to
+    the materialized path (counter streams are slab-invariant).  The
+    scan engine and arrival overrides need materialized arrays.
+
     ``on``: optional (T, N) bool arrival matrix overriding the built-in
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays the same workloads as
     the fleet simulator.
     """
-    from repro.serve.compile import compile_service, service_metrics
+    from repro.serve.compile import (compile_service,
+                                     compile_service_streaming,
+                                     service_metrics)
+
+    if engine not in ("scan", "chunked", "sharded"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected scan | chunked | sharded")
+    if engine == "sharded" and mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), (device_axis,))
+
+    if not materialize:
+        if engine == "scan":
+            raise ValueError(
+                "materialize=False streams workload slabs per chunk; the "
+                "scan engine needs the whole horizon — use "
+                "engine='chunked' or 'sharded'")
+        if on is not None:
+            raise ValueError(
+                "materialize=False generates arrivals on device; an "
+                "arrival-matrix override needs materialize=True")
+        from repro.core.fleet import (simulate_chunked_stream,
+                                      simulate_sharded_stream)
+
+        cs = compile_service_streaming(sim, pool)
+        if engine == "chunked":
+            series, _ = simulate_chunked_stream(
+                cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
+                cs.rule, chunk=chunk, slab=slab, block_n=block_n,
+                algo=sim.algo, enforce_slot_capacity=True)
+        else:
+            series, _ = simulate_sharded_stream(
+                cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
+                cs.rule, mesh, device_axis=device_axis, slab=slab,
+                algo=sim.algo, enforce_slot_capacity=True)
+        return service_metrics(sim, series)
 
     cs = compile_service(sim, pool, on)
     if engine == "scan":
@@ -195,124 +241,10 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                                      chunk=chunk, block_n=block_n,
                                      algo=sim.algo, overlay=cs.overlay,
                                      enforce_slot_capacity=True)
-    elif engine == "sharded":
+    else:
         from repro.core.fleet import simulate_sharded
-        if mesh is None:
-            mesh = jax.make_mesh((len(jax.devices()),), (device_axis,))
         series, _ = simulate_sharded(*cs.simulate_args(), cs.rule, mesh,
                                      device_axis=device_axis,
                                      algo=sim.algo, overlay=cs.overlay,
                                      enforce_slot_capacity=True)
-    else:
-        raise ValueError(f"unknown engine {engine!r}; "
-                         "expected scan | chunked | sharded")
     return service_metrics(sim, series)
-
-
-def simulate_service_legacy(sim: SimConfig, pool: PrecomputedPool,
-                            on: Optional[np.ndarray] = None) -> dict:
-    """The original per-slot Python-loop service simulator (RNG v0).
-
-    Its role has shrunk to regenerating the pinned golden-metrics
-    fixture (tests/golden/): ``simulate_service(rng_version=0)`` is
-    checked against that fixture instead of re-running this loop.
-    Scheduled for deletion once enough parity history accrues.
-    """
-    from repro.workload.legacy import bursty_arrivals
-
-    if sim.rng_version != 0:
-        raise ValueError(
-            "simulate_service_legacy implements RNG contract v0 only; "
-            f"got rng_version={sim.rng_version} (the legacy loop has no "
-            "counter-based workload path — use simulate_service)")
-
-    rng = np.random.default_rng(sim.seed)
-    N, T = sim.num_devices, sim.T
-    S = len(pool.local_correct)
-
-    if on is not None:
-        on = np.asarray(on, bool)
-        if on.shape != (T, N):
-            raise ValueError(f"arrival matrix shape {on.shape} != {(T, N)}")
-    else:
-        on = bursty_arrivals(rng, T, N, sim.burst_len, sim.mean_gap)
-
-    # --- channel: Markov rate per device
-    rate_idx = rng.integers(0, len(RATES), N)
-
-    # --- controller state, over the pool-calibrated state space
-    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
-    params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
-                          H=jnp.float32(sim.H))
-    ctrl = AdmissionController(space, params, StepRule.inv_sqrt(sim.step_a),
-                               N)
-    rco_energy = np.zeros(N)
-
-    total = dict(tasks=0.0, offloads=0.0, admits=0.0, correct=0.0,
-                 power=0.0, load=0.0, delay=0.0)
-    mu_hist = []
-
-    for t in range(T):
-        task = on[t]
-        # sample an image per active device
-        img = rng.integers(0, S, N)
-        # channel evolves (stay w.p. 0.9)
-        flip = rng.random(N) > 0.9
-        rate_idx = np.where(flip, rng.integers(0, len(RATES), N), rate_idx)
-        o_now = power_of_rate(RATES[rate_idx])
-        h_now = pool.cycles[img]
-        # risk-adjusted predicted gain (eq. 1)
-        w_now = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
-                        0.0, 1.0)
-        if sim.zeta:
-            w_now = np.clip(w_now - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
-                            0.0, 1.0)
-
-        if sim.algo == "onalgo":
-            offload = ctrl.admit(o_now, h_now, w_now, task)
-        elif sim.algo == "ato":
-            offload = task & (pool.d_local[img] < sim.ato_theta)
-        elif sim.algo == "rco":
-            ok = (rco_energy + o_now) / (t + 1.0) <= sim.B_n
-            offload = task & ok
-        elif sim.algo == "ocos":
-            offload = task.copy()
-        elif sim.algo == "local":
-            offload = np.zeros(N, bool)
-        elif sim.algo == "cloud":
-            offload = task.copy()
-        else:
-            raise ValueError(sim.algo)
-
-        # per-slot cloudlet capacity (paper rule), OCOS packs smallest-first
-        admitted = np.asarray(bl.admit_by_capacity(
-            jnp.asarray(offload), jnp.asarray(h_now, jnp.float32),
-            jnp.float32(sim.H), smallest_first=(sim.algo == "ocos")))
-
-        rco_energy += np.where(offload, o_now, 0.0)
-
-        correct = np.where(admitted, pool.cloud_correct[img],
-                           pool.local_correct[img])
-        delay = (sim.d_pr_dev
-                 + np.where(admitted, sim.d_tr + sim.d_pr_cloud, 0.0))
-        total["tasks"] += task.sum()
-        total["offloads"] += offload.sum()
-        total["admits"] += admitted.sum()
-        total["correct"] += float((correct * task).sum())
-        total["power"] += float(np.where(offload, o_now, 0.0).sum())
-        total["load"] += float(np.where(admitted, h_now, 0.0).sum())
-        total["delay"] += float((delay * task).sum())
-        if sim.algo == "onalgo":
-            mu_hist.append(ctrl.mu)
-
-    tasks = max(total["tasks"], 1.0)
-    return {
-        "accuracy": total["correct"] / tasks,
-        "offload_frac": total["offloads"] / tasks,
-        "admit_frac": total["admits"] / tasks,
-        "avg_power_per_dev": total["power"] / (N * T),
-        "avg_load": total["load"] / T,
-        "avg_delay_ms": 1e3 * total["delay"] / tasks,
-        "tasks": tasks,
-        "mu_final": mu_hist[-1] if mu_hist else 0.0,
-    }

@@ -1,11 +1,16 @@
 """Workload generation layer: versioned RNG contracts for fleet traffic.
 
-  streams  — counter-based draw primitives (v1 contract: every value is
-             a pure function of (seed, stream_id, t, n))
-  service  — the service tier's arrival / image / channel processes,
-             jitted end to end (ServiceWorkload)
-  legacy   — the v0 stateful host-order sampling, kept only for the
-             pinned golden fixture (simulate_service_legacy)
+  streams    — counter-based draw primitives (v1 contract: every value is
+               a pure function of (seed, stream_id, t, n))
+  service    — the service tier's arrival / image / channel processes,
+               jitted end to end (ServiceWorkload)
+  streaming  — the chunk-addressable lowering (StreamingWorkload): any
+               [t0, t0 + L) slab from O(L * N) work, bit-identical to
+               the materialized horizon
+
+The retired v0 contract (stateful host-order sampling) survives only as
+the pinned golden fixture under tests/golden/ and its frozen test-side
+sampler (tests/legacy_workload.py).
 """
 
 from repro.workload import streams
@@ -14,9 +19,12 @@ from repro.workload.streams import (RNG_COUNTER, RNG_LEGACY_HOST,
 from repro.workload.service import (ServiceWorkload, arrival_chain_probs,
                                     generate_service_workload,
                                     validate_rng_version)
+from repro.workload.streaming import (StreamingWorkload,
+                                      lower_service_workload)
 
 __all__ = [
     "RNG_COUNTER", "RNG_LEGACY_HOST", "markov_chain", "stream_key",
     "streams", "ServiceWorkload", "arrival_chain_probs",
     "generate_service_workload", "validate_rng_version",
+    "StreamingWorkload", "lower_service_workload",
 ]

@@ -12,10 +12,14 @@ end-to-end experiments (Figs. 5-8) drive the service with:
 Everything is generated on device from counter-addressed streams
 (:mod:`repro.workload.streams`): slot (t, n) of each process is a pure
 function of ``(seed, stream_id, t, n)``, so any engine — scan, chunked,
-sharded, or a future per-shard generator — can materialize exactly the
-same workload without replaying a host RNG's draw order.  This is RNG
-contract v1 (``rng_version=1``); v0 is the legacy host loop preserved in
-:mod:`repro.workload.legacy`.
+sharded, or the per-chunk streaming lowering — can materialize exactly
+the same workload without replaying a host RNG's draw order.  This is
+RNG contract v1 (``rng_version=1``); the retired v0 host loop survives
+only as the pinned golden fixture (see :mod:`repro.workload.streams`).
+
+At fleet scale, :mod:`repro.workload.streaming` lowers the same
+processes to a chunk-addressable :class:`StreamingWorkload` so engines
+never hold the (T, N) horizon at once.
 """
 
 from __future__ import annotations
@@ -86,9 +90,14 @@ def generate_service_workload(seed, T: int, N: int, pool_size: int,
 
 
 def validate_rng_version(rng_version: int) -> int:
-    if rng_version not in (RNG_LEGACY_HOST, RNG_COUNTER):
+    if rng_version == RNG_LEGACY_HOST:
         raise ValueError(
-            f"unknown rng_version {rng_version!r}; known contracts: "
-            f"{RNG_LEGACY_HOST} (legacy host order, golden fixture only) "
-            f"and {RNG_COUNTER} (counter-based streams)")
+            "rng_version=0 (legacy host draw order) is retired: the pinned "
+            "golden fixture (tests/golden/service_legacy_fig5.json) and its "
+            "frozen sampler (tests/legacy_workload.py) are its only "
+            "residue — use the counter-based v1 contract")
+    if rng_version != RNG_COUNTER:
+        raise ValueError(
+            f"unknown rng_version {rng_version!r}; the only live contract "
+            f"is {RNG_COUNTER} (counter-based streams)")
     return rng_version

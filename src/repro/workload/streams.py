@@ -18,9 +18,10 @@ indexes the block's counters, so
     in-block counters don't move; ROW_BLOCK is a contract constant).
 
 This is the ``rng_version >= 1`` contract (``RNG_COUNTER``).  The legacy
-contract ``rng_version == 0`` (``RNG_LEGACY_HOST``) is the seed repo's
-stateful host-order numpy sampling; it survives only as a pinned golden
-fixture behind :mod:`repro.workload.legacy`.
+contract ``rng_version == 0`` (``RNG_LEGACY_HOST``) was the seed repo's
+stateful host-order numpy sampling; it is retired — the pinned golden
+fixture (``tests/golden/service_legacy_fig5.json``) and its frozen
+test-side sampler (``tests/legacy_workload.py``) are its only residue.
 """
 
 from __future__ import annotations
@@ -47,12 +48,33 @@ def stream_key(seed, sid: int):
     return jax.random.fold_in(jax.random.PRNGKey(seed), sid)
 
 
-def _block_keys(seed, sid: int, n_blocks: int):
-    """(n_blocks,) keys — block b is ``fold_in(stream_key, b)``,
-    independent of the horizon."""
+def _block_keys(seed, sid: int, n_blocks: int, b0=0):
+    """(n_blocks,) keys for blocks [b0, b0 + n_blocks) — block b is
+    ``fold_in(stream_key, b)``, independent of the horizon.  ``b0`` may
+    be a traced scalar (the streaming lowering addresses blocks by
+    offset)."""
     fold = jax.vmap(jax.random.fold_in, in_axes=(None, 0))
-    return fold(stream_key(seed, sid),
-                jnp.arange(n_blocks, dtype=jnp.uint32))
+    blocks = jnp.uint32(b0) + jnp.arange(n_blocks, dtype=jnp.uint32)
+    return fold(stream_key(seed, sid), blocks)
+
+
+def uniform_block_range(seed, sid: int, b0, n_blocks: int, N: int,
+                        channels: int) -> jax.Array:
+    """(channels, n_blocks * ROW_BLOCK, N) U[0, 1) slab covering blocks
+    [b0, b0 + n_blocks) of stream ``sid``.
+
+    Row r of the slab is global slot ``(b0 + r // ROW_BLOCK) * ROW_BLOCK
+    + r % ROW_BLOCK``; values are identical to the corresponding rows of
+    :func:`uniform_block` over any horizon (block keys and in-block
+    counters are offset-independent) — this is what makes per-chunk
+    on-device generation bit-equal to a whole-horizon materialization.
+    ``b0`` may be traced; ``n_blocks`` must be static.
+    """
+    draw = jax.vmap(
+        lambda k: jax.random.uniform(k, (ROW_BLOCK, channels, N)))
+    vals = draw(_block_keys(seed, sid, n_blocks, b0))  # (nb, B, C, N)
+    return vals.reshape(n_blocks * ROW_BLOCK, channels, N).transpose(
+        1, 0, 2)
 
 
 def uniform_block(seed, sid: int, T: int, N: int, channels: int
@@ -66,11 +88,7 @@ def uniform_block(seed, sid: int, T: int, N: int, channels: int
     instead of one per process.
     """
     n_blocks = -(-T // ROW_BLOCK)
-    draw = jax.vmap(
-        lambda k: jax.random.uniform(k, (ROW_BLOCK, channels, N)))
-    vals = draw(_block_keys(seed, sid, n_blocks))  # (nb, B, C, N)
-    return vals.reshape(n_blocks * ROW_BLOCK, channels, N)[:T].transpose(
-        1, 0, 2)
+    return uniform_block_range(seed, sid, 0, n_blocks, N, channels)[:, :T]
 
 
 def uniforms(seed, sid: int, T: int, N: int) -> jax.Array:
@@ -116,16 +134,28 @@ def markov_chain(u: jax.Array, s0: jax.Array, p_on, p_stay) -> jax.Array:
     return jnp.where(s0[None, :], b, a)
 
 
+def hold_resample_from(change: jax.Array, candidates: jax.Array,
+                       entry: jax.Array) -> jax.Array:
+    """(T, N) piecewise-constant process resuming from ``entry`` (N,).
+
+    At each ``change`` slot the value jumps to that slot's ``candidates``
+    entry, else it holds; before the first change it holds ``entry`` —
+    the value carried in from the slots preceding this slab.  Stateless
+    formulation: the value at t is the candidate at the most recent
+    change-slot <= t (a running cummax over change-slot indices), or
+    ``entry`` when no change has happened yet.
+    """
+    T = change.shape[0]
+    t_idx = jnp.arange(T, dtype=jnp.int32)[:, None]
+    last = jax.lax.cummax(jnp.where(change, t_idx, -1), axis=0)  # (T, N)
+    picked = jnp.take_along_axis(candidates, jnp.maximum(last, 0), axis=0)
+    return jnp.where(last >= 0, picked, entry[None, :])
+
+
 def hold_resample(change: jax.Array, candidates: jax.Array) -> jax.Array:
     """(T, N) piecewise-constant process: at each ``change`` slot the
     value jumps to that slot's ``candidates`` entry, else it holds.
-
-    Slot 0 always draws fresh.  Stateless formulation: the value at t is
-    the candidate at the most recent change-slot <= t, found with a
-    running max over change-slot indices — no sequential scan.
+    Slot 0 always draws fresh.
     """
-    T = change.shape[0]
     change = change.at[0].set(True)  # initial draw
-    t_idx = jnp.arange(T, dtype=jnp.int32)[:, None]
-    last = jax.lax.cummax(jnp.where(change, t_idx, -1), axis=0)  # (T, N)
-    return jnp.take_along_axis(candidates, last, axis=0)
+    return hold_resample_from(change, candidates, candidates[0])

@@ -1,26 +1,31 @@
-"""Regenerate the pinned golden metrics of the legacy service loop.
+"""Regenerate the pinned golden metrics of the retired v0 service path.
 
-Runs ``simulate_service_legacy`` (RNG contract v0 — the ONLY remaining
-consumer of the legacy per-slot loop) at the fig5 service configuration
-(T=2000, N=4, B_n=0.06 W, H=2*441e6 cycles, seed=1) over the
-deterministic synthetic pool, for every policy plus the delay-weighted
-(P3, zeta=300) variant, and freezes the metrics to
-``service_legacy_fig5.json``.
+The original per-slot Python loop (``simulate_service_legacy``) is GONE
+— RNG contract v0 is retired from the product.  What remains is the
+frozen v0 sampler + replay in ``tests/legacy_workload.py``: it re-draws
+the legacy workload byte for byte and rolls it through the public fleet
+engine and metrics fold, at the fig5 service configuration (T=2000,
+N=4, B_n=0.06 W, H=2*441e6 cycles, seed=1) over the deterministic
+synthetic pool, for every policy plus the delay-weighted (P3, zeta=300)
+variant.
 
-tests/test_serve.py checks the compiled v0 path against this file (fast,
-no legacy loop) and re-runs the legacy loop itself for one entry (the
-single legacy regression check).  Regenerate ONLY when the v0 contract
-intentionally changes:
+tests/test_serve.py checks that replay against this file.  The fixture
+is pinned HISTORY — its values were produced by the original loop and
+have survived three PRs of engine refactors; regenerate ONLY if the
+replay path itself must intentionally change:
 
-    PYTHONPATH=src python tests/golden/regen_service_legacy_fig5.py
+    PYTHONPATH=src:tests python tests/golden/regen_service_legacy_fig5.py
 """
 
 import dataclasses
 import json
 import pathlib
+import sys
 
-from repro.serve.simulator import (SimConfig, simulate_service_legacy,
-                                   synthetic_pool)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from legacy_workload import replay_golden  # noqa: E402
+from repro.serve.simulator import SimConfig, synthetic_pool  # noqa: E402
 
 FIG5_SIM = dict(num_devices=4, T=2000, B_n=0.06, H=2 * 441e6, seed=1,
                 rng_version=0)
@@ -40,7 +45,7 @@ def main():
     for name, sim in entries():
         doc["entries"][name] = {
             "sim": dataclasses.asdict(sim),
-            "metrics": simulate_service_legacy(sim, pool),
+            "metrics": replay_golden(sim, pool),
         }
         print(f"{name}: acc="
               f"{doc['entries'][name]['metrics']['accuracy']:.4f}")

@@ -1,0 +1,110 @@
+"""FROZEN v0 workload sampler + golden replay (test-support only).
+
+RNG contract v0 — the seed repo's stateful host-order numpy sampling —
+is retired from the product (``repro.workload`` speaks only the
+counter-based v1 contract).  Its one remaining job is the pinned
+golden-metrics regression: this module freezes the legacy draw order
+byte for byte and replays the resulting workload through the *public*
+fleet-engine contract, so ``tests/golden/service_legacy_fig5.json``
+keeps pinning the engine + metrics behavior on known inputs.
+
+Do not "fix" or modernize the sampling here: byte-identical draw order
+is the whole point.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bursty_arrivals(rng: np.random.Generator, T: int, N: int,
+                    burst_len: Tuple[int, int], mean_gap: float
+                    ) -> np.ndarray:
+    """The v0 ON/OFF bursty traffic, (T, N) bool."""
+    on = np.zeros((T, N), bool)
+    for n in range(N):
+        t = int(rng.integers(0, burst_len[1]))
+        while t < T:
+            ln = int(rng.integers(burst_len[0], burst_len[1] + 1))
+            on[t:t + ln, n] = True
+            t += ln + 1 + int(rng.geometric(1.0 / mean_gap))
+    return on
+
+
+def legacy_service_workload(seed: int, T: int, N: int, pool_size: int,
+                            num_rates: int, burst_len: Tuple[int, int],
+                            mean_gap: float,
+                            on: Optional[np.ndarray] = None):
+    """Pre-sample the v0 workload with the legacy loop's exact draw order.
+
+    Returns ``(on, img, rates)`` numpy arrays, all (T, N).  ``on``
+    overrides the built-in bursty arrivals when given (consuming no
+    arrival draws, exactly like the legacy loop did).
+    """
+    rng = np.random.default_rng(seed)
+    if on is None:
+        on = bursty_arrivals(rng, T, N, burst_len, mean_gap)
+    else:
+        on = np.asarray(on, bool)
+
+    rate_idx = rng.integers(0, num_rates, N)
+    img = np.zeros((T, N), np.int64)
+    rates = np.zeros((T, N), np.int64)
+    for t in range(T):
+        img[t] = rng.integers(0, pool_size, N)
+        flip = rng.random(N) > 0.9  # channel evolves (stay w.p. 0.9)
+        rate_idx = np.where(flip, rng.integers(0, num_rates, N), rate_idx)
+        rates[t] = rate_idx
+    return on, img, rates
+
+
+def replay_golden(sim, pool) -> dict:
+    """Run a service config on the frozen v0 workload via the fleet engine.
+
+    The v0 *lowering* (float64 host gathers of the frozen draws,
+    quantization, overlay assembly) lives here now that the product
+    compile path is v1-only; the rollout and metrics fold go through the
+    public ``fleet.simulate`` / ``service_metrics`` — which is exactly
+    what the golden fixture is meant to pin.
+    """
+    from repro.core.fleet import RawOverlay, Trace, simulate
+    from repro.core.onalgo import OnAlgoParams
+    from repro.serve.admission import quantize_states
+    from repro.serve.compile import service_metrics
+    from repro.serve.simulator import RATES, pool_space, power_of_rate
+
+    N, T = sim.num_devices, sim.T
+    on, img, rates = legacy_service_workload(
+        sim.seed, T, N, len(pool.local_correct), len(RATES), sim.burst_len,
+        sim.mean_gap)
+    o_raw = power_of_rate(RATES[rates])  # (T, N) Watts
+    h_raw = pool.cycles[img]  # (T, N) cloudlet cycles
+    w_raw = np.clip(pool.phi_hat[img] - sim.v_risk * pool.sigma[img],
+                    0.0, 1.0)
+    if sim.zeta:
+        w_raw = np.clip(w_raw - sim.zeta * (sim.d_tr + sim.d_pr_cloud),
+                        0.0, 1.0)
+    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+    j = quantize_states(space, o_raw, h_raw, w_raw, on)
+    trace = Trace(j_idx=jnp.asarray(j, jnp.int32),
+                  d_local=jnp.asarray(pool.d_local[img], jnp.float32))
+    overlay = RawOverlay(
+        o=jnp.asarray(o_raw, jnp.float32),
+        h=jnp.asarray(h_raw, jnp.float32),
+        w=jnp.asarray(w_raw, jnp.float32),
+        correct_local=jnp.asarray(pool.local_correct[img], jnp.float32),
+        correct_cloud=jnp.asarray(pool.cloud_correct[img], jnp.float32))
+    params = OnAlgoParams(B=jnp.full((N,), sim.B_n, jnp.float32),
+                          H=jnp.float32(sim.H))
+    series, _ = simulate(trace, space.tables(), params, sim_rule(sim),
+                         algo=sim.algo, ato_theta=sim.ato_theta,
+                         enforce_slot_capacity=True, overlay=overlay)
+    return service_metrics(sim, series)
+
+
+def sim_rule(sim):
+    from repro.core.onalgo import StepRule
+    return StepRule.inv_sqrt(sim.step_a)

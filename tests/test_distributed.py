@@ -113,6 +113,51 @@ class TestShardedFleet:
         """)
         assert "OK" in out
 
+    def test_sharded_stream_matches_single_device(self):
+        """simulate_sharded_stream across 4 real shards: per-slab
+        generated workload + resumable shard_map scan == the
+        single-process scan engine on the materialized horizon."""
+        out = run_with_devices("""
+            import numpy as np, jax, jax.numpy as jnp
+            from repro.core import (OnAlgoParams, StepRule,
+                                    default_paper_space, simulate,
+                                    simulate_sharded_stream)
+            from repro.data.traces import TraceSpec, iid_trace
+            from repro.launch.mesh import make_test_mesh
+
+            space = default_paper_space(num_w=4)
+            N, T = 16, 150
+            trace, _ = iid_trace(space, TraceSpec(T=T, N=N, seed=2))
+            tables = space.tables()
+            params = OnAlgoParams(B=jnp.full((N,), 0.08),
+                                  H=jnp.float32(7e8))
+            rule = StepRule.inv_sqrt(0.5)
+            series, fin = simulate(trace, tables, params, rule)
+
+            def source(t0, L):  # slab view of the same trace, no overlay
+                return trace.j_idx[t0:t0 + L], None
+
+            mesh = make_test_mesh((4,), ("data",))
+            s_st, fin_st = simulate_sharded_stream(
+                source, T, N, tables, params, rule, mesh, slab=64)
+            for k in ("reward", "power", "load", "offloads", "tasks",
+                      "mu", "lam_norm"):
+                np.testing.assert_allclose(np.asarray(s_st[k]),
+                                           np.asarray(series[k]),
+                                           rtol=1e-4, atol=1e-5,
+                                           err_msg=k)
+            np.testing.assert_allclose(np.asarray(fin_st.lam),
+                                       np.asarray(fin.lam), rtol=1e-4,
+                                       atol=1e-6)
+            np.testing.assert_allclose(float(fin_st.mu), float(fin.mu),
+                                       rtol=1e-4, atol=1e-7)
+            np.testing.assert_array_equal(
+                np.asarray(fin_st.rho.counts),
+                np.asarray(fin.rho.counts))
+            print("OK")
+        """, n_devices=4)
+        assert "OK" in out
+
     def test_compressed_psum_across_shards(self):
         out = run_with_devices("""
             import numpy as np, jax, jax.numpy as jnp

@@ -84,6 +84,52 @@ class TestTiledKernelProperties:
                                       np.asarray(f2.rho.counts))
 
 
+class TestStreamingWorkloadProperties:
+    """v1 streams are slab-invariant: how you chunk the horizon is
+    unobservable in the realized draws."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(T=st.integers(1, 400), t0=st.integers(0, 399),
+           length=st.integers(1, 150), seed=st.integers(0, 1000))
+    def test_any_slab_matches_one_shot(self, T, t0, length, seed):
+        """Generating [0, T) in one shot vs an arbitrary (offset, size)
+        slab — including non-divisible T and slabs straddling ROW_BLOCK
+        boundaries — yields identical draws."""
+        from repro.workload import (generate_service_workload,
+                                    lower_service_workload)
+        t0 = min(t0, T - 1)
+        length = min(length, T - t0)
+        ref = generate_service_workload(seed, T, 4, 32, 3)
+        wl = lower_service_workload(seed, T, 4, 32, 3)
+        slab = wl.slab(t0, length)
+        for f in ("on", "img", "rates"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(slab, f)),
+                np.asarray(getattr(ref, f))[t0:t0 + length], err_msg=f)
+
+    @settings(max_examples=10, deadline=None)
+    @given(T=st.integers(2, 300), extra=st.integers(1, 200),
+           chunk=st.sampled_from([16, 64, 96]), seed=st.integers(0, 1000))
+    def test_horizon_extension_prefix_stable_across_chunks(self, T, extra,
+                                                           chunk, seed):
+        """Extending the horizon never perturbs already-generated slots,
+        and the extended stream chunk-walks to the same prefix across
+        chunk boundaries of any alignment."""
+        from repro.workload import (generate_service_workload,
+                                    lower_service_workload)
+        ref = generate_service_workload(seed, T, 3, 32, 3)
+        wl_long = lower_service_workload(seed, T + extra, 3, 32, 3)
+        got = {f: [] for f in ("on", "img", "rates")}
+        for t0 in range(0, T, chunk):
+            slab = wl_long.slab(t0, min(chunk, T - t0))
+            for f in got:
+                got[f].append(np.asarray(getattr(slab, f)))
+        for f in got:
+            np.testing.assert_array_equal(
+                np.concatenate(got[f]), np.asarray(getattr(ref, f)),
+                err_msg=f)
+
+
 class TestShardingProperties:
     @settings(max_examples=50, deadline=None)
     @given(dim=st.integers(1, 4096))

@@ -488,6 +488,47 @@ class TestSweeps:
         with pytest.raises(ValueError):
             stack_params([p1, p2])
 
+    def test_chunked_sweep_bit_for_bit_vs_loop(self):
+        """sweep_simulate(engine="chunked"): the vmapped batch of fused
+        kernel rollouts == a loop of per-cell simulate_chunked calls,
+        bit for bit — and tolerance-close to the scan-engine sweep."""
+        c = compile_scenario(Scenario("stationary", T=120, N=8, seed=11))
+        grid = product_grid(8, a_values=(0.2, 0.5), beta_values=(0.5,),
+                            B_values=(0.04, 0.08),
+                            H_values=(c.scenario.H,))
+        sw_series, sw_final = sweep_simulate(c.trace, c.tables, grid,
+                                             engine="chunked", chunk=8,
+                                             enforce_slot_capacity=True)
+        sc_series, _ = sweep_simulate(c.trace, c.tables, grid,
+                                      enforce_slot_capacity=True)
+        assert set(sw_series) == set(sc_series)
+        for g in range(grid.G):
+            p = jax.tree.map(lambda x: x[g], grid.params)
+            r = jax.tree.map(lambda x: x[g], grid.rules)
+            s, f = simulate_chunked(c.trace, c.tables, p, r, chunk=8,
+                                    enforce_slot_capacity=True)
+            for k in s:
+                np.testing.assert_array_equal(
+                    np.asarray(sw_series[k][g]), np.asarray(s[k]),
+                    err_msg=f"cell {g} series {k}")
+                np.testing.assert_allclose(
+                    np.asarray(sw_series[k][g]), np.asarray(sc_series[k][g]),
+                    rtol=2e-5, atol=1e-5, err_msg=f"cell {g} vs scan {k}")
+            np.testing.assert_array_equal(np.asarray(sw_final.lam[g]),
+                                          np.asarray(f.lam))
+            np.testing.assert_array_equal(
+                np.asarray(sw_final.rho.counts[g]),
+                np.asarray(f.rho.counts))
+
+    def test_chunked_sweep_rejects_scan_only_options(self):
+        c = compile_scenario(Scenario("stationary", T=60, N=4, seed=1))
+        grid = product_grid(4)
+        with pytest.raises(ValueError, match="scan-only"):
+            sweep_simulate(c.trace, c.tables, grid, engine="chunked",
+                           with_true_rho=True)
+        with pytest.raises(ValueError, match="engine"):
+            sweep_simulate(c.trace, c.tables, grid, engine="warp")
+
     def test_sweep_with_true_rho_series(self):
         space = default_paper_space(num_w=4)
         trace, rho = iid_trace(space, TraceSpec(T=200, N=4, seed=13))

@@ -1,5 +1,6 @@
 """Serving substrate: engine, batcher, admission controller, simulator,
-the golden v0 fixture, and cross-engine parity of the compiled service."""
+the golden v0 fixture, and cross-engine parity of the compiled service
+(materialized and streaming lowerings)."""
 
 import json
 import pathlib
@@ -17,7 +18,7 @@ from repro.serve.admission import (AdmissionController, flops_per_request,
                                    quantize_states)
 from repro.serve.engine import Batcher, ServingEngine
 from repro.serve.simulator import (SimConfig, simulate_service,
-                                   simulate_service_legacy, synthetic_pool)
+                                   synthetic_pool)
 
 SERVICE_METRICS = ("accuracy", "offload_frac", "admit_frac",
                    "avg_power_per_dev", "avg_load", "avg_delay_ms",
@@ -116,12 +117,12 @@ def _sim_from_entry(entry) -> SimConfig:
 
 
 class TestGoldenFixture:
-    """RNG contract v0 is pinned by tests/golden/service_legacy_fig5.json.
+    """RNG contract v0 stays pinned by tests/golden/service_legacy_fig5.json.
 
-    The compiled v0 service path is checked against the frozen legacy
-    metrics for every policy (fast — no legacy loop); the legacy loop
-    itself re-runs for ONE entry, its single remaining job before
-    deletion (see ROADMAP)."""
+    The legacy Python loop (and the product's v0 compile path) are gone;
+    the frozen sampler in tests/legacy_workload.py replays the exact v0
+    draws through the public fleet engine + metrics fold, which is what
+    the fixture regression-checks for every policy."""
 
     @pytest.fixture(scope="class")
     def golden(self):
@@ -138,33 +139,22 @@ class TestGoldenFixture:
 
     @pytest.mark.parametrize("name", ["onalgo", "ato", "rco", "ocos",
                                       "local", "cloud", "onalgo_zeta300"])
-    def test_compiled_v0_matches_golden(self, golden, pool, name):
-        """rel=5e-3: the compiled path prices decisions in float32 while
-        the legacy loop used float64, so over T=2000 slots a handful of
+    def test_frozen_v0_replay_matches_golden(self, golden, pool, name):
+        """rel=5e-3: the engine prices decisions in float32 while the
+        original loop used float64, so over T=2000 slots a handful of
         near-threshold offload/admit decisions flip (max observed metric
         deviation 7e-4).  Contract regressions are O(1), far outside."""
+        from legacy_workload import replay_golden
         entry = golden["entries"][name]
-        out = simulate_service(_sim_from_entry(entry), pool)
+        out = replay_golden(_sim_from_entry(entry), pool)
         for k in SERVICE_METRICS:
             assert out[k] == pytest.approx(entry["metrics"][k], rel=5e-3,
                                            abs=1e-6), k
 
-    def test_legacy_loop_reproduces_golden(self, golden, pool):
-        """The one remaining legacy-loop execution in the suite.
-
-        rel=5e-3 like the compiled check: the loop's jitted admission
-        step also prices in float32, so XLA-version changes can flip the
-        same kind of near-threshold decisions."""
-        entry = golden["entries"]["onalgo"]
-        ref = simulate_service_legacy(_sim_from_entry(entry), pool)
-        for k in SERVICE_METRICS:
-            assert ref[k] == pytest.approx(entry["metrics"][k], rel=5e-3,
-                                           abs=1e-6), k
-
-    def test_legacy_rejects_counter_contract(self):
-        with pytest.raises(ValueError, match="rng_version"):
-            simulate_service_legacy(SimConfig(num_devices=2, T=40),
-                                    synthetic_pool())
+    def test_v0_contract_retired(self):
+        with pytest.raises(ValueError, match="retired"):
+            simulate_service(SimConfig(num_devices=2, T=40, rng_version=0),
+                             synthetic_pool())
 
     def test_unknown_rng_version_rejected(self):
         with pytest.raises(ValueError, match="rng_version"):
@@ -209,12 +199,98 @@ class TestServiceEngines:
             simulate_service(SimConfig(num_devices=4, T=64), pool,
                              engine="warp")
 
-    def test_engine_selector_on_v0_contract(self, pool):
-        """The engine selector composes with the pinned v0 workload."""
-        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=3,
-                        rng_version=0)
+
+class TestStreamingService:
+    """materialize=False: workload slabs generated on device inside the
+    engine loop — metrics must be IDENTICAL to the materialized path,
+    including non-divisible N (5) / T (203) and slab/chunk misalignment."""
+
+    @pytest.fixture(scope="class")
+    def pool(self):
+        return synthetic_pool()
+
+    @pytest.mark.parametrize("algo", ["onalgo", "local", "cloud"])
+    def test_streaming_chunked_equals_materialized(self, pool, algo):
+        sim = SimConfig(num_devices=5, T=203, algo=algo, B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
+        ref = simulate_service(sim, pool, engine="chunked", chunk=8)
+        out = simulate_service(sim, pool, engine="chunked", chunk=8,
+                               materialize=False, slab=64)
+        for k in SERVICE_METRICS:
+            assert out[k] == ref[k], k  # bit-identical, not approx
+
+    def test_streaming_tiled_and_sharded_match_scan(self, pool):
+        sim = SimConfig(num_devices=6, T=203, algo="onalgo", B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
         ref = simulate_service(sim, pool, engine="scan")
-        out = simulate_service(sim, pool, engine="chunked", chunk=16)
+        runs = {
+            "tiled": simulate_service(sim, pool, engine="chunked",
+                                      chunk=8, block_n=8,
+                                      materialize=False, slab=64),
+            "sharded": simulate_service(sim, pool, engine="sharded",
+                                        materialize=False, slab=80),
+        }
+        for eng, out in runs.items():
+            for k in SERVICE_METRICS:
+                assert out[k] == pytest.approx(ref[k], rel=2e-5,
+                                               abs=1e-5), (eng, k)
+
+    def test_streaming_default_slab(self, pool):
+        """The default slab (16 * chunk) walks a T that is neither a
+        slab nor a chunk multiple."""
+        sim = SimConfig(num_devices=4, T=275, algo="onalgo", seed=9)
+        ref = simulate_service(sim, pool, engine="chunked", chunk=16)
+        out = simulate_service(sim, pool, engine="chunked", chunk=16,
+                               materialize=False)
+        for k in SERVICE_METRICS:
+            assert out[k] == ref[k], k
+
+    def test_streaming_rejects_scan_engine(self, pool):
+        with pytest.raises(ValueError, match="materialize"):
+            simulate_service(SimConfig(num_devices=4, T=64), pool,
+                             engine="scan", materialize=False)
+
+    def test_streaming_rejects_arrival_override(self, pool):
+        with pytest.raises(ValueError, match="materialize"):
+            simulate_service(SimConfig(num_devices=4, T=64), pool,
+                             on=np.ones((64, 4), bool), engine="chunked",
+                             materialize=False)
+
+    def test_streaming_slab_equals_materialized_compile(self, pool):
+        """The streaming lowering's slabs are bit-identical slices of
+        compile_service's trace/overlay arrays."""
+        from repro.serve.compile import (compile_service,
+                                         compile_service_streaming)
+        sim = SimConfig(num_devices=5, T=203, algo="onalgo", seed=11)
+        mat = compile_service(sim, pool)
+        cs = compile_service_streaming(sim, pool)
+        for t0, L in ((0, 203), (37, 64), (160, 43)):
+            j, ov = cs.slab(t0, L)
+            np.testing.assert_array_equal(
+                np.asarray(j), np.asarray(mat.trace.j_idx)[t0:t0 + L])
+            for f in ("o", "h", "w", "correct_local", "correct_cloud"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ov, f)),
+                    np.asarray(getattr(mat.overlay, f))[t0:t0 + L],
+                    err_msg=f"{f} at t0={t0}")
+
+    def test_autotune_picks_runnable_config(self, pool):
+        """fleet.autotune on the streaming service source returns a
+        candidate whose full run reproduces the scan metrics."""
+        from repro.core import fleet
+        from repro.serve.compile import compile_service_streaming
+        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=2)
+        cs = compile_service_streaming(sim, pool)
+        tune = fleet.autotune(cs.tables, cs.params, cs.rule,
+                              source=cs.slab, T=sim.T, N=4,
+                              chunks=(8, 16), block_ns=(None, 8),
+                              probe_slots=48, repeats=1)
+        assert (tune.chunk, tune.block_n) in tune.timings
+        assert len(tune.timings) == 4
+        assert tune.seconds == tune.timings[(tune.chunk, tune.block_n)]
+        ref = simulate_service(sim, pool, engine="scan")
+        out = simulate_service(sim, pool, engine="chunked",
+                               materialize=False, **tune.kwargs)
         for k in SERVICE_METRICS:
             assert out[k] == pytest.approx(ref[k], rel=2e-5, abs=1e-5), k
 

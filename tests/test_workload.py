@@ -1,5 +1,6 @@
 """Workload layer: counter-based streams, the versioned RNG contract,
-and the service workload processes."""
+the service workload processes, and the streaming (chunk-addressable)
+lowering."""
 
 import jax
 import jax.numpy as jnp
@@ -8,8 +9,8 @@ import pytest
 
 from repro.workload import (RNG_COUNTER, RNG_LEGACY_HOST,
                             arrival_chain_probs, generate_service_workload,
-                            streams, validate_rng_version)
-from repro.workload.legacy import legacy_service_workload
+                            lower_service_workload, streams,
+                            validate_rng_version)
 
 
 class TestStreams:
@@ -118,18 +119,21 @@ class TestServiceWorkload:
         assert same == pytest.approx(0.9 + 0.1 / 3, abs=0.02)
 
     def test_rng_contract_validation(self):
-        assert validate_rng_version(RNG_LEGACY_HOST) == 0
         assert validate_rng_version(RNG_COUNTER) == 1
+        # v0 is retired: only the pinned golden fixture still speaks it
+        with pytest.raises(ValueError, match="retired"):
+            validate_rng_version(RNG_LEGACY_HOST)
         with pytest.raises(ValueError, match="rng_version"):
             validate_rng_version(2)
 
     def test_legacy_v0_draw_order_is_stable(self):
-        """The frozen v0 sampler replays the legacy loop's draw order —
-        pinned here so refactors can't silently move it."""
+        """The frozen v0 sampler (test-support, tests/legacy_workload.py)
+        replays the retired legacy loop's draw order — pinned here so
+        the golden fixture's inputs can't silently move."""
+        from legacy_workload import bursty_arrivals, legacy_service_workload
         on, img, rates = legacy_service_workload(0, 50, 3, 16, 3, (5, 10),
                                                  8.0)
         rng = np.random.default_rng(0)
-        from repro.workload.legacy import bursty_arrivals
         on_ref = bursty_arrivals(rng, 50, 3, (5, 10), 8.0)
         rate_idx = rng.integers(0, 3, 3)
         np.testing.assert_array_equal(on, on_ref)
@@ -142,3 +146,62 @@ class TestServiceWorkload:
             rates_ref[t] = rate_idx
         np.testing.assert_array_equal(img, img_ref)
         np.testing.assert_array_equal(rates, rates_ref)
+
+
+class TestStreamingWorkload:
+    """The chunk-addressable lowering: slabs must be bit-identical to
+    the one-shot materialization — slab boundaries are unobservable."""
+
+    T, N = 331, 6
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        ref = generate_service_workload(4, self.T, self.N, 64, 3,
+                                        mean_gap=6.0)
+        wl = lower_service_workload(4, self.T, self.N, 64, 3,
+                                    mean_gap=6.0)
+        return ref, wl
+
+    def _assert_slab(self, ref, slab, t0):
+        for f in ("on", "img", "rates"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(slab, f)),
+                np.asarray(getattr(ref, f))[t0:t0 + slab.on.shape[0]],
+                err_msg=f"field {f} at t0={t0}")
+
+    def test_full_horizon_single_slab(self, pair):
+        ref, wl = pair
+        self._assert_slab(ref, wl.slab(0, self.T), 0)
+
+    @pytest.mark.parametrize("t0", [0, 1, 37, 63, 64, 65, 200, 331 - 41])
+    def test_arbitrary_offsets(self, pair, t0):
+        """Offsets crossing, touching, and straddling ROW_BLOCK
+        boundaries, all against the same materialized realization."""
+        ref, wl = pair
+        self._assert_slab(ref, wl.slab(t0, 41), t0)
+
+    def test_covering_chunk_walk_non_divisible(self, pair):
+        """A chunked walk with T % slab != 0 reassembles the horizon."""
+        ref, wl = pair
+        for t0 in range(0, self.T, 48):
+            L = min(48, self.T - t0)
+            self._assert_slab(ref, wl.slab(t0, L), t0)
+
+    def test_slab_jits_with_traced_offset(self, pair):
+        """One compiled slab function serves every offset (the engines
+        sweep t0 as a traced scalar)."""
+        ref, wl = pair
+        slab = jax.jit(lambda wl, t0: wl.slab(t0, 40))
+        for t0 in (0, 65, 130):
+            self._assert_slab(ref, slab(wl, jnp.int32(t0)), t0)
+
+    def test_lowering_is_T_extension_stable(self):
+        """Extending the lowering horizon preserves boundary states —
+        the streaming analogue of prefix stability."""
+        short = lower_service_workload(7, 200, 5, 64, 3)
+        long = lower_service_workload(7, 500, 5, 64, 3)
+        nb = short.n_blocks
+        np.testing.assert_array_equal(np.asarray(short.on_entry),
+                                      np.asarray(long.on_entry)[:nb])
+        np.testing.assert_array_equal(np.asarray(short.rate_entry),
+                                      np.asarray(long.rate_entry)[:nb])
