@@ -1,0 +1,79 @@
+"""Multi-cloudlet topology benchmark: K-vector duals at fleet scale.
+
+Drives fig5-style end-to-end service runs (OnAlgo, synthetic pool,
+per-slot per-cloudlet admission) through the streaming chunked engine
+with a mobility-walk topology, sweeping the cloudlet count
+K in {1, 4, 16, 64}.  K = 1 is the scalar-mu baseline (bit-identical to
+running without a topology), so the sweep measures exactly what the
+per-cloudlet generalization costs: the in-kernel association gather,
+the (N, K_pad) segment reduction per slot, and the O(N * K) per-slot
+admission post-pass.  Emitted columns per K:
+
+  * fig5-style metrics (accuracy / offload fraction / power per device);
+  * devslots/sec throughput and wall-clock per slot;
+  * handover rate (fraction of device-slots that switch cloudlet) — the
+    mobility knob the topology tier exists for.
+
+Runs in CI interpret mode (one CSV row per K in the per-PR artifact,
+``--only topology``); sizes are CI-bounded like bench_fleet_scale.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.simulator import SimConfig, simulate_service, synthetic_pool
+from repro.topology import Topology
+
+N = 2048
+T = 256
+SLAB = 64
+CHUNK = 16
+P_HANDOVER = 0.02
+
+
+def _sim(N: int, T: int) -> SimConfig:
+    # fig5 per-device budget; total capacity scaled with the fleet but
+    # tight (1 task/slot per 4 devices, split over the K cloudlets) so
+    # the per-cloudlet duals actually engage during the run
+    return SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
+                     H=N / 4 * 441e6, seed=1)
+
+
+def bench_topology(Ks=(1, 4, 16, 64)):
+    pool = synthetic_pool()
+    sim = _sim(N, T)
+    for K in Ks:
+        if K == 1:
+            topo = Topology.uniform(1, N, sim.H)
+            handover = 0.0
+        else:
+            topo = Topology.mobility_walk(K, N, T, H=sim.H,
+                                          p_handover=P_HANDOVER, seed=3)
+            a = np.asarray(topo.assoc)
+            handover = float((a[1:] != a[:-1]).mean())
+        kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
+                      chunk=CHUNK, topology=topo)
+        simulate_service(sim, pool, **kwargs)  # warm the jits
+        t0 = time.perf_counter()
+        out = simulate_service(sim, pool, **kwargs)
+        dt = time.perf_counter() - t0
+        emit(f"topology/K={K}/N={N}/T={T}", dt * 1e6 / T,
+             f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+             f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
+             f"devslots_per_s={N * T / dt:.0f};"
+             f"handover_rate={handover:.4f};"
+             f"mu_final={out['mu_final']:.4g}")
+
+
+def run_all():
+    bench_topology()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run_all()

@@ -9,7 +9,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: figs,convergence,controller,kernels,"
-                         "compile_service,fleet_scale")
+                         "compile_service,fleet_scale,topology")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -34,6 +34,9 @@ def main() -> None:
     if only is None or "fleet_scale" in only:
         from benchmarks import bench_fleet_scale
         bench_fleet_scale.run_all()
+    if only is None or "topology" in only:
+        from benchmarks import bench_topology
+        bench_topology.run_all()
     print("benchmarks: done", file=sys.stderr)
 
 

@@ -1,0 +1,68 @@
+"""Multi-cloudlet mobility demo: handovers, per-cloudlet duals, failover.
+
+A 16-device fleet random-walks between K = 4 cloudlets (mobility walk
+with handover probability p); cloudlet 2 goes down mid-run and its
+devices fail over to the survivors.  The run rolls through the service
+tier with the K-vector capacity duals and writes a plot-ready CSV:
+
+    t, mu_0..mu_{K-1}, handovers, offloads, admits
+
+    PYTHONPATH=src python examples/multi_cloudlet.py [out.csv]
+"""
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import simulate
+from repro.serve.compile import compile_service, service_metrics
+from repro.serve.simulator import SimConfig, synthetic_pool
+from repro.topology import Topology
+
+K, N, T = 4, 16, 1200
+P_HANDOVER = 0.03
+
+
+def main(out_csv: str = "multi_cloudlet.csv"):
+    # capacity tight enough that the per-cloudlet duals engage
+    sim = SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
+                    H=N / 8 * 2 * 441e6, seed=5)
+    topo = Topology.mobility_walk(K, N, T, H=sim.H,
+                                  p_handover=P_HANDOVER, seed=5)
+    down = np.zeros(T, bool)
+    down[T // 3:T // 2] = True  # cloudlet 2 outage window
+    topo = topo.failover(jnp.asarray(down), 2)
+
+    pool = synthetic_pool(seed=1)
+    cs = compile_service(sim, pool)
+    series, final = simulate(*cs.simulate_args(), cs.rule,
+                             algo=sim.algo, enforce_slot_capacity=True,
+                             overlay=cs.overlay, topology=topo)
+    metrics = service_metrics(sim, series)
+
+    assoc = np.asarray(topo.assoc)  # (T, N)
+    handovers = np.concatenate([[0], (assoc[1:] != assoc[:-1]).sum(1)])
+    mu_k = np.asarray(series["mu_k"])  # (T, K)
+    rows = np.column_stack([np.arange(T), mu_k, handovers,
+                            np.asarray(series["offloads"]),
+                            np.asarray(series["admits"])])
+    header = ("t," + ",".join(f"mu_{k}" for k in range(K))
+              + ",handovers,offloads,admits")
+    np.savetxt(out_csv, rows, delimiter=",", header=header, comments="",
+               fmt=["%d"] + ["%.6g"] * K + ["%d", "%d", "%d"])
+
+    print(f"== multi-cloudlet mobility (K={K}, N={N}, T={T}) ==")
+    print(f"  accuracy            : {metrics['accuracy']:.4f}")
+    print(f"  offload fraction    : {metrics['offload_frac']:.3f}")
+    print(f"  admit fraction      : {metrics['admit_frac']:.3f}")
+    print(f"  avg power/device    : {metrics['avg_power_per_dev']*1e3:.1f} mW")
+    print(f"  handovers/slot      : {handovers.mean():.2f}")
+    print(f"  final per-cloudlet mu: {np.asarray(final.mu).round(4)}")
+    print("  (during the outage window, cloudlet 2's devices fail over "
+          "and the surviving duals absorb the load)")
+    print(f"  wrote {out_csv} (plot-ready: t, mu_k columns, handovers)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -2,6 +2,7 @@
 
 Layers:
   core/      the paper's online offloading algorithm (OnAlgo), baselines, oracle, theory
+  topology/  multi-cloudlet association maps + per-cloudlet (K,) capacity duals
   models/    cloudlet model zoo (10 assigned architectures, pure JAX)
   kernels/   Pallas TPU kernels (flash attention, decode attention, SSD, onalgo step)
   data/      trace + synthetic dataset pipeline, gain predictor

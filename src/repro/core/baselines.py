@@ -78,3 +78,32 @@ def admit_by_capacity(offload, h_now, H_slot, smallest_first: bool = False):
     else:
         fits = jnp.cumsum(h_eff) <= H_slot
     return offload & fits
+
+
+def admit_by_capacity_topo(offload, h_now, assoc, H_k,
+                           smallest_first: bool = False):
+    """Per-cloudlet slot admission: each cloudlet k admits a greedy
+    prefix (in device order, or cycle-cost order with ``smallest_first``)
+    of ITS OWN offloaders under its capacity H_k.
+
+    assoc: (N,) int32 cloudlet ids (ignored when K == 1 — then this is
+    exactly :func:`admit_by_capacity` under ``H_k[0]``).  The segmented
+    running load is an O(N * K) one-hot cumsum — per-slot state, never
+    horizon-sized.  Returns admitted mask (N,) bool.
+    """
+    K = H_k.shape[0]
+    if K == 1:  # one cloudlet: the scalar rule, bit for bit
+        return admit_by_capacity(offload, h_now, H_k[0], smallest_first)
+    h_eff = jnp.where(offload, h_now, 0.0)
+    if smallest_first:
+        key = jnp.where(offload, h_now, jnp.inf)
+        order = jnp.argsort(key)
+        onehot = jax.nn.one_hot(assoc[order], K, dtype=h_eff.dtype)
+        cum = jnp.cumsum(h_eff[order][:, None] * onehot, axis=0)  # (N, K)
+        fits_sorted = jnp.sum(cum * onehot, axis=1) <= H_k[assoc[order]]
+        fits = jnp.zeros_like(fits_sorted).at[order].set(fits_sorted)
+    else:
+        onehot = jax.nn.one_hot(assoc, K, dtype=h_eff.dtype)
+        cum = jnp.cumsum(h_eff[:, None] * onehot, axis=0)
+        fits = jnp.sum(cum * onehot, axis=1) <= H_k[assoc]
+    return offload & fits

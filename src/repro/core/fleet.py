@@ -24,6 +24,15 @@ from jax.sharding import PartitionSpec as P
 from repro.core import baselines as bl
 from repro.core import onalgo
 from repro.core.onalgo import OnAlgoParams, StepRule
+from repro.topology import Topology, validate_topology
+
+
+def _topo_duals(topology: Optional[Topology]) -> Optional[Topology]:
+    """The topology driving K-vector duals, or None when the scalar path
+    applies (no topology, or K == 1 — one cloudlet's dual IS mu; the
+    association is irrelevant and the rollout is bit-identical to the
+    scalar engines, with per-slot admission under H_k[0])."""
+    return topology if (topology is not None and topology.K > 1) else None
 
 
 @jax.tree_util.register_dataclass
@@ -93,7 +102,8 @@ def simulate(trace: Trace,
              use_kernel: bool = False,
              true_rho: Optional[jax.Array] = None,
              with_true_rho: bool = False,
-             overlay: Optional[RawOverlay] = None):
+             overlay: Optional[RawOverlay] = None,
+             topology: Optional[Topology] = None):
     """Roll a trace through a policy.
 
     Returns (series dict of (T,) arrays, final_state).  Accounting:
@@ -110,6 +120,12 @@ def simulate(trace: Trace,
         observes — and the series gain ``correct``: per-slot count of tasks
         whose final classification (cloudlet if admitted, local otherwise)
         was right.
+      * with ``topology`` (multi-cloudlet tier) the capacity dual is a
+        (K,) vector: each device is priced by its current cloudlet's
+        entry (``assoc``), the dual ascent runs per cloudlet on
+        segment-reduced loads, and per-slot admission applies H_k per
+        cloudlet.  The series gain ``mu_k`` (T, K); ``mu`` becomes the
+        cloudlet mean.  K = 1 is the scalar path bit for bit.
 
     ``algo`` covers OnAlgo, the paper's three baselines, and the service
     tier's two degenerate policies: ``local`` (never offload) and ``cloud``
@@ -119,8 +135,27 @@ def simulate(trace: Trace,
     T, N = trace.j_idx.shape
     M = o_tab.shape[-1]
 
+    validate_topology(topology, T, N)
+    topo_k = _topo_duals(topology)
+    if topo_k is not None:
+        # a time-varying map may cover MORE slots than this rollout
+        # (mobility walks are horizon-extensible); the scan consumes
+        # exactly T rows
+        topo_k = topo_k.prefix(T)
+        if use_kernel:
+            raise ValueError(
+                "use_kernel routes the scalar-mu single-slot kernel and "
+                "does not support topology.K > 1; run with "
+                "use_kernel=False or through the chunked engines")
+        if with_true_rho:
+            raise ValueError(
+                "with_true_rho (the Theorem-1 series) assumes the "
+                "single-cloudlet scalar dual and does not support "
+                "topology.K > 1")
+
     if algo == "onalgo":
-        algo_state = onalgo.init_state(N, M)
+        algo_state = onalgo.init_state(
+            N, M, K=None if topo_k is None else topo_k.K)
     elif algo == "ato":
         algo_state = bl.ATOState(theta=jnp.float32(ato_theta))
     elif algo == "rco":
@@ -131,30 +166,47 @@ def simulate(trace: Trace,
     else:
         raise ValueError(f"unknown algo {algo!r}")
 
-    if overlay is None:
-        xs = (trace.j_idx, trace.d_local)
-    else:
-        xs = (trace.j_idx, trace.d_local, overlay.o, overlay.h, overlay.w,
-              overlay.correct_local, overlay.correct_cloud)
+    xs = {"j": trace.j_idx, "d": trace.d_local}
+    if overlay is not None:
+        xs.update(o=overlay.o, h=overlay.h, w=overlay.w,
+                  cl=overlay.correct_local, cc=overlay.correct_cloud)
+    if topo_k is not None and topo_k.time_varying:
+        xs["assoc"] = topo_k.assoc
 
     def slot(carry, xs):
         state = carry
+        j, d_loc = xs["j"], xs["d"]
         if overlay is None:
-            j, d_loc = xs
             o_now = _lookup(o_tab, j)
             h_now = _lookup(h_tab, j)
             w_now = _lookup(w_tab, j)
         else:
-            j, d_loc, o_now, h_now, w_now, c_loc, c_cloud = xs
+            o_now, h_now, w_now = xs["o"], xs["h"], xs["w"]
+            c_loc, c_cloud = xs["cl"], xs["cc"]
         task = j > 0
+        assoc_now = None
+        if topo_k is not None:
+            assoc_now = (xs["assoc"] if topo_k.time_varying
+                         else topo_k.assoc)
 
+        mu_k = None
         if algo == "onalgo":
-            state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
-                                         tables, params, rule,
-                                         use_kernel=use_kernel)
-            # ||(lambda, mu)|| — the full dual vector norm of Theorem 1.
-            lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
-            mu = state.mu
+            if topo_k is None:
+                state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                             task, tables, params, rule,
+                                             use_kernel=use_kernel)
+                # ||(lambda, mu)|| — the full dual vector norm of Theorem 1.
+                lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+                mu = state.mu
+            else:
+                state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                             task, tables, params, rule,
+                                             assoc=assoc_now,
+                                             H_k=topo_k.H_k)
+                lam_norm = jnp.sqrt(jnp.sum(state.lam**2)
+                                    + jnp.sum(state.mu**2))
+                mu_k = state.mu
+                mu = jnp.mean(mu_k)
         elif algo == "ato":
             state, offload = bl.ato_step(state, d_loc, o_now, task)
             lam_norm = jnp.float32(0.0)
@@ -173,8 +225,14 @@ def simulate(trace: Trace,
             mu = jnp.float32(0.0)
 
         if enforce_slot_capacity:
-            admitted = bl.admit_by_capacity(offload, h_now, params.H,
-                                            smallest_first=(algo == "ocos"))
+            if topology is None:
+                admitted = bl.admit_by_capacity(
+                    offload, h_now, params.H,
+                    smallest_first=(algo == "ocos"))
+            else:
+                admitted = bl.admit_by_capacity_topo(
+                    offload, h_now, assoc_now, topology.H_k,
+                    smallest_first=(algo == "ocos"))
         else:
             admitted = offload
 
@@ -191,6 +249,9 @@ def simulate(trace: Trace,
             "lam_norm": lam_norm,
             "mu": mu,
         }
+        if topology is not None:
+            out["mu_k"] = (mu_k if mu_k is not None
+                           else jnp.full((topology.K,), mu))
         if overlay is not None:
             # final classification: cloudlet result if admitted, local else
             out["correct"] = jnp.sum(
@@ -235,7 +296,9 @@ def simulate(trace: Trace,
 def _series_from_offloads(j_seq, off, tables, params, mu_seq, lnorm,
                           overlay: Optional[RawOverlay],
                           enforce_slot_capacity: bool,
-                          smallest_first: bool = False):
+                          smallest_first: bool = False,
+                          topology: Optional[Topology] = None,
+                          t0: int = 0):
     """Whole-horizon series assembly shared by the offload-matrix engines.
 
     The chunked/tiled kernels and the sharded scan produce the realized
@@ -245,6 +308,11 @@ def _series_from_offloads(j_seq, off, tables, params, mu_seq, lnorm,
     lookups, or the raw overlay streams plus the ``correct`` series for
     the service tier).  Centralizing it here keeps every engine's
     accounting bit-identical.
+
+    ``topology`` switches admission per-cloudlet (H_k under the ``assoc``
+    ids — ``t0`` locates this span inside a time-varying map) and adds
+    the ``mu_k`` series; ``mu_seq`` may then be (T, K) per-cloudlet duals
+    (the scalar ``mu`` series becomes their cloudlet mean).
     """
     o_tab, h_tab, w_tab = tables
     if overlay is None:
@@ -256,9 +324,19 @@ def _series_from_offloads(j_seq, off, tables, params, mu_seq, lnorm,
         o_seq, h_seq, w_seq = overlay.o, overlay.h, overlay.w
     off_f = off.astype(jnp.float32)
     if enforce_slot_capacity:
-        admit = partial(bl.admit_by_capacity, H_slot=params.H,
-                        smallest_first=smallest_first)
-        admitted = jax.vmap(admit)(off, h_seq)
+        if topology is None:
+            admit = partial(bl.admit_by_capacity, H_slot=params.H,
+                            smallest_first=smallest_first)
+            admitted = jax.vmap(admit)(off, h_seq)
+        else:
+            admit = partial(bl.admit_by_capacity_topo, H_k=topology.H_k,
+                            smallest_first=smallest_first)
+            if topology.K == 1:  # assoc is irrelevant with one cloudlet
+                admitted = jax.vmap(lambda o_, h_: admit(o_, h_, None))(
+                    off, h_seq)
+            else:
+                a_seq = topology.assoc_at(t0, off.shape[0])
+                admitted = jax.vmap(admit)(off, h_seq, a_seq)
     else:
         admitted = off
     adm_f = admitted.astype(jnp.float32)
@@ -272,8 +350,15 @@ def _series_from_offloads(j_seq, off, tables, params, mu_seq, lnorm,
         "admits": jnp.sum(adm_f, axis=1),
         "tasks": jnp.sum(task_f, axis=1),
         "lam_norm": lnorm,
-        "mu": mu_seq,
     }
+    if mu_seq.ndim == 2:  # (T, K) per-cloudlet duals
+        series["mu_k"] = mu_seq
+        series["mu"] = jnp.mean(mu_seq, axis=-1)
+    else:
+        series["mu"] = mu_seq
+        if topology is not None:
+            series["mu_k"] = jnp.broadcast_to(
+                mu_seq[:, None], (mu_seq.shape[0], topology.K))
     if overlay is not None:
         series["correct"] = jnp.sum(
             jnp.where(admitted, overlay.correct_cloud,
@@ -299,33 +384,48 @@ def _overlay_slot_values(overlay: RawOverlay, params: OnAlgoParams):
 
 
 def _onalgo_tail(state, j_tail, overlay_tail: Optional[RawOverlay],
-                 tables, params: OnAlgoParams, rule: StepRule):
+                 tables, params: OnAlgoParams, rule: StepRule,
+                 topo_k: Optional[Topology] = None,
+                 assoc_tail: Optional[jax.Array] = None):
     """Finish a sub-chunk tail with the jnp slot step.
 
     Shared by the materialized and streaming chunked engines so the two
-    tails cannot drift.  Returns (state, off (Lt, N) bool, mu_seq (Lt,),
-    lam_norm (Lt,)).
+    tails cannot drift.  ``topo_k`` (a K > 1 topology) switches the step
+    to the K-vector duals; ``assoc_tail`` is its (Lt, N) association
+    slab (None for a static map).  Returns (state, off (Lt, N) bool,
+    mu_seq (Lt,) or (Lt, K), lam_norm (Lt,)).
     """
     o_tab, h_tab, w_tab = tables
 
     def slot(state, xs):
+        j = xs["j"]
         if overlay_tail is None:
-            j = xs
             o_now = _lookup(o_tab, j)
             h_now = _lookup(h_tab, j)
             w_now = _lookup(w_tab, j)
         else:  # raw (unpreconditioned) values; step rescales them
-            j, o_now, h_now, w_now = xs
+            o_now, h_now, w_now = xs["o"], xs["h"], xs["w"]
         task = j > 0
-        state, offload = onalgo.step(state, j, o_now, h_now, w_now,
-                                     task, tables, params, rule)
-        lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+        if topo_k is None:
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                         task, tables, params, rule)
+            lam_norm = jnp.sqrt(jnp.sum(state.lam**2) + state.mu**2)
+        else:
+            assoc_now = (xs["assoc"] if topo_k.time_varying
+                         else topo_k.assoc)
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                         task, tables, params, rule,
+                                         assoc=assoc_now, H_k=topo_k.H_k)
+            lam_norm = jnp.sqrt(jnp.sum(state.lam**2)
+                                + jnp.sum(state.mu**2))
         return state, (offload, state.mu, lam_norm)
 
-    if overlay_tail is None:
-        xs_tail = j_tail
-    else:
-        xs_tail = (j_tail, overlay_tail.o, overlay_tail.h, overlay_tail.w)
+    xs_tail = {"j": j_tail}
+    if overlay_tail is not None:
+        xs_tail.update(o=overlay_tail.o, h=overlay_tail.h,
+                       w=overlay_tail.w)
+    if topo_k is not None and topo_k.time_varying:
+        xs_tail["assoc"] = assoc_tail
     state, (off_t, mu_t, ln_t) = jax.lax.scan(slot, state, xs_tail)
     return state, off_t, mu_t, ln_t
 
@@ -337,7 +437,8 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
                      block_n: Optional[int] = None,
                      algo: str = "onalgo",
                      overlay: Optional[RawOverlay] = None,
-                     enforce_slot_capacity: bool = False):
+                     enforce_slot_capacity: bool = False,
+                     topology: Optional[Topology] = None):
     """OnAlgo rollout through the fused whole-simulation Pallas kernels.
 
     Equivalent to ``simulate(..., algo="onalgo")`` (same series keys, same
@@ -360,6 +461,11 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
       rule as a vmapped post-pass over the offload matrix, so reward / load
       / admits match ``simulate(..., enforce_slot_capacity=True)``.  The
       dual dynamics are untouched (they live on the average constraint).
+    topology: multi-cloudlet tier — the kernels carry the (K,) capacity
+      duals in a VMEM-resident row, price each device by its current
+      cloudlet's entry (assoc columns ride the trace layout), and reduce
+      per-cloudlet loads in-kernel; admission runs per cloudlet.  K = 1
+      takes the scalar kernels bit for bit.
     """
     from repro.kernels import ops as kops
 
@@ -367,12 +473,15 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     T, N = trace.j_idx.shape
     M = o_tab.shape[-1]
     j_seq = trace.j_idx
+    validate_topology(topology, T, N)
+    topo_k = _topo_duals(topology)
 
     if algo in ("local", "cloud"):
         off, mu_seq, lnorm, final = _trivial_policy_rollout(j_seq, algo)
         series = _series_from_offloads(j_seq, off, tables, params, mu_seq,
                                        lnorm, overlay,
-                                       enforce_slot_capacity)
+                                       enforce_slot_capacity,
+                                       topology=topology)
         return series, final
     if algo != "onalgo":
         raise ValueError("the chunked engine rolls OnAlgo (plus the "
@@ -382,22 +491,32 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
                                                         params)
     slot_values = (None if overlay is None
                    else _overlay_slot_values(overlay, params))
+    topo_kw = {}
+    if topo_k is not None:
+        H_k_eff = (topo_k.H_k / params.H if params.precondition
+                   else topo_k.H_k)
+        topo_kw = dict(H_k=H_k_eff)
 
     T_main = (T // chunk) * chunk
     lam = jnp.zeros((N,), jnp.float32)
-    mu = jnp.float32(0.0)
+    mu = (jnp.float32(0.0) if topo_k is None
+          else jnp.zeros((topo_k.K,), jnp.float32))
     counts = jnp.zeros((N, M), jnp.float32)
     if T_main:
         kern = (kops.onalgo_chunked if block_n is None
                 else partial(kops.onalgo_tiled, block_n=block_n))
         sv_main = (None if slot_values is None
                    else tuple(sv[:T_main] for sv in slot_values))
+        if topo_k is not None:  # static maps stay (N,): no (T, N) bcast
+            topo_kw["assoc"] = (topo_k.assoc_at(0, T_main)
+                                if topo_k.time_varying else topo_k.assoc)
         off, mu_seq, lnorm, lam, mu, counts = kern(
             j_seq[:T_main], lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
-            rule.a, rule.beta, chunk=chunk, slot_values=sv_main)
+            rule.a, rule.beta, chunk=chunk, slot_values=sv_main, **topo_kw)
     else:  # whole horizon shorter than one chunk: jnp tail does it all
         off = jnp.zeros((0, N), bool)
-        mu_seq = jnp.zeros((0,), jnp.float32)
+        mu_seq = jnp.zeros((0,) if topo_k is None else (0, topo_k.K),
+                           jnp.float32)
         lnorm = jnp.zeros((0,), jnp.float32)
 
     if T_main < T:  # finish the tail with the jnp slot step
@@ -410,15 +529,20 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
             w=overlay.w[T_main:],
             correct_local=overlay.correct_local[T_main:],
             correct_cloud=overlay.correct_cloud[T_main:])
+        assoc_tail = (topo_k.assoc_at(T_main, T - T_main)
+                      if topo_k is not None and topo_k.time_varying
+                      else None)
         state, off_t, mu_t, ln_t = _onalgo_tail(
-            state, j_seq[T_main:], overlay_tail, tables, params, rule)
+            state, j_seq[T_main:], overlay_tail, tables, params, rule,
+            topo_k=topo_k, assoc_tail=assoc_tail)
         off = jnp.concatenate([off, off_t], axis=0)
         mu_seq = jnp.concatenate([mu_seq, mu_t])
         lnorm = jnp.concatenate([lnorm, ln_t])
         lam, mu, counts = state.lam, state.mu, state.rho.counts
 
     series = _series_from_offloads(j_seq, off, tables, params, mu_seq,
-                                   lnorm, overlay, enforce_slot_capacity)
+                                   lnorm, overlay, enforce_slot_capacity,
+                                   topology=topology)
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
@@ -432,7 +556,8 @@ def _cat_series(parts):
 
 def _stream_trivial(source, T: int, N: int, slab: int, tables,
                     params: OnAlgoParams, algo: str,
-                    enforce_slot_capacity: bool):
+                    enforce_slot_capacity: bool,
+                    topology: Optional[Topology] = None):
     """local / cloud policies over a streamed workload: stateless, so the
     rollout is just per-slab accounting."""
     parts = []
@@ -442,7 +567,8 @@ def _stream_trivial(source, T: int, N: int, slab: int, tables,
         off, mu_seq, lnorm, final = _trivial_policy_rollout(j_slab, algo)
         parts.append(_series_from_offloads(j_slab, off, tables, params,
                                            mu_seq, lnorm, overlay,
-                                           enforce_slot_capacity))
+                                           enforce_slot_capacity,
+                                           topology=topology, t0=t0))
     return _cat_series(parts), final
 
 
@@ -451,7 +577,8 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
                             chunk: int = 16, slab: Optional[int] = None,
                             block_n: Optional[int] = None,
                             algo: str = "onalgo",
-                            enforce_slot_capacity: bool = False):
+                            enforce_slot_capacity: bool = False,
+                            topology: Optional[Topology] = None):
     """The chunked engine over a *streamed* workload: no (T, N) horizon.
 
     ``source(t0, length)`` yields slots [t0, t0 + length) of the
@@ -480,10 +607,12 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
         slab = chunk * 16
     if slab % chunk:
         raise ValueError(f"slab={slab} must be a multiple of chunk={chunk}")
+    validate_topology(topology, T, N)
+    topo_k = _topo_duals(topology)
 
     if algo in ("local", "cloud"):
         return _stream_trivial(source, T, N, slab, tables, params, algo,
-                               enforce_slot_capacity)
+                               enforce_slot_capacity, topology=topology)
     if algo != "onalgo":
         raise ValueError("the chunked streaming engine rolls OnAlgo (plus "
                          "the stateless local/cloud policies); got "
@@ -493,9 +622,13 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
                                                         params)
     kern = (kops.onalgo_chunked if block_n is None
             else partial(kops.onalgo_tiled, block_n=block_n))
+    if topo_k is not None:
+        H_k_eff = (topo_k.H_k / params.H if params.precondition
+                   else topo_k.H_k)
     T_main = (T // chunk) * chunk
     lam = jnp.zeros((N,), jnp.float32)
-    mu = jnp.float32(0.0)
+    mu = (jnp.float32(0.0) if topo_k is None
+          else jnp.zeros((topo_k.K,), jnp.float32))
     counts = jnp.zeros((N, M), jnp.float32)
     parts = []
     for t0 in range(0, T_main, slab):
@@ -503,23 +636,34 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
         j_slab, overlay = source(t0, L)
         sv = (None if overlay is None
               else _overlay_slot_values(overlay, params))
+        topo_kw = ({} if topo_k is None
+                   else dict(assoc=(topo_k.assoc_at(t0, L)
+                                    if topo_k.time_varying
+                                    else topo_k.assoc), H_k=H_k_eff))
         off, mu_seq, lnorm, lam, mu, counts = kern(
             j_slab, lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
             rule.a, rule.beta, chunk=chunk, t0=jnp.int32(t0),
-            slot_values=sv)
+            slot_values=sv, **topo_kw)
         parts.append(_series_from_offloads(j_slab, off, tables, params,
                                            mu_seq, lnorm, overlay,
-                                           enforce_slot_capacity))
+                                           enforce_slot_capacity,
+                                           topology=topology, t0=t0))
     if T_main < T:  # finish the tail with the jnp slot step
         j_tail, overlay_t = source(T_main, T - T_main)
         state = onalgo.OnAlgoState(
             lam=lam, mu=mu,
             rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T_main)))
+        assoc_tail = (topo_k.assoc_at(T_main, T - T_main)
+                      if topo_k is not None and topo_k.time_varying
+                      else None)
         state, off_t, mu_t, ln_t = _onalgo_tail(state, j_tail, overlay_t,
-                                                tables, params, rule)
+                                                tables, params, rule,
+                                                topo_k=topo_k,
+                                                assoc_tail=assoc_tail)
         parts.append(_series_from_offloads(j_tail, off_t, tables, params,
                                            mu_t, ln_t, overlay_t,
-                                           enforce_slot_capacity))
+                                           enforce_slot_capacity,
+                                           topology=topology, t0=T_main))
         lam, mu, counts = state.lam, state.mu, state.rho.counts
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
@@ -531,13 +675,18 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
                      rule: StepRule, mesh, device_axis: str = "data",
                      algo: str = "onalgo",
                      overlay: Optional[RawOverlay] = None,
-                     enforce_slot_capacity: bool = False):
+                     enforce_slot_capacity: bool = False,
+                     topology: Optional[Topology] = None):
     """Distributed OnAlgo over a fleet sharded on a mesh axis.
 
     Devices (the N axis) are split across ``device_axis`` shards; each shard
     runs the device-local threshold rule and lambda updates; the cloudlet
     capacity sum is a psum — one scalar collective per slot, exactly the
-    paper's protocol cost.
+    paper's protocol cost.  With a multi-cloudlet ``topology`` the psum
+    carries the (K,) segment partials instead: each shard segment-reduces
+    its own devices' loads by cloudlet id, so the association may cross
+    shard boundaries freely and the per-slot collective stays one
+    K-vector.
 
     Same ``(series, final_state)`` contract as ``simulate`` /
     ``simulate_chunked``: the sharded scan produces the realized offload
@@ -551,13 +700,18 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
     N = trace.N
     T = trace.T
     M = o_tab.shape[-1]
+    validate_topology(topology, T, N)
+    topo_k = _topo_duals(topology)
+    if topo_k is not None:
+        topo_k = topo_k.prefix(T)  # the sharded scan consumes T rows
 
     if algo in ("local", "cloud"):  # stateless: nothing to distribute
         off, mu_seq, lnorm, final = _trivial_policy_rollout(trace.j_idx,
                                                             algo)
         series = _series_from_offloads(trace.j_idx, off, tables, params,
                                        mu_seq, lnorm, overlay,
-                                       enforce_slot_capacity)
+                                       enforce_slot_capacity,
+                                       topology=topology)
         return series, final
     if algo != "onalgo":
         raise ValueError("the sharded engine rolls OnAlgo (plus the "
@@ -566,16 +720,24 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
     _validate_shards(N, mesh, device_axis)
     run = _make_sharded_run(mesh, device_axis, rule,
                             per_device_tables=o_tab.ndim == 2,
-                            has_overlay=overlay is not None)
+                            has_overlay=overlay is not None,
+                            topo=(None if topo_k is None else
+                                  (topo_k.K, topo_k.time_varying)))
     ov_args = (() if overlay is None
                else (overlay.o, overlay.h, overlay.w))
+    topo_args = (() if topo_k is None
+                 else (topo_k.assoc, topo_k.H_k))
+    mu0 = (jnp.float32(0.0) if topo_k is None
+           else jnp.zeros((topo_k.K,), jnp.float32))
     off, mu_seq, lnorm, lam, mu, counts = run(
         trace.j_idx, o_tab, h_tab, w_tab, params.B, params.H,
-        jnp.zeros((N,), jnp.float32), jnp.float32(0.0),
-        jnp.zeros((N, M), jnp.float32), jnp.int32(0), *ov_args)
+        jnp.zeros((N,), jnp.float32), mu0,
+        jnp.zeros((N, M), jnp.float32), jnp.int32(0), *ov_args,
+        *topo_args)
     series = _series_from_offloads(trace.j_idx, off, tables, params,
                                    mu_seq, lnorm, overlay,
-                                   enforce_slot_capacity)
+                                   enforce_slot_capacity,
+                                   topology=topology)
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
@@ -590,8 +752,51 @@ def _validate_shards(N: int, mesh, device_axis: str):
             f"axis shard count ({n_shards})")
 
 
+def _sharded_slot(o_t, h_t, w_t, p_local, rule, device_axis, *,
+                  has_overlay: bool, topo, assoc=None, H_k=None):
+    """The per-slot body shared by EVERY shard_map'd rollout (one-shot,
+    streaming, and shard-local-generation runs), so the engines'
+    slot dynamics can never drift apart.
+
+    xs is ``(j[, o, h, w][, assoc_t])``; ``topo`` is the static
+    ``(K, time_varying)`` pair (None for scalar mu) with ``assoc`` /
+    ``H_k`` the closed-over shard-local map and capacities.
+    """
+    topo_tv = topo is not None and topo[1]
+
+    def slot(state, xs):
+        j = xs[0]
+        task = j > 0
+        if has_overlay:  # raw (unpreconditioned) values; step rescales
+            o_now, h_now, w_now = xs[1], xs[2], xs[3]
+        else:
+            o_now = _lookup(o_t, j)
+            h_now = _lookup(h_t, j)
+            w_now = _lookup(w_t, j)
+        if topo is None:
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                         task, (o_t, h_t, w_t),
+                                         p_local, rule,
+                                         axis_name=device_axis)
+            lam2 = jax.lax.psum(jnp.sum(state.lam**2), device_axis)
+            lam_norm = jnp.sqrt(lam2 + state.mu**2)
+        else:
+            assoc_t = xs[-1] if topo_tv else assoc
+            state, offload = onalgo.step(state, j, o_now, h_now, w_now,
+                                         task, (o_t, h_t, w_t),
+                                         p_local, rule,
+                                         axis_name=device_axis,
+                                         assoc=assoc_t, H_k=H_k)
+            lam2 = jax.lax.psum(jnp.sum(state.lam**2), device_axis)
+            lam_norm = jnp.sqrt(lam2 + jnp.sum(state.mu**2))
+        return state, (offload, state.mu, lam_norm)
+
+    return slot
+
+
 def _make_sharded_run(mesh, device_axis: str, rule: StepRule, *,
-                      per_device_tables: bool, has_overlay: bool):
+                      per_device_tables: bool, has_overlay: bool,
+                      topo=None):
     """The shard_map'd fleet rollout, resumable from any (state, t0).
 
     Shared by ``simulate_sharded`` (one call, zero state) and
@@ -599,45 +804,111 @@ def _make_sharded_run(mesh, device_axis: str, rule: StepRule, *,
     carried across calls).  lam/counts ride sharded on ``device_axis``;
     mu and the slot counter are replicated scalars; the per-slot load
     psum stays the only cross-shard communication.
+
+    ``topo`` is None or a static ``(K, time_varying)`` pair — the run
+    then takes two extra operands (assoc sharded on the device axis,
+    H_k replicated), mu becomes the replicated (K,) dual vector, and
+    the per-slot collective is the psum of each shard's (K,) segment
+    partials.
     """
     from repro.parallel.compat import shard_map
 
     tab_spec = P(device_axis, None) if per_device_tables else P(None)
     seq_spec = P(None, device_axis)
     ov_specs = (seq_spec,) * 3 if has_overlay else ()
+    _, topo_tv = topo if topo is not None else (None, False)
+    topo_specs = ()
+    if topo is not None:
+        assoc_spec = seq_spec if topo_tv else P(device_axis)
+        topo_specs = (assoc_spec, P())
 
     @partial(shard_map, mesh=mesh,
              in_specs=(seq_spec, tab_spec, tab_spec, tab_spec,
                        P(device_axis), P(), P(device_axis), P(),
-                       P(device_axis, None), P()) + ov_specs,
+                       P(device_axis, None), P()) + ov_specs + topo_specs,
              out_specs=(seq_spec, P(), P(), P(device_axis), P(),
                         P(device_axis, None)),
              check_vma=False)
-    def run(j_idx, o_t, h_t, w_t, B, H, lam0, mu0, counts0, t0, *ov):
+    def run(j_idx, o_t, h_t, w_t, B, H, lam0, mu0, counts0, t0, *rest):
+        assoc = H_k = None
+        if topo is not None:
+            assoc, H_k = rest[-2:]
+            rest = rest[:-2]
+        ov = rest
         state = onalgo.OnAlgoState(
             lam=lam0, mu=mu0,
             rho=onalgo.RhoEstimator(counts=counts0, t=t0))
         p_local = OnAlgoParams(B=B, H=H)
-
-        def slot(state, xs):
-            j = xs[0]
-            task = j > 0
-            if ov:  # raw (unpreconditioned) values; step rescales them
-                o_now, h_now, w_now = xs[1], xs[2], xs[3]
-            else:
-                o_now = _lookup(o_t, j)
-                h_now = _lookup(h_t, j)
-                w_now = _lookup(w_t, j)
-            state, offload = onalgo.step(state, j, o_now, h_now, w_now, task,
-                                         (o_t, h_t, w_t), p_local, rule,
-                                         axis_name=device_axis)
-            lam2 = jax.lax.psum(jnp.sum(state.lam**2), device_axis)
-            lam_norm = jnp.sqrt(lam2 + state.mu**2)
-            return state, (offload, state.mu, lam_norm)
-
-        state, (off, mu_seq, lnorm) = jax.lax.scan(slot, state,
-                                                   (j_idx,) + ov)
+        slot = _sharded_slot(o_t, h_t, w_t, p_local, rule, device_axis,
+                             has_overlay=has_overlay, topo=topo,
+                             assoc=assoc, H_k=H_k)
+        xs = (j_idx,) + ov
+        if topo is not None and topo_tv:
+            xs = xs + (assoc,)
+        state, (off, mu_seq, lnorm) = jax.lax.scan(slot, state, xs)
         return (off, mu_seq, lnorm, state.lam, state.mu, state.rho.counts)
+
+    return run
+
+
+def _make_sharded_stream_run(mesh, device_axis: str, rule: StepRule,
+                             source_cols, L: int, local_N: int, *,
+                             per_device_tables: bool, has_overlay: bool,
+                             topo=None):
+    """A shard_map'd slab rollout that GENERATES its own workload columns.
+
+    Unlike :func:`_make_sharded_run` (which consumes a pre-generated
+    full-width slab), each shard calls ``source_cols(t0, L, n0,
+    local_N)`` with its own column offset ``n0 = axis_index * local_N``
+    — the counter-offset draw primitive makes those columns bit-identical
+    to slicing a full-width slab, so peak workload-generation memory is
+    O(L * N / shards) per shard.  The generated slab (j + overlay
+    streams) is returned gathered so the caller's accounting post-pass
+    stays engine-independent.
+    """
+    from repro.parallel.compat import shard_map
+
+    tab_spec = P(device_axis, None) if per_device_tables else P(None)
+    seq_spec = P(None, device_axis)
+    n_seq_out = 7 if has_overlay else 2  # off + j (+ 5 overlay streams)
+    _, topo_tv = topo if topo is not None else (None, False)
+    topo_specs = ()
+    if topo is not None:
+        assoc_spec = seq_spec if topo_tv else P(device_axis)
+        topo_specs = (assoc_spec, P())
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(tab_spec, tab_spec, tab_spec,
+                       P(device_axis), P(), P(device_axis), P(),
+                       P(device_axis, None), P()) + topo_specs,
+             out_specs=(seq_spec,) * n_seq_out
+                       + (P(), P(), P(device_axis), P(),
+                          P(device_axis, None)),
+             check_vma=False)
+    def run(o_t, h_t, w_t, B, H, lam0, mu0, counts0, t0, *topo_args):
+        n0 = jax.lax.axis_index(device_axis) * local_N
+        j_loc, ov_loc = source_cols(t0, L, n0, local_N)
+        state = onalgo.OnAlgoState(
+            lam=lam0, mu=mu0,
+            rho=onalgo.RhoEstimator(counts=counts0, t=t0))
+        p_local = OnAlgoParams(B=B, H=H)
+        assoc = H_k = None
+        if topo is not None:
+            assoc, H_k = topo_args
+        slot = _sharded_slot(o_t, h_t, w_t, p_local, rule, device_axis,
+                             has_overlay=has_overlay, topo=topo,
+                             assoc=assoc, H_k=H_k)
+        xs = (j_loc,)
+        if has_overlay:
+            xs = xs + (ov_loc.o, ov_loc.h, ov_loc.w)
+        if topo is not None and topo_tv:
+            xs = xs + (assoc,)
+        state, (off, mu_seq, lnorm) = jax.lax.scan(slot, state, xs)
+        ov_out = (() if not has_overlay
+                  else (ov_loc.o, ov_loc.h, ov_loc.w, ov_loc.correct_local,
+                        ov_loc.correct_cloud))
+        return ((off, j_loc) + ov_out
+                + (mu_seq, lnorm, state.lam, state.mu, state.rho.counts))
 
     return run
 
@@ -647,7 +918,9 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
                             device_axis: str = "data", *,
                             slab: Optional[int] = None,
                             algo: str = "onalgo",
-                            enforce_slot_capacity: bool = False):
+                            enforce_slot_capacity: bool = False,
+                            topology: Optional[Topology] = None,
+                            source_cols=None):
     """The sharded engine over a *streamed* workload: no (T, N) horizon.
 
     Same source contract and memory story as
@@ -655,30 +928,78 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
     slots at a time, each slab generated on device from counters,
     rolled through one jitted shard_map scan resuming from the carried
     (state, t0), and folded into the series before the next slab is
-    generated.  Peak memory is O(slab * N) regardless of T.  (The slab
-    itself is generated full-width before sharding: counter addressing
-    is strided in the device axis, so shard-local generation of an
-    N-slice is a follow-up — the transient is still T-independent.)
+    generated.  Peak memory is O(slab * N) regardless of T.
+
+    ``source_cols(t0, length, n0, n_cols)`` — the column-addressed form
+    of the source (e.g. ``StreamingService.slab_cols``) — moves workload
+    generation INSIDE the shard_map: each shard generates only its own
+    device columns (offset by its ``axis_index``), bit-identical to
+    slicing a full-width slab, so peak workload-generation memory drops
+    to O(slab * N / shards) per shard.  ``source`` is still used for the
+    stateless local/cloud policies.
     """
     o_tab, h_tab, w_tab = tables
     M = o_tab.shape[-1]
     _validate_shards(N, mesh, device_axis)
     if slab is None:
         slab = 256
+    validate_topology(topology, T, N)
+    topo_k = _topo_duals(topology)
+    topo_static = (None if topo_k is None
+                   else (topo_k.K, topo_k.time_varying))
 
     if algo in ("local", "cloud"):
         return _stream_trivial(source, T, N, slab, tables, params, algo,
-                               enforce_slot_capacity)
+                               enforce_slot_capacity, topology=topology)
     if algo != "onalgo":
         raise ValueError("the sharded streaming engine rolls OnAlgo (plus "
                          "the stateless local/cloud policies); got "
                          f"{algo!r}")
 
-    run = None
     lam = jnp.zeros((N,), jnp.float32)
-    mu = jnp.float32(0.0)
+    mu = (jnp.float32(0.0) if topo_k is None
+          else jnp.zeros((topo_k.K,), jnp.float32))
     counts = jnp.zeros((N, M), jnp.float32)
     parts = []
+    if source_cols is not None:  # shard-local slab generation
+        local_N = N // mesh.shape[device_axis]
+        L0 = min(slab, T)
+        has_overlay = jax.eval_shape(
+            lambda t0, n0: source_cols(t0, L0, n0, local_N),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))[1] is not None
+        runs = {}  # one compiled run per distinct slab length
+        for t0 in range(0, T, slab):
+            L = min(slab, T - t0)
+            if L not in runs:
+                runs[L] = jax.jit(_make_sharded_stream_run(
+                    mesh, device_axis, rule, source_cols, L, local_N,
+                    per_device_tables=o_tab.ndim == 2,
+                    has_overlay=has_overlay, topo=topo_static))
+            topo_args = (() if topo_k is None
+                         else ((topo_k.assoc_at(t0, L) if
+                                topo_k.time_varying else topo_k.assoc),
+                               topo_k.H_k))
+            out = runs[L](o_tab, h_tab, w_tab, params.B, params.H, lam,
+                          mu, counts, jnp.int32(t0), *topo_args)
+            if has_overlay:
+                (off, j_slab, ov_o, ov_h, ov_w, ov_cl, ov_cc,
+                 mu_seq, lnorm, lam, mu, counts) = out
+                overlay = RawOverlay(o=ov_o, h=ov_h, w=ov_w,
+                                     correct_local=ov_cl,
+                                     correct_cloud=ov_cc)
+            else:
+                off, j_slab, mu_seq, lnorm, lam, mu, counts = out
+                overlay = None
+            parts.append(_series_from_offloads(
+                j_slab, off, tables, params, mu_seq, lnorm, overlay,
+                enforce_slot_capacity, topology=topology, t0=t0))
+        final = onalgo.OnAlgoState(
+            lam=lam, mu=mu,
+            rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+        return _cat_series(parts), final
+
+    run = None
     for t0 in range(0, T, slab):
         L = min(slab, T - t0)
         j_slab, overlay = source(t0, L)
@@ -686,15 +1007,19 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
             run = jax.jit(_make_sharded_run(
                 mesh, device_axis, rule,
                 per_device_tables=o_tab.ndim == 2,
-                has_overlay=overlay is not None))
+                has_overlay=overlay is not None, topo=topo_static))
         ov_args = (() if overlay is None
                    else (overlay.o, overlay.h, overlay.w))
+        topo_args = (() if topo_k is None
+                     else ((topo_k.assoc_at(t0, L) if topo_k.time_varying
+                            else topo_k.assoc), topo_k.H_k))
         off, mu_seq, lnorm, lam, mu, counts = run(
             j_slab, o_tab, h_tab, w_tab, params.B, params.H, lam, mu,
-            counts, jnp.int32(t0), *ov_args)
+            counts, jnp.int32(t0), *ov_args, *topo_args)
         parts.append(_series_from_offloads(j_slab, off, tables, params,
                                            mu_seq, lnorm, overlay,
-                                           enforce_slot_capacity))
+                                           enforce_slot_capacity,
+                                           topology=topology, t0=t0))
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
@@ -709,11 +1034,20 @@ class AutotuneResult:
     block_n: Optional[int]
     seconds: float  # best probe wall-time
     timings: dict  # (chunk, block_n) -> probe seconds
+    topology: Optional[Topology] = None  # the topology the probes ran with
 
     @property
     def kwargs(self) -> dict:
-        """Ready to splat into simulate_chunked / simulate_service."""
-        return {"chunk": self.chunk, "block_n": self.block_n}
+        """Ready to splat into simulate_chunked / simulate_service.
+
+        When the probes ran under a multi-cloudlet topology, it is part
+        of the tuned configuration (K-vector duals change the kernels'
+        working set), so it rides along here.
+        """
+        kw = {"chunk": self.chunk, "block_n": self.block_n}
+        if self.topology is not None:
+            kw["topology"] = self.topology
+        return kw
 
 
 def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
@@ -723,7 +1057,8 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
              chunks=(8, 16, 32), block_ns=(None,),
              probe_slots: int = 128, slab: Optional[int] = None,
              algo: str = "onalgo", enforce_slot_capacity: bool = False,
-             repeats: int = 2) -> AutotuneResult:
+             repeats: int = 2,
+             topology: Optional[Topology] = None) -> AutotuneResult:
     """Pick (chunk, block_n) for the chunked engines by timing probes.
 
     Runs a short rollout (the first ``probe_slots`` slots) for every
@@ -732,6 +1067,12 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
     timing, so compiles don't vote).  Probe either a materialized
     ``trace`` (+ optional ``overlay``) or a streaming ``source`` with
     its ``(T, N)``; candidates with ``chunk > probe_slots`` are skipped.
+
+    ``topology`` makes the probes run with the K-vector duals (the
+    in-kernel association gathers and segment reductions change the
+    working set, so a scalar-tuned (chunk, block_n) may be stale); the
+    result carries it so ``AutotuneResult.kwargs`` stays a complete,
+    valid engine configuration.
     """
     import time
 
@@ -746,13 +1087,15 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             w=overlay.w[:probe_T],
             correct_local=overlay.correct_local[:probe_T],
             correct_cloud=overlay.correct_cloud[:probe_T])
+        p_topo = None if topology is None else topology.prefix(probe_T)
 
         def probe(chunk, block_n):
             return simulate_chunked(p_trace, tables, params, rule,
                                     chunk=chunk, block_n=block_n, algo=algo,
                                     overlay=p_overlay,
                                     enforce_slot_capacity=(
-                                        enforce_slot_capacity))
+                                        enforce_slot_capacity),
+                                    topology=p_topo)
     else:
         if T is None or N is None:
             raise ValueError("autotune(source=...) needs T= and N=")
@@ -762,7 +1105,8 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             return simulate_chunked_stream(
                 source, probe_T, N, tables, params, rule, chunk=chunk,
                 slab=slab, block_n=block_n, algo=algo,
-                enforce_slot_capacity=enforce_slot_capacity)
+                enforce_slot_capacity=enforce_slot_capacity,
+                topology=topology)
 
     timings = {}
     for chunk in chunks:
@@ -782,4 +1126,4 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             f"horizon ({probe_T} slots)")
     (chunk, block_n), seconds = min(timings.items(), key=lambda kv: kv[1])
     return AutotuneResult(chunk=chunk, block_n=block_n, seconds=seconds,
-                          timings=timings)
+                          timings=timings, topology=topology)

@@ -85,14 +85,16 @@ class OnAlgoParams:
 @dataclasses.dataclass
 class OnAlgoState:
     lam: jax.Array  # (N,) power duals  lambda_nt
-    mu: jax.Array  # ()   cloudlet capacity dual mu_t
+    mu: jax.Array  # () cloudlet capacity dual mu_t — or (K,) per-cloudlet
     rho: RhoEstimator  # streaming empirical per-device state distribution
 
 
-def init_state(num_devices: int, M: int) -> OnAlgoState:
+def init_state(num_devices: int, M: int,
+               K: Optional[int] = None) -> OnAlgoState:
+    """Fresh duals: mu is scalar, or (K,) for a K-cloudlet topology."""
     return OnAlgoState(
         lam=jnp.zeros((num_devices,), jnp.float32),
-        mu=jnp.zeros((), jnp.float32),
+        mu=jnp.zeros(() if K is None else (K,), jnp.float32),
         rho=RhoEstimator.create(num_devices, M),
     )
 
@@ -113,13 +115,19 @@ def precondition_tables(o_tab, h_tab, params: OnAlgoParams):
             jnp.ones_like(params.B), jnp.ones_like(params.H))
 
 
-def policy_matrix(lam, mu, o_tab, h_tab, w_tab):
+def policy_matrix(lam, mu, o_tab, h_tab, w_tab, assoc=None):
     """Threshold policy y in {0,1}^(N,M) for EVERY state (eq. 6/7).
 
     Tables broadcast: (M,) shared or (N, M) per-device.  Returned as float32
     so downstream reductions are dtype-stable.
+
+    With a multi-cloudlet topology, ``mu`` is the (K,) dual vector and
+    ``assoc`` (N,) selects each device's *current* cloudlet price.
     """
-    price = lam[:, None] * o_tab + mu * h_tab  # (N, M)
+    if assoc is None:
+        price = lam[:, None] * o_tab + mu * h_tab  # (N, M)
+    else:
+        price = lam[:, None] * o_tab + mu[assoc][:, None] * h_tab
     return (price < w_tab).astype(jnp.float32) * (w_tab > 0)
 
 
@@ -127,9 +135,12 @@ def decide(lam, mu, o_now, h_now, w_now, task_mask):
     """Realized offloading decision for the CURRENT state values (eq. 7).
 
     o_now/h_now/w_now: (N,) current-slot values; task_mask: (N,) bool.
-    A device with w<=0 never offloads (paper footnote 4: if the cloudlet is
-    not expected to improve accuracy, w_nt = 0 and lam*o+mu*h < 0 is
-    impossible since duals are non-negative).
+    ``mu`` is the scalar capacity dual, or an already-gathered (N,)
+    per-device price ``mu_k[assoc]`` under a multi-cloudlet topology
+    (broadcasting covers both).  A device with w<=0 never offloads
+    (paper footnote 4: if the cloudlet is not expected to improve
+    accuracy, w_nt = 0 and lam*o+mu*h < 0 is impossible since duals are
+    non-negative).
     """
     price = lam * o_now + mu * h_now
     return (price < w_now) & (w_now > 0) & task_mask
@@ -152,6 +163,24 @@ def constraint_slacks(y_pol, rho, o_tab, h_tab, params: OnAlgoParams,
     return g_pow, g_cap
 
 
+def capacity_loads(y_pol, rho, h_tab, assoc, K: int,
+                   axis_name: Optional[str] = None):
+    """(K,) per-cloudlet expected loads of the policy under rho.
+
+    Each device's row load (sum over states of h * rho * y) is
+    segment-reduced onto its cloudlet via the (N,) ``assoc`` ids.  With
+    ``axis_name`` set (inside shard_map), the (K,) partials are psum'd
+    across fleet shards — the association may cross shard boundaries
+    freely, and the per-slot collective stays one K-vector.
+    """
+    h_full = jnp.broadcast_to(h_tab, y_pol.shape)
+    rows = jnp.sum(h_full * rho * y_pol, axis=-1)  # (N,)
+    load = jax.ops.segment_sum(rows, assoc, num_segments=K)
+    if axis_name is not None:
+        load = jax.lax.psum(load, axis_name)
+    return load
+
+
 def step(state: OnAlgoState,
          j_idx: jax.Array,
          o_now: jax.Array,
@@ -162,7 +191,9 @@ def step(state: OnAlgoState,
          params: OnAlgoParams,
          rule: StepRule,
          axis_name: Optional[str] = None,
-         use_kernel: bool = False):
+         use_kernel: bool = False,
+         assoc: Optional[jax.Array] = None,
+         H_k: Optional[jax.Array] = None):
     """One OnAlgo slot (Algorithm 1 lines 3-19).
 
     Args:
@@ -177,10 +208,24 @@ def step(state: OnAlgoState,
       axis_name: mesh axis for the distributed-fleet psum.
       use_kernel: route the fused policy+reduction through the Pallas kernel
         (kernels/onalgo_step.py) instead of the jnp path.
+      assoc / H_k: multi-cloudlet topology slot — (N,) int32 current
+        cloudlet ids and (K,) capacities.  ``state.mu`` must then be the
+        (K,) dual vector: each device is priced by its own cloudlet's
+        entry and the capacity ascent runs per cloudlet on the
+        segment-reduced loads.  ``params.H`` stays the preconditioner
+        reference scale (h' = h / params.H, H_k' = H_k / params.H).
 
     Returns:
       (new_state, offload (N,) bool)
     """
+    topo = assoc is not None
+    if topo != (H_k is not None):
+        raise ValueError("assoc and H_k must be passed together")
+    if topo and use_kernel:
+        raise ValueError(
+            "use_kernel (the fused single-slot dual kernel) does not "
+            "support multi-cloudlet duals; run with use_kernel=False or "
+            "through the chunked engines")
     o_tab, h_tab, w_tab = tables
     if params.precondition:
         # Diagonal preconditioner: each constraint row normalized to RHS 1.
@@ -188,6 +233,8 @@ def step(state: OnAlgoState,
                                                          params)
         o_now = o_now / params.B
         h_now = h_now / params.H
+        if topo:
+            H_k = H_k / params.H
         params = OnAlgoParams(B=B_eff, H=H_eff, precondition=False)
 
     # --- line 5-8: observe state, update running distribution (rho includes t)
@@ -196,7 +243,8 @@ def step(state: OnAlgoState,
     t = rho_est.t
 
     # --- line 9-11: realized threshold decision under (lambda_t, mu_t)
-    offload = decide(state.lam, state.mu, o_now, h_now, w_now, task_mask)
+    mu_n = state.mu[assoc] if topo else state.mu
+    offload = decide(state.lam, mu_n, o_now, h_now, w_now, task_mask)
 
     # --- lines 13 & 17: dual subgradient from the full policy (eq. 6)
     if use_kernel:
@@ -206,6 +254,14 @@ def step(state: OnAlgoState,
         if axis_name is not None:
             load = jax.lax.psum(load, axis_name)
         g_cap = load - params.H
+    elif topo:
+        y_pol = policy_matrix(state.lam, state.mu, o_tab, h_tab, w_tab,
+                              assoc=assoc)
+        o_full = jnp.broadcast_to(o_tab, y_pol.shape)
+        g_pow = jnp.sum(o_full * rho * y_pol, axis=-1) - params.B  # (N,)
+        load_k = capacity_loads(y_pol, rho, h_tab, assoc, H_k.shape[0],
+                                axis_name)
+        g_cap = load_k - H_k  # (K,)
     else:
         y_pol = policy_matrix(state.lam, state.mu, o_tab, h_tab, w_tab)
         g_pow, g_cap = constraint_slacks(y_pol, rho, o_tab, h_tab, params,

@@ -120,20 +120,33 @@ def onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B, *,
 # layout as the trace and replace the one-hot table gather in the
 # realized decision (gated on j > 0, since a raw gain w > 0 can coexist
 # with the null state).
+#
+# Multi-cloudlet topology (``assoc`` / ``H_k``): the capacity dual
+# generalizes from a scalar to a (1, K_pad) VMEM-resident row (K padded
+# to the lane multiple with H = 0 cloudlets whose dual provably stays
+# 0).  Association ids ride the trace's (K, N_pad, C) layout; per slot,
+# a device's price is its cloudlet's dual gathered by a one-hot lane
+# mask, and the per-cloudlet load reduction is the same mask applied to
+# the per-device row loads — one (N, K_pad) segment reduction per slot,
+# all in VMEM.  The scalar path is the K = 1 special case and compiles
+# to exactly the pre-topology program.
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_chunked_kernel(*refs, chunk, has_slots):
+def _onalgo_chunked_kernel(*refs, chunk, has_slots, has_topo,
+                           topo_tv=False):
+    refs = list(refs)
+    j_ref = refs.pop(0)
     if has_slots:
-        (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
-         off_ref, museq_ref, lnorm_ref,
-         lam_ref, mu_ref, counts_ref) = refs
-    else:
-        (j_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
-         off_ref, museq_ref, lnorm_ref,
-         lam_ref, mu_ref, counts_ref) = refs
+        svo_ref, svh_ref, svw_ref = (refs.pop(0) for _ in range(3))
+    if has_topo:
+        a_ref = refs.pop(0)
+    o_ref, h_ref, w_ref, b_ref = (refs.pop(0) for _ in range(4))
+    lam0_ref, mu0_ref, counts0_ref = (refs.pop(0) for _ in range(3))
+    if has_topo:
+        hk_ref = refs.pop(0)
+    (scal_ref, t0_ref, off_ref, museq_ref, lnorm_ref,
+     lam_ref, mu_ref, counts_ref) = refs
     k = pl.program_id(0)
     t0 = t0_ref[0, 0]  # global slots already consumed (traced resume)
 
@@ -153,8 +166,16 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots):
     col = jax.lax.broadcasted_iota(jnp.int32, o.shape, 1)
 
     lam = lam_ref[...]  # (N, 1)
-    mu = mu_ref[0, 0]
     counts = counts_ref[...]  # (N, M)
+    if has_topo:
+        mu_row = mu_ref[...]  # (1, K_pad) per-cloudlet duals
+        Hk = hk_ref[...].astype(jnp.float32)  # (1, K_pad)
+        kcol = jax.lax.broadcasted_iota(
+            jnp.int32, (o.shape[0], mu_row.shape[1]), 1)
+        if not topo_tv:  # static map: one (N, K_pad) mask for all slots
+            amask = (kcol == a_ref[...]).astype(jnp.float32)
+    else:
+        mu = mu_ref[0, 0]
 
     for c in range(chunk):
         j_col = j_ref[0, :, c:c + 1]  # (N, 1) int32
@@ -163,6 +184,13 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots):
         t = k * chunk + (c + 1 + t0)
         tf = jnp.maximum(t, 1).astype(jnp.float32)
         rho = counts * (1.0 / tf)
+
+        if has_topo:  # each device priced by its CURRENT cloudlet's dual
+            if topo_tv:
+                amask = (kcol == a_ref[0, :, c:c + 1]).astype(jnp.float32)
+            mu_n = jnp.sum(mu_row * amask, axis=1, keepdims=True)  # (N, 1)
+        else:
+            mu_n = mu
 
         # realized decision under (lam_t, mu_t) — raw slot values when the
         # service overlay provides them, else the one-hot doubles as the
@@ -177,24 +205,35 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots):
             h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
             w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
             task = True  # the null state's w = 0 already blocks offloading
-        price_now = lam * o_now + mu * h_now
+        price_now = lam * o_now + mu_n * h_now
         off = (price_now < w_now) & (w_now > 0) & task
         off_ref[0, :, c:c + 1] = off.astype(jnp.float32)
 
         # dual subgradient from the full policy under rho_t
-        price = lam * o + mu * h
+        price = lam * o + mu_n * h
         y = jnp.where((price < w) & (w > 0), 1.0, 0.0)
         ry = rho * y
         g_pow = jnp.sum(o * ry, axis=1, keepdims=True) - B  # (N, 1)
-        g_cap = jnp.sum(h * ry) - H
         a_t = a / tf**beta
         lam = jnp.maximum(lam + a_t * g_pow, 0.0)
-        mu = jnp.maximum(mu + a_t * g_cap, 0.0)
-        museq_ref[0, c] = mu
-        lnorm_ref[0, c] = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
+        if has_topo:
+            rows = jnp.sum(h * ry, axis=1, keepdims=True)  # (N, 1)
+            load_row = jnp.sum(rows * amask, axis=0)[None, :]  # (1, K_pad)
+            mu_row = jnp.maximum(mu_row + a_t * (load_row - Hk), 0.0)
+            museq_ref[0, c, :] = mu_row[0]
+            lnorm_ref[0, c] = jnp.sqrt(jnp.sum(lam * lam)
+                                       + jnp.sum(mu_row * mu_row))
+        else:
+            g_cap = jnp.sum(h * ry) - H
+            mu = jnp.maximum(mu + a_t * g_cap, 0.0)
+            museq_ref[0, c] = mu
+            lnorm_ref[0, c] = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
 
     lam_ref[...] = lam
-    mu_ref[0, 0] = mu
+    if has_topo:
+        mu_ref[...] = mu_row
+    else:
+        mu_ref[0, 0] = mu
     counts_ref[...] = counts
 
 
@@ -240,9 +279,36 @@ def _pad_slot_values(slot_values, K, chunk, Np):
     return tuple(out)
 
 
+def _pad_topology(assoc, H_k, mu0, K_chunks, chunk, Np):
+    """Pad the topology operands to kernel layout.
+
+    A time-varying assoc (T, N) rides the trace's (K, N_pad, C) layout;
+    a static assoc (N,) stays one (N_pad, 1) column loaded once for the
+    whole rollout (no O(T * N) broadcast).  Padded devices point at
+    cloudlet 0 — their zero value rows contribute exactly 0 to any
+    load.  H_k / mu0 (K,) become (1, K_pad) lane-aligned rows padded
+    with H = 0 cloudlets no device is associated with, whose dual
+    provably stays 0 (load 0, slack 0).  Returns (assoc_arr, hk_row,
+    mu_row, n_k, K_pad).
+    """
+    n_k = H_k.shape[0]
+    K_pad = n_k + (-n_k % 128)
+    hk_row = jnp.pad(H_k.astype(jnp.float32), (0, K_pad - n_k))[None, :]
+    mu_row = jnp.pad(mu0.astype(jnp.float32), (0, K_pad - n_k))[None, :]
+    if assoc.ndim == 1:  # static map: one column, constant block
+        a_arr = jnp.pad(assoc.astype(jnp.int32),
+                        (0, Np - assoc.shape[0]))[:, None]
+    else:
+        T, N = assoc.shape
+        a_p = jnp.pad(assoc.astype(jnp.int32), ((0, 0), (0, Np - N)))
+        a_arr = a_p.reshape(K_chunks, chunk, Np).transpose(0, 2, 1)
+    return a_arr, hk_row, mu_row, n_k, K_pad
+
+
 def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                           B, H, a, beta, *, chunk=8, t0=0,
-                          slot_values=None, interpret=True):
+                          slot_values=None, assoc=None, H_k=None,
+                          interpret=True):
     """Fused T-slot OnAlgo rollout (matches kernels/ref.onalgo_chunked_ref).
 
     j_seq: (T, N) int32 state indices, T a multiple of ``chunk``.
@@ -257,21 +323,28 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
       streams — the service overlay, ALREADY in the dual space — driving
       the realized decision instead of the table gather (rho and the
       dual subgradient stay on the tables).
+    assoc / H_k: optional multi-cloudlet topology — int32 current
+      cloudlet ids ((T, N) time-varying, or (N,) static: one constant
+      column block, no O(T * N) broadcast) and (K,) capacities (dual
+      space).  mu0 must then be the (K,) dual vector; mu outputs gain a
+      trailing K axis.  ``H`` is ignored in this mode (the per-cloudlet
+      RHS is H_k).
 
-    Returns (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
-             lam (N,), mu (), counts (N, M)).
+    Returns (offload (T, N) bool, mu_seq (T,) or (T, K), lam_norm_seq
+             (T,), lam (N,), mu () or (K,), counts (N, M)).
     """
     T, N = j_seq.shape
     if T % chunk != 0:
         raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
+    if (assoc is None) != (H_k is None):
+        raise ValueError("assoc and H_k must be passed together")
     K = T // chunk
     M = counts0.shape[-1]
     j_p, lam_p, counts0, o, h, w, B_p, (Np, Mp) = _pad_fleet(
         j_seq, lam0, counts0, o_tab, h_tab, w_tab, B, n_mult=8)
     j_kc = j_p.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
-    mu_arr = jnp.full((1, 1), mu0, jnp.float32)
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
-                      jnp.float32(H)]).reshape(1, 3)
+                      jnp.float32(H if H_k is None else 0.0)]).reshape(1, 3)
     t0_arr = jnp.asarray(t0, jnp.int32).reshape(1, 1)
 
     has_slots = slot_values is not None
@@ -279,45 +352,74 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                else ())
     sv_specs = [pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0))
                 for _ in sv_args]
+    has_topo = assoc is not None
+    topo_tv = has_topo and assoc.ndim == 2
+    if has_topo:
+        a_arr, hk_row, mu_arr, n_k, Kp = _pad_topology(assoc, H_k, mu0, K,
+                                                       chunk, Np)
+        topo_in = (a_arr,)
+        topo_in_specs = [pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0))
+                         if topo_tv
+                         else pl.BlockSpec((Np, 1), lambda k: (0, 0))]
+        hk_args = (hk_row,)
+        hk_specs = [pl.BlockSpec((1, Kp), lambda k: (0, 0))]
+        mu_spec = pl.BlockSpec((1, Kp), lambda k: (0, 0))
+        museq_spec = pl.BlockSpec((1, chunk, Kp), lambda k: (k, 0, 0))
+        museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
+        mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
+    else:
+        mu_arr = jnp.full((1, 1), mu0, jnp.float32)
+        topo_in, topo_in_specs, hk_args, hk_specs = (), [], (), []
+        mu_spec = pl.BlockSpec((1, 1), lambda k: (0, 0))
+        museq_spec = pl.BlockSpec((1, chunk), lambda k: (k, 0))
+        museq_shape = jax.ShapeDtypeStruct((K, chunk), jnp.float32)
+        mu_shape = jax.ShapeDtypeStruct((1, 1), jnp.float32)
 
     kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk,
-                             has_slots=has_slots)
+                             has_slots=has_slots, has_topo=has_topo,
+                             topo_tv=topo_tv)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K,),
         in_specs=[
             pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
             *sv_specs,
+            *topo_in_specs,
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
             pl.BlockSpec((Np, 1), lambda k: (0, 0)),
             pl.BlockSpec((Np, 1), lambda k: (0, 0)),
-            pl.BlockSpec((1, 1), lambda k: (0, 0)),
+            mu_spec,
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
+            *hk_specs,
             pl.BlockSpec((1, 3), lambda k: (0, 0)),
             pl.BlockSpec((1, 1), lambda k: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
-            pl.BlockSpec((1, chunk), lambda k: (k, 0)),
+            museq_spec,
             pl.BlockSpec((1, chunk), lambda k: (k, 0)),
             pl.BlockSpec((Np, 1), lambda k: (0, 0)),
-            pl.BlockSpec((1, 1), lambda k: (0, 0)),
+            mu_spec,
             pl.BlockSpec((Np, Mp), lambda k: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((K, Np, chunk), jnp.float32),
-            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            museq_shape,
             jax.ShapeDtypeStruct((K, chunk), jnp.float32),
             jax.ShapeDtypeStruct((Np, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            mu_shape,
             jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal, t0_arr)
+    )(j_kc, *sv_args, *topo_in, o, h, w, B_p, lam_p, mu_arr, counts0,
+      *hk_args, scal, t0_arr)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
+    if has_topo:
+        return (offload, mu_seq.reshape(T, Kp)[:, :n_k], lnorm.reshape(T),
+                lam_f[:N, 0], mu_f[0, :n_k], counts_f[:N, :M])
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
             lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])
 
@@ -353,19 +455,20 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 # ---------------------------------------------------------------------------
 
 
-def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots):
+def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
+                         topo_tv=False):
+    refs = list(refs)
+    j_ref = refs.pop(0)
     if has_slots:
-        (j_ref, svo_ref, svh_ref, svw_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
-         off_ref, museq_ref, lnorm_ref,
-         lam_ref, mu_ref, counts_ref,
-         load_acc, lam2_acc) = refs
-    else:
-        (j_ref, o_ref, h_ref, w_ref, b_ref,
-         lam0_ref, mu0_ref, counts0_ref, scal_ref, t0_ref,
-         off_ref, museq_ref, lnorm_ref,
-         lam_ref, mu_ref, counts_ref,
-         load_acc, lam2_acc) = refs
+        svo_ref, svh_ref, svw_ref = (refs.pop(0) for _ in range(3))
+    if has_topo:
+        a_ref = refs.pop(0)
+    o_ref, h_ref, w_ref, b_ref = (refs.pop(0) for _ in range(4))
+    lam0_ref, mu0_ref, counts0_ref = (refs.pop(0) for _ in range(3))
+    if has_topo:
+        hk_ref = refs.pop(0)
+    (scal_ref, t0_ref, off_ref, museq_ref, lnorm_ref,
+     lam_ref, mu_ref, counts_ref, load_acc, lam2_acc) = refs
     k = pl.program_id(0)
     t0 = t0_ref[0, 0]  # global slots already consumed (traced resume)
     c = pl.program_id(1)
@@ -400,7 +503,16 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots):
     rho = counts * (1.0 / tf)
 
     lam = lam_ref[...]  # (bn, 1)
-    mu = mu_ref[0, 0]  # mu_t: written by the previous slot's phase 2
+    if has_topo:  # mu_t row: written by the previous slot's phase 2
+        mu_row = mu_ref[...]  # (1, K_pad)
+        Hk = hk_ref[...].astype(jnp.float32)
+        kcol = jax.lax.broadcasted_iota(
+            jnp.int32, (o.shape[0], mu_row.shape[1]), 1)
+        a_col = a_ref[0] if topo_tv else a_ref[...]  # (bn, 1)
+        amask = (kcol == a_col).astype(jnp.float32)  # (bn, K_pad)
+        mu_n = jnp.sum(mu_row * amask, axis=1, keepdims=True)  # (bn, 1)
+    else:
+        mu_n = mu_ref[0, 0]
 
     if has_slots:  # service overlay: raw values drive the decision
         o_now = svo_ref[0]  # (bn, 1) dual-space raw values
@@ -412,10 +524,10 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots):
         h_now = jnp.sum(h * onehot, axis=1, keepdims=True)
         w_now = jnp.sum(w * onehot, axis=1, keepdims=True)
         task = True  # the null state's w = 0 already blocks offloading
-    off = (lam * o_now + mu * h_now < w_now) & (w_now > 0) & task
+    off = (lam * o_now + mu_n * h_now < w_now) & (w_now > 0) & task
     off_ref[0] = off.astype(jnp.float32)
 
-    price = lam * o + mu * h
+    price = lam * o + mu_n * h
     y = jnp.where((price < w) & (w > 0), 1.0, 0.0)
     ry = rho * y
     g_pow = jnp.sum(o * ry, axis=1, keepdims=True) - B  # (bn, 1)
@@ -423,31 +535,52 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots):
     lam_new = jnp.maximum(lam + a_t * g_pow, 0.0)
     lam_ref[...] = lam_new
 
-    @pl.when(i == 0)
-    def _reset_acc():
-        load_acc[0, 0] = 0.0
-        lam2_acc[0, 0] = 0.0
-    load_acc[0, 0] += jnp.sum(h * ry)
-    lam2_acc[0, 0] += jnp.sum(lam_new * lam_new)
+    if has_topo:
+        @pl.when(i == 0)
+        def _reset_acc():
+            load_acc[...] = jnp.zeros_like(load_acc)
+            lam2_acc[0, 0] = 0.0
+        rows = jnp.sum(h * ry, axis=1, keepdims=True)  # (bn, 1)
+        load_acc[...] += jnp.sum(rows * amask, axis=0)[None, :]
+        lam2_acc[0, 0] += jnp.sum(lam_new * lam_new)
 
-    # --- phase 2: mu reduction, once the last tile's partials are in
-    @pl.when(i == n_tiles - 1)
-    def _mu_reduce():
-        g_cap = load_acc[0, 0] - H
-        mu_new = jnp.maximum(mu + a_t * g_cap, 0.0)
-        mu_ref[0, 0] = mu_new
-        museq_ref[0, 0] = mu_new
-        lnorm_ref[0, 0] = jnp.sqrt(lam2_acc[0, 0] + mu_new * mu_new)
+        # --- phase 2: per-cloudlet mu reduction over the tile partials
+        @pl.when(i == n_tiles - 1)
+        def _mu_reduce_topo():
+            mu_new = jnp.maximum(mu_row + a_t * (load_acc[...] - Hk), 0.0)
+            mu_ref[...] = mu_new
+            museq_ref[0, 0, :] = mu_new[0]
+            lnorm_ref[0, 0] = jnp.sqrt(lam2_acc[0, 0]
+                                       + jnp.sum(mu_new * mu_new))
+    else:
+        @pl.when(i == 0)
+        def _reset_acc():
+            load_acc[0, 0] = 0.0
+            lam2_acc[0, 0] = 0.0
+        load_acc[0, 0] += jnp.sum(h * ry)
+        lam2_acc[0, 0] += jnp.sum(lam_new * lam_new)
+
+        # --- phase 2: mu reduction, once the last tile's partials are in
+        @pl.when(i == n_tiles - 1)
+        def _mu_reduce():
+            g_cap = load_acc[0, 0] - H
+            mu_new = jnp.maximum(mu_n + a_t * g_cap, 0.0)
+            mu_ref[0, 0] = mu_new
+            museq_ref[0, 0] = mu_new
+            lnorm_ref[0, 0] = jnp.sqrt(lam2_acc[0, 0] + mu_new * mu_new)
 
 
 def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                         B, H, a, beta, *, chunk=8, block_n=256, t0=0,
-                        slot_values=None, interpret=True):
+                        slot_values=None, assoc=None, H_k=None,
+                        interpret=True):
     """Device-tiled fused OnAlgo rollout — same contract and results as
     ``onalgo_chunked_pallas`` (and ``kernels/ref.onalgo_chunked_ref``),
-    including the service-overlay ``slot_values`` streams, but VMEM use is
-    O(block_n * M) instead of O(N * M): fleets of any size run chunked
-    without sharding first.
+    including the service-overlay ``slot_values`` streams and the
+    multi-cloudlet ``assoc`` / ``H_k`` topology (the two-phase sync then
+    accumulates a (1, K_pad) row of per-cloudlet tile partials instead
+    of one scalar), but VMEM use is O(block_n * M) instead of O(N * M):
+    fleets of any size run chunked without sharding first.
 
     block_n: devices per tile (multiple of 8); N is padded to it with inert
       zero-value rows.  See the module comment above for the two-phase mu
@@ -458,6 +591,8 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
         raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
     if block_n % 8 != 0:
         raise ValueError(f"block_n={block_n} must be a multiple of 8")
+    if (assoc is None) != (H_k is None):
+        raise ValueError("assoc and H_k must be passed together")
     K = T // chunk
     M = counts0.shape[-1]
     j_p, lam_p, counts0, o, h, w, B_p, (Np, Mp) = _pad_fleet(
@@ -477,9 +612,8 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
             "results (REPRO_KERNEL_INTERPRET=1 forces the validated "
             "interpreter).", stacklevel=2)
     j_kc = j_p.reshape(K, chunk, Np).transpose(0, 2, 1)  # (K, N_pad, C)
-    mu_arr = jnp.full((1, 1), mu0, jnp.float32)
     scal = jnp.stack([jnp.float32(a), jnp.float32(beta),
-                      jnp.float32(H)]).reshape(1, 3)
+                      jnp.float32(H if H_k is None else 0.0)]).reshape(1, 3)
     t0_arr = jnp.asarray(t0, jnp.int32).reshape(1, 1)
 
     has_slots = slot_values is not None
@@ -487,48 +621,81 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                else ())
     sv_specs = [pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c))
                 for _ in sv_args]
+    has_topo = assoc is not None
+    topo_tv = has_topo and assoc.ndim == 2
+    if has_topo:
+        a_arr, hk_row, mu_arr, n_k, Kp = _pad_topology(assoc, H_k, mu0, K,
+                                                       chunk, Np)
+        topo_in = (a_arr,)
+        topo_in_specs = [pl.BlockSpec((1, block_n, 1),
+                                      lambda k, c, i: (k, i, c))
+                         if topo_tv
+                         else pl.BlockSpec((block_n, 1),
+                                           lambda k, c, i: (i, 0))]
+        hk_args = (hk_row,)
+        hk_specs = [pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))]
+        mu_spec = pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))
+        museq_spec = pl.BlockSpec((1, 1, Kp), lambda k, c, i: (k, c, 0))
+        museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
+        mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
+        load_acc_shape = pltpu.VMEM((1, Kp), jnp.float32)
+    else:
+        mu_arr = jnp.full((1, 1), mu0, jnp.float32)
+        topo_in, topo_in_specs, hk_args, hk_specs = (), [], (), []
+        mu_spec = pl.BlockSpec((1, 1), lambda k, c, i: (0, 0))
+        museq_spec = pl.BlockSpec((1, 1), lambda k, c, i: (k, c))
+        museq_shape = jax.ShapeDtypeStruct((K, chunk), jnp.float32)
+        mu_shape = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+        load_acc_shape = pltpu.VMEM((1, 1), jnp.float32)
 
     kern = functools.partial(_onalgo_tiled_kernel, chunk=chunk,
-                             n_tiles=n_tiles, has_slots=has_slots)
+                             n_tiles=n_tiles, has_slots=has_slots,
+                             has_topo=has_topo, topo_tv=topo_tv)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K, chunk, n_tiles),
         in_specs=[
             pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
             *sv_specs,
+            *topo_in_specs,
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
+            mu_spec,
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
+            *hk_specs,
             pl.BlockSpec((1, 3), lambda k, c, i: (0, 0)),
             pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
-            pl.BlockSpec((1, 1), lambda k, c, i: (k, c)),
+            museq_spec,
             pl.BlockSpec((1, 1), lambda k, c, i: (k, c)),
             pl.BlockSpec((block_n, 1), lambda k, c, i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda k, c, i: (0, 0)),
+            mu_spec,
             pl.BlockSpec((block_n, Mp), lambda k, c, i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((K, Np, chunk), jnp.float32),
-            jax.ShapeDtypeStruct((K, chunk), jnp.float32),
+            museq_shape,
             jax.ShapeDtypeStruct((K, chunk), jnp.float32),
             jax.ShapeDtypeStruct((Np, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            mu_shape,
             jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
+            load_acc_shape,
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(j_kc, *sv_args, o, h, w, B_p, lam_p, mu_arr, counts0, scal, t0_arr)
+    )(j_kc, *sv_args, *topo_in, o, h, w, B_p, lam_p, mu_arr, counts0,
+      *hk_args, scal, t0_arr)
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
+    if has_topo:
+        return (offload, mu_seq.reshape(T, Kp)[:, :n_k], lnorm.reshape(T),
+                lam_f[:N, 0], mu_f[0, :n_k], counts_f[:N, :M])
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
             lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])

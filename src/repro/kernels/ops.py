@@ -50,31 +50,35 @@ def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
 
 @partial(jax.jit, static_argnames=("chunk",))
 def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                   a, beta, *, chunk=8, t0=0, slot_values=None):
+                   a, beta, *, chunk=8, t0=0, slot_values=None,
+                   assoc=None, H_k=None):
     """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas).
 
     ``slot_values``: optional (o, h, w) raw (T, N) streams (service
     overlay, dual space) driving the realized decision.  ``t0`` is
     traced: slab launches resuming at different offsets share one
-    compile (the streaming engines)."""
+    compile (the streaming engines).  ``assoc`` / ``H_k``: optional
+    multi-cloudlet topology — (T, N) cloudlet ids + (K,) capacities;
+    mu0 and the mu outputs are then (K,)-vectors."""
     from repro.kernels.onalgo_step import onalgo_chunked_pallas
     return onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                  w_tab, B, H, a, beta, chunk=chunk, t0=t0,
-                                 slot_values=slot_values,
-                                 interpret=interpret_mode())
+                                 slot_values=slot_values, assoc=assoc,
+                                 H_k=H_k, interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("chunk", "block_n"))
 def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                 a, beta, *, chunk=8, block_n=256, t0=0, slot_values=None):
+                 a, beta, *, chunk=8, block_n=256, t0=0, slot_values=None,
+                 assoc=None, H_k=None):
     """Device-tiled fused rollout (see onalgo_step.onalgo_tiled_pallas):
     same results as ``onalgo_chunked`` with O(block_n * M) VMEM."""
     from repro.kernels.onalgo_step import onalgo_tiled_pallas
     return onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                w_tab, B, H, a, beta, chunk=chunk,
                                block_n=block_n, t0=t0,
-                               slot_values=slot_values,
-                               interpret=interpret_mode())
+                               slot_values=slot_values, assoc=assoc,
+                               H_k=H_k, interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))

@@ -27,15 +27,18 @@ def onalgo_duals_ref(lam, mu, rho, o_tab, h_tab, w_tab, B):
 
 
 def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
-                       a, beta, t0=0, slot_values=None):
+                       a, beta, t0=0, slot_values=None, assoc=None,
+                       H_k=None):
     """Slot-sequential oracle for the time-chunked kernel.
 
     Same contract as onalgo_step.onalgo_chunked_pallas: tables already in
     the (preconditioned) dual space, j_seq (T, N); optional ``slot_values``
     (o, h, w) raw (T, N) streams (service overlay, dual space) drive the
-    realized decision in place of the table gather.  Returns
-    (offload (T, N) bool, mu_seq (T,), lam_norm_seq (T,),
-     lam (N,), mu (), counts (N, M)).
+    realized decision in place of the table gather; optional ``assoc``
+    ((N,) static or (T, N)) + ``H_k`` (K,) run the multi-cloudlet
+    K-vector duals (mu0 and the mu outputs are then (K,)).  Returns
+    (offload (T, N) bool, mu_seq (T,) or (T, K), lam_norm_seq (T,),
+     lam (N,), mu () or (K,), counts (N, M)).
     """
     T, N = j_seq.shape
     M = counts0.shape[-1]
@@ -45,6 +48,12 @@ def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
     B = jnp.broadcast_to(B, (N,)).astype(jnp.float32)
     rows = jnp.arange(N)
     has_slots = slot_values is not None
+    has_topo = assoc is not None
+    if has_topo:
+        K = H_k.shape[0]
+        assoc = jnp.asarray(assoc, jnp.int32)
+        H_k = jnp.asarray(H_k, jnp.float32)
+        assoc_tv = assoc.ndim == 2
 
     def slot(carry, x):
         lam, mu, counts, t = carry
@@ -59,22 +68,37 @@ def onalgo_chunked_ref(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
         else:
             o_now, h_now, w_now = o[rows, j], h[rows, j], w[rows, j]
             task = True
-        off = (lam * o_now + mu * h_now < w_now) & (w_now > 0) & task
-        price = lam[:, None] * o + mu * h
+        if has_topo:
+            a_now = x[-1] if assoc_tv else assoc
+            mu_n = mu[a_now]
+        else:
+            mu_n = mu
+        off = (lam * o_now + mu_n * h_now < w_now) & (w_now > 0) & task
+        if has_topo:
+            price = lam[:, None] * o + mu_n[:, None] * h
+        else:
+            price = lam[:, None] * o + mu * h
         y = ((price < w) & (w > 0)).astype(jnp.float32)
         ry = rho * y
         g_pow = jnp.sum(o * ry, axis=-1) - B
-        g_cap = jnp.sum(h * ry) - H
+        if has_topo:
+            loads = jax.ops.segment_sum(jnp.sum(h * ry, axis=-1), a_now,
+                                        num_segments=K)
+            g_cap = loads - H_k
+        else:
+            g_cap = jnp.sum(h * ry) - H
         a_t = a / tf**beta
         lam = jnp.maximum(lam + a_t * g_pow, 0.0)
         mu = jnp.maximum(mu + a_t * g_cap, 0.0)
-        lnorm = jnp.sqrt(jnp.sum(lam * lam) + mu * mu)
+        lnorm = jnp.sqrt(jnp.sum(lam * lam) + jnp.sum(mu * mu))
         return (lam, mu, counts, t), (off, mu, lnorm)
 
     xs = (j_seq.astype(jnp.int32),)
     if has_slots:
         xs = xs + tuple(sv.astype(jnp.float32) for sv in slot_values)
-    init = (lam0.astype(jnp.float32), jnp.float32(mu0),
+    if has_topo and assoc_tv:
+        xs = xs + (assoc,)
+    init = (lam0.astype(jnp.float32), jnp.asarray(mu0, jnp.float32),
             counts0.astype(jnp.float32), jnp.int32(t0))
     (lam, mu, counts, _), (off, mu_seq, lnorm) = jax.lax.scan(
         slot, init, xs)

@@ -69,6 +69,10 @@ def default_scenarios() -> List[Scenario]:
         Scenario("outage", **base).with_extra(n_outages=2, outage_len=200),
         Scenario("churn_outage", **base).with_extra(
             churn_frac=0.3, n_outages=2, outage_len=150),
+        Scenario("mobility", **base).with_extra(K=4, p_handover=0.05),
+        Scenario("hotspot", **base).with_extra(K=4, hot_frac=0.6),
+        Scenario("cloudlet_outage", **base).with_extra(
+            K=4, n_outages=2, outage_len=150),
     ]
 
 
@@ -214,7 +218,7 @@ def _mod_churn(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
                   d_local=jnp.asarray(d, jnp.float32))
     meta = dict(base.meta, arrive=arrive, depart=depart)
     return CompiledScenario(base.scenario, trace, base.tables, base.params,
-                            meta=meta)
+                            meta=meta, topology=base.topology)
 
 
 @register("churn")
@@ -312,7 +316,7 @@ def _mod_diurnal(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
                   d_local=jnp.asarray(d, jnp.float32))
     meta = dict(base.meta, period=period, amp=amp)
     return CompiledScenario(base.scenario, trace, base.tables, base.params,
-                            meta=meta)
+                            meta=meta, topology=base.topology)
 
 
 @register_modifier("flash_crowd")
@@ -355,7 +359,7 @@ def _mod_flash_crowd(sc: Scenario, base: CompiledScenario
                   d_local=jnp.asarray(d, jnp.float32))
     meta = dict(base.meta, event_starts=starts, event_len=event_len)
     return CompiledScenario(base.scenario, trace, base.tables, base.params,
-                            meta=meta)
+                            meta=meta, topology=base.topology)
 
 
 @register_modifier("outage")
@@ -393,7 +397,7 @@ def _mod_outage(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
     meta = dict(base.meta, outage_starts=starts, outage_len=outage_len,
                 down=down)
     return CompiledScenario(base.scenario, trace, (o2, h2, w2), base.params,
-                            meta=meta)
+                            meta=meta, topology=base.topology)
 
 
 @register("outage")
@@ -403,6 +407,131 @@ def _outage(sc: Scenario) -> CompiledScenario:
     trace, _ = iid_trace(space, _trace_spec(sc))
     base = CompiledScenario(sc, trace, space.tables(), sc.params())
     return _mod_outage(sc, base)
+
+
+def _default_topology(base: CompiledScenario, K: int):
+    """The base scenario's topology, or a nearest-zone K-cloudlet default
+    splitting the scenario's total capacity H evenly."""
+    from repro.topology import Topology
+    if base.topology is not None:
+        return base.topology
+    return Topology.nearest_zone(K, base.trace.N, base.params.H)
+
+
+def _require_no_topology(kind: str, base: CompiledScenario):
+    """Topology-BUILDING modifiers must not silently replace an
+    inherited association map (cloudlet_outage, which transforms the
+    existing one, is the composable exception)."""
+    if base.topology is not None:
+        raise ValueError(
+            f"the {kind!r} modifier builds a topology, but the base "
+            "scenario already carries one — apply the topology-defining "
+            "modifier first and layer only topology-transforming "
+            "modifiers (e.g. cloudlet_outage) on top")
+
+
+@register_modifier("mobility")
+def _mod_mobility(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
+    """Attach a mobility-walk topology to an already-compiled scenario.
+
+    K cloudlets split the scenario's capacity evenly; each slot a device
+    hands over to a random cloudlet w.p. ``p_handover`` (the workload
+    layer's counter-addressed held-value process, so the walk composes
+    with any traffic base).  Per-cloudlet duals and admission replace
+    the scalar mu on every engine via ``run_scenario``.
+    """
+    from repro.topology import Topology
+    _require_no_topology("mobility", base)
+    K = int(sc.opt("K", 4))
+    p_handover = float(sc.opt("p_handover", 0.05))
+    T, N = base.trace.j_idx.shape
+    topo = Topology.mobility_walk(K, N, T, H=base.params.H,
+                                  p_handover=p_handover, seed=sc.seed)
+    meta = dict(base.meta, K=K, p_handover=p_handover)
+    return dataclasses.replace(base, topology=topo, meta=meta)
+
+
+@register("mobility")
+def _mobility(sc: Scenario) -> CompiledScenario:
+    """Mobile fleet over IID traffic: devices random-walk between K
+    cloudlets (see ``_mod_mobility``)."""
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    base = CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho)
+    return _mod_mobility(sc, base)
+
+
+@register_modifier("hotspot")
+def _mod_hotspot(sc: Scenario, base: CompiledScenario) -> CompiledScenario:
+    """Attach a hotspot topology: ``hot_frac`` of the fleet crowds one
+    cloudlet (stadium / transit-hub cell) while capacity stays split
+    evenly — the congested cloudlet's dual must rise above the others',
+    which only the per-cloudlet mu vector can express."""
+    from repro.topology import Topology
+    _require_no_topology("hotspot", base)
+    K = int(sc.opt("K", 4))
+    hot_frac = float(sc.opt("hot_frac", 0.6))
+    topo = Topology.hotspot(K, base.trace.N, base.params.H,
+                            hot_frac=hot_frac)
+    meta = dict(base.meta, K=K, hot_frac=hot_frac)
+    return dataclasses.replace(base, topology=topo, meta=meta)
+
+
+@register("hotspot")
+def _hotspot(sc: Scenario) -> CompiledScenario:
+    """Hotspot association skew over IID traffic (see ``_mod_hotspot``)."""
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    base = CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho)
+    return _mod_hotspot(sc, base)
+
+
+@register_modifier("cloudlet_outage")
+def _mod_cloudlet_outage(sc: Scenario,
+                         base: CompiledScenario) -> CompiledScenario:
+    """One cloudlet goes down for outage windows; its devices fail over.
+
+    Unlike the fleet-wide ``outage`` modifier (which zeroes every gain),
+    this is a TOPOLOGY event: during each window, cloudlet ``down_k``'s
+    devices deterministically re-associate to the survivors — whose duals
+    must then absorb the migrated load — and return when it recovers.
+    Requires (or builds) a K >= 2 topology; composes with mobility /
+    hotspot since it acts on the association map.
+    """
+    n_outages = int(sc.opt("n_outages", 2))
+    outage_len = int(sc.opt("outage_len", 200))
+    down_k = int(sc.opt("down_k", 0))
+    K = int(sc.opt("K", 4))
+    topo = _default_topology(base, K)
+    if not 0 <= down_k < topo.K:
+        # topo.K may come from an inherited base topology, not the K knob
+        raise ValueError(
+            f"down_k={down_k} is not a cloudlet of the K={topo.K} "
+            "topology this scenario runs on — the outage would silently "
+            "be a no-op")
+    rng = np.random.default_rng(sc.seed + 7)
+    T = base.trace.j_idx.shape[0]
+    starts = np.sort(rng.integers(0, max(T - outage_len, 1), n_outages))
+    down = np.zeros(T, bool)
+    for s in starts:
+        down[s:s + outage_len] = True
+    topo = topo.failover(jnp.asarray(down), down_k)
+    meta = dict(base.meta, cloudlet_outage_starts=starts,
+                outage_len=outage_len, down_k=down_k, down=down)
+    return dataclasses.replace(base, topology=topo, meta=meta)
+
+
+@register("cloudlet_outage")
+def _cloudlet_outage(sc: Scenario) -> CompiledScenario:
+    """Cloudlet failover windows over IID traffic on a nearest-zone
+    topology (see ``_mod_cloudlet_outage``)."""
+    space = scenario_space(sc)
+    trace, rho = iid_trace(space, _trace_spec(sc))
+    base = CompiledScenario(sc, trace, space.tables(), sc.params(),
+                            true_rho=rho)
+    return _mod_cloudlet_outage(sc, base)
 
 
 @register("churn_outage")

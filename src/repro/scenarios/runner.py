@@ -62,6 +62,7 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
     if isinstance(sc, Scenario):
         sc = compile_scenario(sc)
     rule = rule if rule is not None else StepRule.inv_sqrt(0.5)
+    multi_cloudlet = sc.topology is not None and sc.topology.K > 1
     # scan-only options pin 'auto' to the scan engine on every platform;
     # an EXPLICIT engine='chunked' with these still raises below.
     if engine == "auto" and (algo != "onalgo" or with_true_rho):
@@ -80,7 +81,8 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
         series, final = simulate_chunked(
             sc.trace, sc.tables, sc.params, rule, chunk=chunk,
             block_n=block_n,
-            enforce_slot_capacity=enforce_slot_capacity)
+            enforce_slot_capacity=enforce_slot_capacity,
+            topology=sc.topology)
     else:
         kw = {}
         if with_true_rho:
@@ -88,11 +90,26 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
                 raise ValueError(
                     f"scenario kind {sc.scenario.kind!r} has no analytic "
                     "true_rho; run without with_true_rho")
+            if multi_cloudlet:
+                raise ValueError(
+                    "with_true_rho (the Theorem-1 series) assumes the "
+                    "scalar capacity dual; this scenario carries a "
+                    f"K={sc.topology.K} topology")
             kw = dict(true_rho=sc.true_rho, with_true_rho=True)
+        # the single-slot fused kernel is scalar-mu only; 'auto' falls
+        # back to the jnp slot step for multi-cloudlet scenarios
+        uk = resolve_use_kernel(use_kernel)
+        if multi_cloudlet and uk:
+            if use_kernel != "auto":
+                raise ValueError(
+                    "use_kernel (the fused single-slot dual kernel) does "
+                    "not support multi-cloudlet duals; run "
+                    "use_kernel=False or engine='chunked'")
+            uk = False
         series, final = simulate(sc.trace, sc.tables, sc.params, rule,
                                  algo=algo,
                                  enforce_slot_capacity=enforce_slot_capacity,
-                                 use_kernel=resolve_use_kernel(use_kernel),
+                                 use_kernel=uk, topology=sc.topology,
                                  **kw)
     return series, final, sc
 

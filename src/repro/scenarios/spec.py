@@ -102,7 +102,10 @@ class CompiledScenario:
     trace / tables / params feed ``fleet.simulate`` (and friends) verbatim.
     ``true_rho`` is the analytic stationary distribution when the generator
     knows it (stationary kinds), else None.  ``meta`` carries generator
-    diagnostics (e.g. outage windows) for tests and plots.
+    diagnostics (e.g. outage windows) for tests and plots.  ``topology``
+    (the multi-cloudlet tier) rides alongside the contract: engines take
+    it via their ``topology=`` kwarg (``run_scenario`` threads it), so
+    mobility / hotspot / cloudlet-failover workloads stay declarative.
     """
 
     scenario: Scenario
@@ -111,6 +114,7 @@ class CompiledScenario:
     params: OnAlgoParams
     true_rho: Optional[jax.Array] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    topology: Optional[Any] = None  # repro.topology.Topology
 
     @property
     def M(self) -> int:

@@ -201,6 +201,17 @@ def _service_slab(wl: StreamingWorkload, space, t0, length, o_levels,
                          corr_cloud, v_risk, zeta_pen)
 
 
+@partial(jax.jit, static_argnames=("space", "length", "n_cols"))
+def _service_slab_cols(wl: StreamingWorkload, space, t0, length, n0,
+                       n_cols, o_levels, cycles, phi_hat, sigma, d_local,
+                       corr_local, corr_cloud, v_risk, zeta_pen):
+    """Column-addressed form of ``_service_slab``: only device columns
+    [n0, n0 + n_cols), bit-identical to slicing the full-width slab."""
+    return _lower_values(wl.slab_cols(t0, length, n0, n_cols), space,
+                         None, o_levels, cycles, phi_hat, sigma, d_local,
+                         corr_local, corr_cloud, v_risk, zeta_pen)
+
+
 @dataclasses.dataclass
 class StreamingService:
     """A service run lowered to chunk-addressable (streaming) form.
@@ -230,6 +241,17 @@ class StreamingService:
         """(j_idx (L, N) int32, RawOverlay slab) for [t0, t0 + length)."""
         _, j, o_raw, h_raw, w_raw, c_local, c_cloud, _ = _service_slab(
             self.wl, self.space, t0, length, *self.arrays, *self.knobs)
+        return j, RawOverlay(o=o_raw, h=h_raw, w=w_raw,
+                             correct_local=c_local, correct_cloud=c_cloud)
+
+    def slab_cols(self, t0, length: int, n0, n_cols: int):
+        """Device columns [n0, n0 + n_cols) of ``slab(t0, length)``,
+        bit-identical to slicing it, from O(length * n_cols) work — the
+        ``source_cols`` contract of ``fleet.simulate_sharded_stream``,
+        so each shard generates only its own devices' workload."""
+        _, j, o_raw, h_raw, w_raw, c_local, c_cloud, _ = _service_slab_cols(
+            self.wl, self.space, t0, length, n0, n_cols, *self.arrays,
+            *self.knobs)
         return j, RawOverlay(o=o_raw, h=h_raw, w=w_raw,
                              correct_local=c_local, correct_cloud=c_cloud)
 

@@ -160,7 +160,7 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                      engine: str = "scan", chunk: int = 16,
                      block_n: Optional[int] = None, mesh=None,
                      device_axis: str = "data", materialize: bool = True,
-                     slab: Optional[int] = None) -> dict:
+                     slab: Optional[int] = None, topology=None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
@@ -193,16 +193,26 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays the same workloads as
     the fleet simulator.
+
+    ``topology``: optional multi-cloudlet :class:`~repro.topology.Topology`
+    — the capacity dual becomes a (K,) vector (each device priced by its
+    current cloudlet) and per-slot admission runs per cloudlet under
+    H_k.  ``Topology.uniform(K=1, N, sim.H)`` reproduces the scalar path
+    bit for bit on every engine.  Build it with total capacity ``sim.H``
+    (the builders split it over cloudlets) so the dual preconditioner
+    and the K = 1 path stay consistent.
     """
     from repro.serve.compile import (compile_service,
                                      compile_service_streaming,
                                      service_metrics)
+    from repro.topology import validate_topology
 
     if engine not in ("scan", "chunked", "sharded"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected scan | chunked | sharded")
     if engine == "sharded" and mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), (device_axis,))
+    validate_topology(topology, sim.T, sim.num_devices)
 
     if not materialize:
         if engine == "scan":
@@ -222,29 +232,34 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
             series, _ = simulate_chunked_stream(
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
                 cs.rule, chunk=chunk, slab=slab, block_n=block_n,
-                algo=sim.algo, enforce_slot_capacity=True)
+                algo=sim.algo, enforce_slot_capacity=True,
+                topology=topology)
         else:
             series, _ = simulate_sharded_stream(
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
                 cs.rule, mesh, device_axis=device_axis, slab=slab,
-                algo=sim.algo, enforce_slot_capacity=True)
+                algo=sim.algo, enforce_slot_capacity=True,
+                topology=topology, source_cols=cs.slab_cols)
         return service_metrics(sim, series)
 
     cs = compile_service(sim, pool, on)
     if engine == "scan":
         series, _ = simulate(*cs.simulate_args(), cs.rule,
                              algo=sim.algo, ato_theta=sim.ato_theta,
-                             enforce_slot_capacity=True, overlay=cs.overlay)
+                             enforce_slot_capacity=True, overlay=cs.overlay,
+                             topology=topology)
     elif engine == "chunked":
         from repro.core.fleet import simulate_chunked
         series, _ = simulate_chunked(*cs.simulate_args(), cs.rule,
                                      chunk=chunk, block_n=block_n,
                                      algo=sim.algo, overlay=cs.overlay,
-                                     enforce_slot_capacity=True)
+                                     enforce_slot_capacity=True,
+                                     topology=topology)
     else:
         from repro.core.fleet import simulate_sharded
         series, _ = simulate_sharded(*cs.simulate_args(), cs.rule, mesh,
                                      device_axis=device_axis,
                                      algo=sim.algo, overlay=cs.overlay,
-                                     enforce_slot_capacity=True)
+                                     enforce_slot_capacity=True,
+                                     topology=topology)
     return service_metrics(sim, series)

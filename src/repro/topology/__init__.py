@@ -1,0 +1,17 @@
+"""Multi-cloudlet topology tier (device <-> cloudlet association).
+
+  topology — the declarative :class:`Topology` (static or time-varying
+             association maps, per-cloudlet capacities) plus builders:
+             ``uniform``, ``nearest_zone``, ``hotspot``,
+             ``mobility_walk``, and the ``failover`` transform.
+
+Engines consume a Topology through the ``topology=`` kwarg of
+``fleet.simulate`` / ``simulate_chunked`` / ``simulate_sharded`` (and
+their streaming forms) and of ``serve.simulator.simulate_service``: the
+cloudlet dual mu generalizes to a (K,) vector, each device priced by its
+current cloudlet's entry, with per-cloudlet capacity admission.
+"""
+
+from repro.topology.topology import Topology, validate_topology
+
+__all__ = ["Topology", "validate_topology"]

@@ -1,0 +1,202 @@
+"""Multi-cloudlet topology: device <-> cloudlet association + capacities.
+
+The paper's OnAlgo couples the whole fleet through ONE cloudlet capacity
+constraint — a single scalar dual mu.  Real deployments (see *Improving
+IoT Analytics through Selective Edge Execution*, arXiv:2003.03588, and
+the *Edge Cloud Offloading Algorithms* survey, arXiv:1806.06191) place
+``K`` cloudlets, each with its own capacity ``H_k``, and the device ->
+server association shifts over time (mobility, handover, failover).
+
+A :class:`Topology` is the declarative description of that layer:
+
+  * ``assoc`` — the association map: ``(N,)`` int32 for a static
+    placement, or ``(T, N)`` int32 when devices move between cloudlets;
+    entry ``assoc[t, n] = k`` means device n offloads to cloudlet k at
+    slot t.
+  * ``H_k`` — ``(K,)`` per-cloudlet average capacities.  The capacity
+    constraint (paper eq. 4) becomes K constraints, one per cloudlet,
+    and the scalar dual mu becomes a ``(K,)`` vector: device n is priced
+    by ``mu[assoc[t, n]]`` and the dual ascent aggregates each
+    cloudlet's load with a segment reduction over ``assoc``.
+
+``K == 1`` is exactly the paper's single-cloudlet problem: every engine
+treats it as the scalar-mu path (the association is irrelevant when
+there is one server), so a ``Topology.uniform(K=1, ...)`` run is
+bit-identical to a run without a topology — only the per-cloudlet
+admission capacity comes from ``H_k[0]`` instead of ``params.H``
+(construct them equal, as the service tier does).
+
+The dataclass is a jit-compatible pytree (``K`` is static metadata), so
+engines can close over it or take it as a traced argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _capacities(K: int, H) -> jax.Array:
+    """(K,) capacities from a scalar total (split evenly) or a (K,) array."""
+    H = jnp.asarray(H, jnp.float32)
+    if H.ndim == 0:
+        return jnp.full((K,), H / K, jnp.float32)
+    if H.shape != (K,):
+        raise ValueError(f"H_k shape {H.shape} != ({K},)")
+    return H
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Topology:
+    """K cloudlets serving an N-device fleet.
+
+    assoc: (N,) int32 static, or (T, N) int32 time-varying association
+      (values in [0, K)).
+    H_k: (K,) float32 per-cloudlet average capacity.  Builders accept a
+      scalar total capacity and split it evenly — ``uniform(K=1, N, H)``
+      then has ``H_k = [H]`` exactly, keeping the K=1 path bit-identical
+      to the scalar engines.
+    K: cloudlet count (static: engines specialize their compiled
+      programs — and their K=1 fast path — on it).
+    """
+
+    assoc: jax.Array
+    H_k: jax.Array
+    K: int = dataclasses.field(metadata={"static": True})
+
+    @property
+    def N(self) -> int:
+        return self.assoc.shape[-1]
+
+    @property
+    def time_varying(self) -> bool:
+        return self.assoc.ndim == 2
+
+    @property
+    def T(self):
+        """Horizon of a time-varying association map (None when static)."""
+        return self.assoc.shape[0] if self.time_varying else None
+
+    def assoc_at(self, t0, length: int) -> jax.Array:
+        """(length, N) association slab for slots [t0, t0 + length).
+
+        ``t0`` may be traced (the streaming engines slice a slab per
+        launch); a static association broadcasts.
+        """
+        if not self.time_varying:
+            return jnp.broadcast_to(self.assoc, (length, self.N))
+        return jax.lax.dynamic_slice_in_dim(self.assoc, t0, length, axis=0)
+
+    def prefix(self, T: int) -> "Topology":
+        """The topology restricted to slots [0, T) (autotune probes)."""
+        if not self.time_varying or self.assoc.shape[0] == T:
+            return self
+        return Topology(assoc=self.assoc[:T], H_k=self.H_k, K=self.K)
+
+    # --- builders ---------------------------------------------------------
+
+    @staticmethod
+    def uniform(K: int, N: int, H) -> "Topology":
+        """Static round-robin placement: device n -> cloudlet n % K."""
+        assoc = (jnp.arange(N, dtype=jnp.int32) % K).astype(jnp.int32)
+        return Topology(assoc=assoc, H_k=_capacities(K, H), K=K)
+
+    @staticmethod
+    def nearest_zone(K: int, N: int, H) -> "Topology":
+        """Static contiguous zones: device n -> cloudlet n * K // N (the
+        geographic layout — neighbours share a server)."""
+        assoc = (jnp.arange(N, dtype=jnp.int32) * K // N).astype(jnp.int32)
+        return Topology(assoc=assoc, H_k=_capacities(K, H), K=K)
+
+    @staticmethod
+    def hotspot(K: int, N: int, H, hot_frac: float = 0.5,
+                hot: int = 0) -> "Topology":
+        """Static skewed placement: the first ``hot_frac`` of the fleet
+        crowds cloudlet ``hot`` (a stadium / transit-hub cell); the rest
+        spread round-robin over the remaining cloudlets."""
+        if K < 2:
+            raise ValueError("hotspot needs K >= 2 cloudlets")
+        n = jnp.arange(N, dtype=jnp.int32)
+        n_hot = int(N * hot_frac)
+        others = (hot + 1 + (n % (K - 1))) % K
+        assoc = jnp.where(n < n_hot, jnp.int32(hot), others).astype(jnp.int32)
+        return Topology(assoc=assoc, H_k=_capacities(K, H), K=K)
+
+    @staticmethod
+    def mobility_walk(K: int, N: int, T: int, H, p_handover: float = 0.05,
+                      seed: int = 0) -> "Topology":
+        """Time-varying association from a counter-addressed random walk.
+
+        Each slot, each device hands over to a uniformly random cloudlet
+        with probability ``p_handover`` (it may redraw its current one)
+        and otherwise stays associated — the held-value process of the
+        workload layer's v1 RNG contract, so the walk is reproducible,
+        horizon-extensible, and fully on-device.  Initial placement is
+        the deterministic round-robin of :meth:`uniform`.
+        """
+        from repro.workload import streams
+
+        u = streams.uniform_block(seed, streams.STREAM_TOPOLOGY, T, N, 2)
+        change = u[0] < jnp.float32(p_handover)
+        cand = streams.levels_from_uniform(u[1], K)
+        entry = (jnp.arange(N, dtype=jnp.int32) % K).astype(jnp.int32)
+        assoc = streams.hold_resample_from(change, cand, entry)
+        return Topology(assoc=assoc.astype(jnp.int32),
+                        H_k=_capacities(K, H), K=K)
+
+    def failover(self, down: jax.Array, k_down: int) -> "Topology":
+        """Re-associate cloudlet ``k_down``'s devices while it is down.
+
+        ``down`` is a (T,) bool outage mask; during down slots every
+        device pointing at ``k_down`` deterministically fails over to a
+        surviving cloudlet (spread round-robin), and returns when the
+        cloudlet comes back.  The downed cloudlet's capacity goes unused
+        instead of being violated — the ``cloudlet_outage`` scenario
+        modifier is built on this.
+        """
+        if self.K < 2:
+            raise ValueError("failover needs K >= 2 cloudlets")
+        T = down.shape[0]
+        base = self.assoc_at(0, T)
+        n = jnp.arange(self.N, dtype=jnp.int32)
+        alt = ((k_down + 1 + (n % (self.K - 1))) % self.K).astype(jnp.int32)
+        assoc = jnp.where(down[:, None] & (base == k_down), alt[None, :],
+                          base)
+        return Topology(assoc=assoc.astype(jnp.int32), H_k=self.H_k,
+                        K=self.K)
+
+
+def validate_topology(topology, T: int, N: int) -> None:
+    """Shape-check a topology against a rollout's (T, N) — raised at
+    trace time, so a mismatch is a clear error instead of a shape
+    failure deep inside an engine or kernel.
+
+    Association ids must lie in [0, K) — out-of-range ids would make
+    the engines silently disagree (gathers clamp, segment/one-hot
+    reductions drop).  The id range is checked whenever the map is a
+    concrete array (every non-jitted entry point; inside a jit trace
+    the values are unreadable and the builders guarantee validity).
+    """
+    if topology is None:
+        return
+    if topology.N != N:
+        raise ValueError(
+            f"topology is built for N={topology.N} devices, rollout has "
+            f"N={N}")
+    if topology.time_varying and topology.assoc.shape[0] < T:
+        raise ValueError(
+            f"time-varying association covers {topology.assoc.shape[0]} "
+            f"slots, rollout needs {T}")
+    if topology.H_k.shape != (topology.K,):
+        raise ValueError(
+            f"H_k shape {topology.H_k.shape} != ({topology.K},)")
+    if not isinstance(topology.assoc, jax.core.Tracer):
+        lo = int(jnp.min(topology.assoc))
+        hi = int(jnp.max(topology.assoc))
+        if lo < 0 or hi >= topology.K:
+            raise ValueError(
+                f"association ids must lie in [0, K={topology.K}); map "
+                f"contains [{lo}, {hi}]")

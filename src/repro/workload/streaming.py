@@ -73,6 +73,22 @@ class StreamingWorkload:
     def n_blocks(self) -> int:
         return self.on_entry.shape[0]
 
+    def _finish_slab(self, u, on_in, rate_in, b0, nb: int, off,
+                     length: int) -> ServiceWorkload:
+        """Resume the chains from the block-b0 boundary states over the
+        covering blocks' uniforms ``u``, then cut [off, off + length)."""
+        RB = streams.ROW_BLOCK
+        g_t = (jnp.int32(b0) * RB
+               + jnp.arange(nb * RB, dtype=jnp.int32))  # global slots
+        on = streams.markov_chain(u[0], on_in, self.p_on, self.p_stay)
+        img = streams.levels_from_uniform(u[1], self.pool_size)
+        change = (u[2] < self.p_change) | (g_t == 0)[:, None]
+        rates = streams.hold_resample_from(
+            change, streams.levels_from_uniform(u[3], self.num_rates),
+            rate_in)
+        cut = lambda x: jax.lax.dynamic_slice_in_dim(x, off, length, axis=0)
+        return ServiceWorkload(on=cut(on), img=cut(img), rates=cut(rates))
+
     def slab(self, t0, length: int) -> ServiceWorkload:
         """Slots [t0, t0 + length) of the realized workload.
 
@@ -89,16 +105,33 @@ class StreamingWorkload:
                                              keepdims=False)
         rate_in = jax.lax.dynamic_index_in_dim(self.rate_entry, b0,
                                                keepdims=False)
-        g_t = (jnp.int32(b0) * RB
-               + jnp.arange(nb * RB, dtype=jnp.int32))  # global slots
-        on = streams.markov_chain(u[0], on_in, self.p_on, self.p_stay)
-        img = streams.levels_from_uniform(u[1], self.pool_size)
-        change = (u[2] < self.p_change) | (g_t == 0)[:, None]
-        rates = streams.hold_resample_from(
-            change, streams.levels_from_uniform(u[3], self.num_rates),
-            rate_in)
-        cut = lambda x: jax.lax.dynamic_slice_in_dim(x, off, length, axis=0)
-        return ServiceWorkload(on=cut(on), img=cut(img), rates=cut(rates))
+        return self._finish_slab(u, on_in, rate_in, b0, nb, off, length)
+
+    def slab_cols(self, t0, length: int, n0, n_cols: int) -> ServiceWorkload:
+        """Device columns [n0, n0 + n_cols) of ``slab(t0, length)``.
+
+        Bit-identical to slicing the full-width slab — the counter-offset
+        draw primitive addresses each device by its ABSOLUTE column — but
+        from O(length * n_cols) work and memory, so a fleet shard can
+        generate exactly its own devices' workload
+        (``fleet.simulate_sharded_stream(source_cols=...)``).  ``t0`` and
+        ``n0`` may be traced (e.g. an ``axis_index`` offset inside
+        shard_map); ``length`` / ``n_cols`` are static.
+        """
+        RB = streams.ROW_BLOCK
+        nb = (length - 1) // RB + 2
+        b0 = t0 // RB
+        off = t0 - b0 * RB
+        u = streams.uniform_block_range(self.seed, streams.STREAM_SERVICE,
+                                        b0, nb, self.N, 4, n0=n0,
+                                        n_cols=n_cols)
+        cols = lambda x: jax.lax.dynamic_slice_in_dim(x, n0, n_cols,
+                                                      axis=-1)
+        on_in = cols(jax.lax.dynamic_index_in_dim(self.on_entry, b0,
+                                                  keepdims=False))
+        rate_in = cols(jax.lax.dynamic_index_in_dim(self.rate_entry, b0,
+                                                    keepdims=False))
+        return self._finish_slab(u, on_in, rate_in, b0, nb, off, length)
 
 
 @partial(jax.jit,

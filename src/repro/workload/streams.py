@@ -37,6 +37,7 @@ RNG_COUNTER = 1  # v1: counter-based streams (this module)
 STREAM_SERVICE = 1  # the service workload block (arrival/image/channel)
 STREAM_ARRIVAL_INIT = 2  # initial ON/OFF state uniforms
 STREAM_SCENARIO = 3  # scenario-engine arrival processes
+STREAM_TOPOLOGY = 4  # cloudlet-association processes (mobility walks)
 
 # Slots per block key (a v1 contract constant: changing it changes every
 # stream's realized values, so it would need a new rng_version).
@@ -58,10 +59,32 @@ def _block_keys(seed, sid: int, n_blocks: int, b0=0):
     return fold(stream_key(seed, sid), blocks)
 
 
+def _uniform_from_counts(key, counts):
+    """Bit-exact replica of ``jax.random.uniform(key, shape)`` restricted
+    to the given threefry counters.
+
+    ``jax.random.uniform`` draws 32 random bits per element with counter
+    ``row-major position in shape`` and maps them to [0, 1) by stuffing
+    the top 23 bits into a float32 mantissa with exponent 0 (value in
+    [1, 2)) and subtracting 1.  Reproducing that pipeline on an explicit
+    counter grid lets a shard draw any *sub-rectangle* of a block's
+    uniforms — e.g. its own device columns — with values identical to
+    slicing the full draw (asserted by tests/test_workload.py, which
+    pins this against ``jax.random.uniform`` so a jax-internals change
+    cannot drift silently).
+    """
+    from jax.extend.random import threefry_2x32
+    bits = threefry_2x32(key, counts.reshape(-1))
+    f = jax.lax.bitcast_convert_type(
+        (bits >> 9) | jnp.uint32(0x3F800000), jnp.float32) - 1.0
+    return jnp.maximum(f, 0.0).reshape(counts.shape)
+
+
 def uniform_block_range(seed, sid: int, b0, n_blocks: int, N: int,
-                        channels: int) -> jax.Array:
-    """(channels, n_blocks * ROW_BLOCK, N) U[0, 1) slab covering blocks
-    [b0, b0 + n_blocks) of stream ``sid``.
+                        channels: int, n0=None,
+                        n_cols: int = None) -> jax.Array:
+    """(channels, n_blocks * ROW_BLOCK, n_cols or N) U[0, 1) slab covering
+    blocks [b0, b0 + n_blocks) of stream ``sid``.
 
     Row r of the slab is global slot ``(b0 + r // ROW_BLOCK) * ROW_BLOCK
     + r % ROW_BLOCK``; values are identical to the corresponding rows of
@@ -69,10 +92,29 @@ def uniform_block_range(seed, sid: int, b0, n_blocks: int, N: int,
     counters are offset-independent) — this is what makes per-chunk
     on-device generation bit-equal to a whole-horizon materialization.
     ``b0`` may be traced; ``n_blocks`` must be static.
+
+    With ``n0`` / ``n_cols`` set, only device columns [n0, n0 + n_cols)
+    are generated — addressed by their *absolute* column counter, so the
+    result is bit-identical to slicing the full-width draw, from
+    O(rows * n_cols) work (the shard-local generation primitive of
+    ``simulate_sharded_stream``).  ``n0`` may be traced (e.g. an
+    ``axis_index`` offset inside ``shard_map``); ``n_cols`` is static.
     """
-    draw = jax.vmap(
-        lambda k: jax.random.uniform(k, (ROW_BLOCK, channels, N)))
-    vals = draw(_block_keys(seed, sid, n_blocks, b0))  # (nb, B, C, N)
+    if (n0 is None) != (n_cols is None):
+        raise ValueError("n0 and n_cols must be passed together")
+    keys = _block_keys(seed, sid, n_blocks, b0)
+    if n_cols is None:
+        draw = jax.vmap(
+            lambda k: jax.random.uniform(k, (ROW_BLOCK, channels, N)))
+        vals = draw(keys)  # (nb, B, C, N)
+    else:
+        r = jnp.arange(ROW_BLOCK, dtype=jnp.uint32)[:, None, None]
+        c = jnp.arange(channels, dtype=jnp.uint32)[None, :, None]
+        dn = jnp.arange(n_cols, dtype=jnp.uint32)[None, None, :]
+        counts = ((r * channels + c) * jnp.uint32(N)
+                  + jnp.uint32(n0) + dn)  # absolute column addressing
+        vals = jax.vmap(lambda k: _uniform_from_counts(k, counts))(keys)
+        N = n_cols
     return vals.reshape(n_blocks * ROW_BLOCK, channels, N).transpose(
         1, 0, 2)
 

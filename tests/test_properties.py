@@ -130,6 +130,57 @@ class TestStreamingWorkloadProperties:
                 err_msg=f)
 
 
+class TestTopologyK1Properties:
+    """A K = 1 topology is the scalar mu / enforce_slot_capacity path
+    BIT FOR BIT, across the scan / chunked / sharded engines, for any
+    fleet size and horizon (non-divisible N and T included)."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(N=st.integers(2, 12), T=st.integers(1, 60),
+           chunk=st.sampled_from([4, 8]), block_n=st.sampled_from([None, 8]),
+           seed=st.integers(0, 10_000))
+    def test_k1_bit_identical_across_engines(self, N, T, chunk, block_n,
+                                             seed):
+        import jax
+        from repro.core import OnAlgoParams, StepRule, default_paper_space
+        from repro.core.fleet import (simulate, simulate_chunked,
+                                      simulate_sharded)
+        from repro.data.traces import TraceSpec, iid_trace
+        from repro.topology import Topology
+        space = default_paper_space(num_w=3)
+        trace, _ = iid_trace(space, TraceSpec(T=T, N=N, seed=seed))
+        tables = space.tables()
+        params = OnAlgoParams(B=jnp.full((N,), 0.08, jnp.float32),
+                              H=jnp.float32(N * 1.2e8))
+        rule = StepRule.inv_sqrt(0.5)
+        topo = Topology.uniform(1, N, params.H)
+        mesh = jax.make_mesh((1,), ("data",))
+        engines = {
+            "scan": lambda t: simulate(trace, tables, params, rule,
+                                       enforce_slot_capacity=True,
+                                       topology=t),
+            "chunked": lambda t: simulate_chunked(
+                trace, tables, params, rule, chunk=chunk, block_n=block_n,
+                enforce_slot_capacity=True, topology=t),
+            "sharded": lambda t: simulate_sharded(
+                trace, tables, params, rule, mesh,
+                enforce_slot_capacity=True, topology=t),
+        }
+        for name, run in engines.items():
+            s0, f0 = run(None)
+            s1, f1 = run(topo)
+            for k in s0:
+                np.testing.assert_array_equal(
+                    np.asarray(s0[k]), np.asarray(s1[k]),
+                    err_msg=f"{name}/{k}")
+            np.testing.assert_array_equal(np.asarray(s1["mu_k"][:, 0]),
+                                          np.asarray(s1["mu"]),
+                                          err_msg=name)
+            np.testing.assert_array_equal(np.asarray(f0.lam),
+                                          np.asarray(f1.lam),
+                                          err_msg=name)
+
+
 class TestShardingProperties:
     @settings(max_examples=50, deadline=None)
     @given(dim=st.integers(1, 4096))

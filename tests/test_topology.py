@@ -1,0 +1,536 @@
+"""Multi-cloudlet topology tier: builders, K-vector duals across every
+engine (vs the sequential oracle and vs each other), per-cloudlet
+admission, the scenario kinds, shard-local slab generation, and the
+K = 1 == scalar-path bit-identity contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OnAlgoParams, StepRule, default_paper_space
+from repro.core import baselines as bl
+from repro.core.fleet import (autotune, simulate, simulate_chunked,
+                              simulate_chunked_stream, simulate_sharded)
+from repro.data.traces import TraceSpec, iid_trace
+from repro.kernels import ref
+from repro.kernels.onalgo_step import (onalgo_chunked_pallas,
+                                       onalgo_tiled_pallas)
+from repro.serve.simulator import (SimConfig, simulate_service,
+                                   synthetic_pool)
+from repro.topology import Topology, validate_topology
+
+SERVICE_METRICS = ("accuracy", "offload_frac", "admit_frac",
+                   "avg_power_per_dev", "avg_load", "avg_delay_ms",
+                   "tasks", "mu_final")
+
+
+def _problem(N=10, T=53, seed=5, num_w=3, cap=1.2e8):
+    space = default_paper_space(num_w=num_w)
+    trace, _ = iid_trace(space, TraceSpec(T=T, N=N, seed=seed))
+    params = OnAlgoParams(B=jnp.full((N,), 0.08, jnp.float32),
+                          H=jnp.float32(N * cap))
+    return trace, space.tables(), params, StepRule.inv_sqrt(0.5)
+
+
+class TestBuilders:
+    def test_uniform_and_nearest_zone(self):
+        t = Topology.uniform(4, 10, 8.0)
+        assert t.K == 4 and t.N == 10 and not t.time_varying
+        np.testing.assert_array_equal(np.asarray(t.assoc),
+                                      np.arange(10) % 4)
+        np.testing.assert_allclose(np.asarray(t.H_k), np.full(4, 2.0))
+        z = Topology.nearest_zone(2, 10, 8.0)
+        np.testing.assert_array_equal(np.asarray(z.assoc),
+                                      np.arange(10) * 2 // 10)
+
+    def test_uniform_k1_capacity_exact(self):
+        """H / 1 must be bitwise H — the K = 1 bit-identity hinge."""
+        H = 1.5 * 441e6
+        t = Topology.uniform(1, 6, H)
+        assert float(t.H_k[0]) == np.float32(H)
+
+    def test_hotspot_skew(self):
+        t = Topology.hotspot(4, 20, 8.0, hot_frac=0.5, hot=1)
+        a = np.asarray(t.assoc)
+        assert (a[:10] == 1).all() and (a[10:] != 1).all()
+        with pytest.raises(ValueError, match="K >= 2"):
+            Topology.hotspot(1, 8, 4.0)
+
+    def test_mobility_walk_reproducible_and_extensible(self):
+        t = Topology.mobility_walk(4, 6, 80, H=4.0, p_handover=0.2, seed=9)
+        assert t.time_varying and t.assoc.shape == (80, 6)
+        a = np.asarray(t.assoc)
+        assert ((a >= 0) & (a < 4)).all()
+        assert (a[1:] != a[:-1]).any()  # handovers actually happen
+        t2 = Topology.mobility_walk(4, 6, 80, H=4.0, p_handover=0.2,
+                                    seed=9)
+        np.testing.assert_array_equal(a, np.asarray(t2.assoc))
+        # horizon extension is prefix-stable (counter streams)
+        t3 = Topology.mobility_walk(4, 6, 200, H=4.0, p_handover=0.2,
+                                    seed=9)
+        np.testing.assert_array_equal(a, np.asarray(t3.assoc)[:80])
+        np.testing.assert_array_equal(np.asarray(t3.prefix(80).assoc), a)
+
+    def test_failover_reroutes_down_cloudlet(self):
+        t = Topology.nearest_zone(4, 8, 4.0)
+        down = np.zeros(30, bool)
+        down[10:20] = True
+        f = t.failover(jnp.asarray(down), 2)
+        a = np.asarray(f.assoc)
+        base = np.asarray(t.assoc)
+        assert not (a[10:20] == 2).any()
+        np.testing.assert_array_equal(a[:10], np.broadcast_to(base, (10, 8)))
+        np.testing.assert_array_equal(a[20:], np.broadcast_to(base, (10, 8)))
+
+    def test_validate_topology_errors(self):
+        t = Topology.uniform(2, 8, 4.0)
+        with pytest.raises(ValueError, match="N=8"):
+            validate_topology(t, 10, 6)
+        tv = Topology.mobility_walk(2, 8, 20, H=4.0)
+        with pytest.raises(ValueError, match="covers 20"):
+            validate_topology(tv, 50, 8)
+        bad = Topology(assoc=jnp.full((8,), 2, jnp.int32),
+                       H_k=jnp.ones((2,)), K=2)
+        with pytest.raises(ValueError, match=r"\[0, K=2\)"):
+            validate_topology(bad, 10, 8)
+
+    def test_longer_assoc_map_runs_on_every_engine(self):
+        """A mobility walk covering MORE slots than the rollout (maps
+        are horizon-extensible) must run on the scan and sharded
+        engines too, matching the exactly-sized map."""
+        trace, tables, params, rule = _problem(N=8, T=40)
+        long = Topology.mobility_walk(4, 8, 100, H=params.H,
+                                      p_handover=0.1, seed=3)
+        exact = long.prefix(40)
+        mesh = jax.make_mesh((1,), ("data",))
+        for run in (
+            lambda t: simulate(trace, tables, params, rule, topology=t,
+                               enforce_slot_capacity=True),
+            lambda t: simulate_sharded(trace, tables, params, rule, mesh,
+                                       topology=t,
+                                       enforce_slot_capacity=True),
+        ):
+            s_long, _ = run(long)
+            s_exact, _ = run(exact)
+            for k in s_exact:
+                np.testing.assert_array_equal(np.asarray(s_long[k]),
+                                              np.asarray(s_exact[k]),
+                                              err_msg=k)
+
+    def test_uniform_block_range_rejects_half_column_spec(self):
+        from repro.workload import streams
+        with pytest.raises(ValueError, match="together"):
+            streams.uniform_block_range(0, 1, 0, 1, 8, 2, n0=4)
+
+    def test_assoc_at_slices_and_broadcasts(self):
+        tv = Topology.mobility_walk(3, 5, 40, H=3.0, seed=2)
+        np.testing.assert_array_equal(np.asarray(tv.assoc_at(7, 12)),
+                                      np.asarray(tv.assoc)[7:19])
+        st = Topology.uniform(3, 5, 3.0)
+        np.testing.assert_array_equal(
+            np.asarray(st.assoc_at(7, 12)),
+            np.broadcast_to(np.asarray(st.assoc), (12, 5)))
+
+
+class TestTopoKernels:
+    """The K-generalized chunked/tiled kernels vs the sequential oracle."""
+
+    @pytest.mark.parametrize("N,M,T,chunk,block_n,K", [
+        (20, 16, 64, 8, None, 4),    # time-chunked kernel
+        (20, 16, 64, 8, 8, 4),       # device-tiled, 3 tiles
+        (24, 37, 96, 16, 8, 16),     # M lane padding, K = 16
+        (8, 16, 64, 8, 8, 3),        # single tile (phase 2 == phase 1)
+        (50, 23, 40, 8, 16, 130),    # K needs >1 lane block
+    ])
+    def test_kernels_match_oracle(self, N, M, T, chunk, block_n, K):
+        ks = jax.random.split(jax.random.PRNGKey(N + M + K), 6)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (M,))
+        h = jax.random.uniform(ks[2], (M,))
+        w = jax.random.uniform(ks[3], (M,)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        lam0 = jax.random.uniform(ks[5], (N,)) * 0.1
+        topo = Topology.mobility_walk(K, N, T, H=jnp.float32(N * 0.1),
+                                      p_handover=0.1, seed=K)
+        args = (j, lam0, jnp.zeros((K,)), jnp.zeros((N, M)), o, h, w, B,
+                jnp.float32(0.0), 0.4, 0.5)
+        kern = (onalgo_chunked_pallas if block_n is None
+                else lambda *a, **kw: onalgo_tiled_pallas(
+                    *a, block_n=block_n, **kw))
+        out_k = kern(*args, chunk=chunk, assoc=topo.assoc, H_k=topo.H_k,
+                     interpret=True)
+        out_r = ref.onalgo_chunked_ref(*args, assoc=topo.assoc,
+                                       H_k=topo.H_k)
+        np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                      np.asarray(out_r[0]))
+        assert out_k[1].shape == (T, K)
+        for i in (1, 2, 3, 4):
+            np.testing.assert_allclose(np.asarray(out_k[i]),
+                                       np.asarray(out_r[i]), rtol=1e-5,
+                                       atol=1e-6, err_msg=str(i))
+        np.testing.assert_array_equal(np.asarray(out_k[5]),
+                                      np.asarray(out_r[5]))
+
+    def test_kernel_static_assoc_and_slot_values(self):
+        """Static association (broadcast to columns) + service overlay
+        slot-value streams compose with the K-vector duals."""
+        N, M, T, chunk, K = 16, 9, 32, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(3), 9)
+        j = jax.random.randint(ks[0], (T, N), 0, M)
+        o = jax.random.uniform(ks[1], (M,))
+        h = jax.random.uniform(ks[2], (M,))
+        w = jax.random.uniform(ks[3], (M,)) - 0.2
+        B = jax.random.uniform(ks[4], (N,)) + 0.05
+        sv = (jax.random.uniform(ks[6], (T, N)),
+              jax.random.uniform(ks[7], (T, N)),
+              jax.random.uniform(ks[8], (T, N)) - 0.1)
+        topo = Topology.hotspot(K, N, jnp.float32(N * 0.1), hot_frac=0.5)
+        args = (j, jnp.zeros((N,)), jnp.zeros((K,)), jnp.zeros((N, M)),
+                o, h, w, B, jnp.float32(0.0), 0.4, 0.5)
+        out_r = ref.onalgo_chunked_ref(*args, slot_values=sv,
+                                       assoc=topo.assoc, H_k=topo.H_k)
+        for kern in (onalgo_chunked_pallas,
+                     lambda *a, **kw: onalgo_tiled_pallas(*a, block_n=8,
+                                                          **kw)):
+            # both assoc forms: (N,) static column and (T, N) broadcast
+            for a_in in (topo.assoc, topo.assoc_at(0, T)):
+                out_k = kern(*args, chunk=chunk, slot_values=sv,
+                             assoc=a_in, H_k=topo.H_k, interpret=True)
+                np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                              np.asarray(out_r[0]))
+                np.testing.assert_allclose(np.asarray(out_k[1]),
+                                           np.asarray(out_r[1]),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_kernel_rejects_half_topology(self):
+        with pytest.raises(ValueError, match="together"):
+            onalgo_chunked_pallas(
+                jnp.zeros((16, 4), jnp.int32), jnp.zeros(4),
+                jnp.float32(0), jnp.zeros((4, 8)), jnp.ones(8),
+                jnp.ones(8), jnp.ones(8), jnp.ones(4), jnp.float32(1),
+                0.5, 0.5, chunk=8, assoc=jnp.zeros((16, 4), jnp.int32))
+
+
+class TestEnginesAgree:
+    """scan / chunked / tiled / sharded / streaming on one K = 4 problem."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        trace, tables, params, rule = _problem(N=10, T=53)
+        topo = Topology.mobility_walk(4, 10, 53, H=params.H,
+                                      p_handover=0.1, seed=1)
+        return trace, tables, params, rule, topo
+
+    def test_cross_engine_parity(self, setup):
+        trace, tables, params, rule, topo = setup
+        s_ref, f_ref = simulate(trace, tables, params, rule, topology=topo,
+                                enforce_slot_capacity=True)
+        mesh = jax.make_mesh((1,), ("data",))
+        runs = {
+            "chunked": simulate_chunked(trace, tables, params, rule,
+                                        chunk=8, topology=topo,
+                                        enforce_slot_capacity=True),
+            "tiled": simulate_chunked(trace, tables, params, rule,
+                                      chunk=8, block_n=8, topology=topo,
+                                      enforce_slot_capacity=True),
+            "sharded": simulate_sharded(trace, tables, params, rule, mesh,
+                                        topology=topo,
+                                        enforce_slot_capacity=True),
+        }
+        assert s_ref["mu_k"].shape == (53, 4)
+        for name, (s, f) in runs.items():
+            for k in s_ref:
+                np.testing.assert_allclose(
+                    np.asarray(s_ref[k]), np.asarray(s[k]), rtol=2e-5,
+                    atol=1e-5, err_msg=f"{name}/{k}")
+            np.testing.assert_allclose(np.asarray(f_ref.mu),
+                                       np.asarray(f.mu), rtol=1e-4,
+                                       atol=1e-6, err_msg=name)
+
+    def test_streaming_equals_materialized(self, setup):
+        """Per-slab kernel resume with assoc columns: bit-identical to
+        the one-shot chunked rollout, non-divisible T included."""
+        trace, tables, params, rule, topo = setup
+
+        def source(t0, L):
+            return jax.lax.dynamic_slice_in_dim(trace.j_idx, t0, L), None
+
+        s_mat, f_mat = simulate_chunked(trace, tables, params, rule,
+                                        chunk=8, topology=topo,
+                                        enforce_slot_capacity=True)
+        s_str, f_str = simulate_chunked_stream(
+            source, 53, 10, tables, params, rule, chunk=8, slab=16,
+            topology=topo, enforce_slot_capacity=True)
+        for k in s_mat:
+            np.testing.assert_array_equal(np.asarray(s_mat[k]),
+                                          np.asarray(s_str[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(f_mat.mu),
+                                      np.asarray(f_str.mu))
+
+
+class TestPerCloudletAdmission:
+    def test_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        N, K = 40, 5
+        for smallest_first in (False, True):
+            for trial in range(5):
+                off = rng.random(N) < 0.7
+                h = rng.uniform(0.1, 1.0, N)
+                assoc = rng.integers(0, K, N)
+                H_k = rng.uniform(0.5, 2.0, K)
+                got = np.asarray(bl.admit_by_capacity_topo(
+                    jnp.asarray(off), jnp.asarray(h, jnp.float32),
+                    jnp.asarray(assoc, jnp.int32),
+                    jnp.asarray(H_k, jnp.float32),
+                    smallest_first=smallest_first))
+                # brute force: the cumsum-prefix rule per cloudlet (a
+                # task that does not fit still counts against the prefix)
+                want = np.zeros(N, bool)
+                order = (np.argsort(np.where(off, h, np.inf),
+                                    kind="stable")
+                         if smallest_first else np.arange(N))
+                used = np.zeros(K)
+                for n in order:
+                    hn = h[n] if off[n] else 0.0
+                    used[assoc[n]] += hn
+                    if off[n] and used[assoc[n]] <= H_k[assoc[n]]:
+                        want[n] = True
+                np.testing.assert_array_equal(got, want,
+                                              err_msg=str((smallest_first,
+                                                           trial)))
+
+    def test_k1_is_scalar_rule(self):
+        rng = np.random.default_rng(1)
+        off = jnp.asarray(rng.random(16) < 0.6)
+        h = jnp.asarray(rng.uniform(0.1, 1.0, 16), jnp.float32)
+        H = jnp.float32(2.5)
+        got = bl.admit_by_capacity_topo(off, h, None, H[None])
+        want = bl.admit_by_capacity(off, h, H)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestServiceTopology:
+    @pytest.fixture(scope="class")
+    def pool(self):
+        return synthetic_pool()
+
+    def _engines(self, sim, pool, topo):
+        return {
+            "scan": simulate_service(sim, pool, engine="scan",
+                                     topology=topo),
+            "chunked": simulate_service(sim, pool, engine="chunked",
+                                        chunk=8, topology=topo),
+            "tiled": simulate_service(sim, pool, engine="chunked",
+                                      chunk=8, block_n=8, topology=topo),
+            "sharded": simulate_service(sim, pool, engine="sharded",
+                                        topology=topo),
+            "chunked-stream": simulate_service(
+                sim, pool, engine="chunked", chunk=8, materialize=False,
+                slab=64, topology=topo),
+            "sharded-stream": simulate_service(
+                sim, pool, engine="sharded", materialize=False, slab=80,
+                topology=topo),
+        }
+
+    def test_k1_bit_identical_to_scalar_path(self, pool):
+        """Topology.uniform(K=1) reproduces the scalar path's metrics
+        EXACTLY on every engine, materialized and streaming."""
+        sim = SimConfig(num_devices=6, T=203, algo="onalgo", B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
+        ref_m = simulate_service(sim, pool, engine="scan")
+        topo = Topology.uniform(1, 6, sim.H)
+        for eng, out in self._engines(sim, pool, topo).items():
+            for k in SERVICE_METRICS:
+                assert out[k] == ref_m[k], (eng, k)
+
+    def test_k4_engines_agree(self, pool):
+        sim = SimConfig(num_devices=8, T=203, algo="onalgo", B_n=0.06,
+                        H=6 * 441e6, seed=4)
+        topo = Topology.mobility_walk(4, 8, 203, H=sim.H,
+                                      p_handover=0.05, seed=2)
+        outs = self._engines(sim, pool, topo)
+        ref_m = outs.pop("scan")
+        assert ref_m["admit_frac"] > 0  # capacity split still admits
+        for eng, out in outs.items():
+            for k in SERVICE_METRICS:
+                assert out[k] == pytest.approx(ref_m[k], rel=2e-5,
+                                               abs=1e-5), (eng, k)
+
+    def test_baseline_algos_use_per_cloudlet_admission(self, pool):
+        """Non-dual policies (local / cloud / ato) run under a topology
+        too — admission capacity comes from H_k."""
+        sim = SimConfig(num_devices=8, T=120, algo="cloud", seed=3,
+                        H=4 * 441e6)
+        topo = Topology.hotspot(4, 8, sim.H, hot_frac=0.5)
+        out = simulate_service(sim, pool, engine="scan", topology=topo)
+        flat = simulate_service(sim, pool, engine="scan")
+        # the hotspot concentrates load on one cloudlet with 1/4 the
+        # capacity, so per-cloudlet admission must admit less
+        assert out["admit_frac"] < flat["admit_frac"]
+
+    def test_topology_shape_mismatch_rejected(self, pool):
+        sim = SimConfig(num_devices=6, T=64, seed=0)
+        with pytest.raises(ValueError, match="N=4"):
+            simulate_service(sim, pool,
+                             topology=Topology.uniform(2, 4, sim.H))
+
+    def test_use_kernel_with_topology_rejected(self):
+        trace, tables, params, rule = _problem(N=6, T=24)
+        topo = Topology.uniform(2, 6, params.H)
+        with pytest.raises(ValueError, match="use_kernel"):
+            simulate(trace, tables, params, rule, topology=topo,
+                     use_kernel=True)
+
+    def test_true_rho_with_topology_rejected(self):
+        trace, tables, params, rule = _problem(N=6, T=24)
+        topo = Topology.uniform(2, 6, params.H)
+        with pytest.raises(ValueError, match="with_true_rho"):
+            simulate(trace, tables, params, rule, topology=topo,
+                     with_true_rho=True,
+                     true_rho=jnp.zeros((6, tables[0].shape[0])))
+
+    def test_autotune_carries_topology(self):
+        """autotune(topology=...) probes the K-vector kernels and its
+        kwargs splat back into the engine as a complete config."""
+        trace, tables, params, rule = _problem(N=8, T=48)
+        topo = Topology.uniform(4, 8, params.H)
+        tune = autotune(tables, params, rule, trace=trace,
+                        chunks=(8, 16), block_ns=(None, 8),
+                        probe_slots=32, repeats=1, topology=topo)
+        assert tune.topology is topo
+        assert tune.kwargs["topology"] is topo
+        s_ref, _ = simulate(trace, tables, params, rule, topology=topo)
+        s_tuned, _ = simulate_chunked(trace, tables, params, rule,
+                                      **tune.kwargs)
+        np.testing.assert_allclose(np.asarray(s_ref["mu_k"]),
+                                   np.asarray(s_tuned["mu_k"]),
+                                   rtol=2e-5, atol=1e-6)
+
+
+class TestTopologyScenarios:
+    def test_kinds_compile_and_run(self):
+        from repro.scenarios import Scenario, compile_scenario, run_scenario
+        for kind in ("mobility", "hotspot", "cloudlet_outage"):
+            c = compile_scenario(Scenario(kind, T=96, N=8, seed=3)
+                                 .with_extra(K=4))
+            assert c.topology is not None and c.topology.K == 4
+            s, f, _ = run_scenario(c, engine="scan",
+                                   enforce_slot_capacity=True)
+            s2, _, _ = run_scenario(c, engine="chunked", chunk=8,
+                                    enforce_slot_capacity=True)
+            assert s["mu_k"].shape == (96, 4)
+            for k in s:
+                np.testing.assert_allclose(
+                    np.asarray(s[k]), np.asarray(s2[k]), rtol=2e-5,
+                    atol=1e-5, err_msg=f"{kind}/{k}")
+
+    def test_cloudlet_outage_reroutes(self):
+        from repro.scenarios import Scenario, compile_scenario
+        c = compile_scenario(
+            Scenario("cloudlet_outage", T=120, N=8, seed=1).with_extra(
+                K=4, n_outages=1, outage_len=40, down_k=2))
+        down = c.meta["down"]
+        a = np.asarray(c.topology.assoc)
+        assert down.any()
+        assert not (a[down] == 2).any()
+        assert (a[~down] == 2).any()
+
+    def test_modifiers_compose_and_preserve_topology(self):
+        from repro.scenarios import Scenario, compose
+        base = Scenario("mobility", T=96, N=8, seed=2).with_extra(K=4)
+        layered = compose(base, Scenario("churn", T=96, N=8, seed=2)
+                          .with_extra(churn_frac=0.3))
+        assert layered.topology is not None  # churn keeps the topology
+        assert layered.topology.time_varying
+
+    def test_topology_building_modifiers_refuse_to_stack(self):
+        """mobility/hotspot BUILD a topology — layering one over an
+        existing map must raise, not silently replace it (only
+        transforming modifiers like cloudlet_outage inherit)."""
+        from repro.scenarios import Scenario, compose
+        base = Scenario("mobility", T=64, N=8, seed=2).with_extra(K=4)
+        with pytest.raises(ValueError, match="already carries"):
+            compose(base, Scenario("hotspot", T=64, N=8).with_extra(K=4))
+
+    def test_catalog_metro_mobility(self):
+        from repro.scenarios import compile_named
+        c = compile_named("metro_mobility")
+        assert c.topology is not None and c.topology.K == 4
+        assert c.topology.time_varying
+        # the failover window really empties cloudlet 2
+        down = c.meta["down"]
+        assert not (np.asarray(c.topology.assoc)[down] == 2).any()
+
+
+class TestShardLocalGeneration:
+    def test_workload_slab_cols_bit_identical(self):
+        from repro.workload import lower_service_workload
+        wl = lower_service_workload(7, 300, 12, 32, 3)
+        for t0, L, n0, nc in ((0, 64, 0, 12), (37, 100, 3, 5),
+                              (250, 50, 8, 4), (63, 2, 11, 1)):
+            full = wl.slab(t0, L)
+            cols = wl.slab_cols(t0, L, n0, nc)
+            for f in ("on", "img", "rates"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(cols, f)),
+                    np.asarray(getattr(full, f))[:, n0:n0 + nc],
+                    err_msg=f"{f}@{(t0, L, n0, nc)}")
+
+    def test_service_slab_cols_bit_identical(self):
+        from repro.serve.compile import compile_service_streaming
+        pool = synthetic_pool(seed=2)
+        sim = SimConfig(num_devices=8, T=200, seed=11)
+        cs = compile_service_streaming(sim, pool)
+        j_full, ov_full = cs.slab(40, 64)
+        j_cols, ov_cols = cs.slab_cols(40, 64, 2, 4)
+        np.testing.assert_array_equal(np.asarray(j_cols),
+                                      np.asarray(j_full)[:, 2:6])
+        for f in ("o", "h", "w", "correct_local", "correct_cloud"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ov_cols, f)),
+                np.asarray(getattr(ov_full, f))[:, 2:6], err_msg=f)
+
+    @pytest.mark.parametrize("algo", ["onalgo"])
+    def test_sharded_stream_shard_local_equals_scan(self, algo):
+        """simulate_service(engine='sharded', materialize=False) now
+        generates shard-local columns (source_cols) — metrics must stay
+        identical to the materialized scan reference."""
+        pool = synthetic_pool()
+        sim = SimConfig(num_devices=6, T=203, algo=algo, B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
+        ref_m = simulate_service(sim, pool, engine="scan")
+        out = simulate_service(sim, pool, engine="sharded",
+                               materialize=False, slab=80)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref_m[k], rel=2e-5,
+                                           abs=1e-5), k
+
+
+@pytest.mark.slow
+class TestFig5Acceptance:
+    def test_k1_fig5_bit_identical_all_engines(self):
+        """Acceptance: simulate_service(topology=Topology.uniform(K=1))
+        is bit-identical to the scalar path on the fig5 config for all
+        engines, materialized and streaming."""
+        pool = synthetic_pool()
+        sim = SimConfig()  # fig5 defaults: N=4, T=2000
+        topo = Topology.uniform(1, sim.num_devices, sim.H)
+        ref_m = simulate_service(sim, pool, engine="scan")
+        runs = {
+            "scan": simulate_service(sim, pool, engine="scan",
+                                     topology=topo),
+            "chunked": simulate_service(sim, pool, engine="chunked",
+                                        topology=topo),
+            "sharded": simulate_service(sim, pool, engine="sharded",
+                                        topology=topo),
+            "chunked-stream": simulate_service(
+                sim, pool, engine="chunked", materialize=False,
+                topology=topo),
+            "sharded-stream": simulate_service(
+                sim, pool, engine="sharded", materialize=False,
+                topology=topo),
+        }
+        for eng, out in runs.items():
+            for k in SERVICE_METRICS:
+                assert out[k] == ref_m[k], (eng, k)

@@ -42,6 +42,26 @@ class TestStreams:
             r = np.corrcoef(u[0].ravel(), u[c].ravel())[0, 1]
             assert abs(r) < 0.1
 
+    def test_column_range_bit_identical_to_full_width(self):
+        """The counter-offset column draw (shard-local generation) must
+        reproduce EXACTLY the corresponding columns of the full-width
+        draw — this also pins our threefry/bit-stuffing replica of
+        ``jax.random.uniform`` against jax-internals drift."""
+        full = np.asarray(streams.uniform_block_range(3, 1, 2, 3, 11, 4))
+        for n0, nc in ((0, 11), (0, 3), (4, 5), (10, 1)):
+            cols = np.asarray(streams.uniform_block_range(
+                3, 1, 2, 3, 11, 4, n0=n0, n_cols=nc))
+            np.testing.assert_array_equal(cols, full[:, :, n0:n0 + nc],
+                                          err_msg=str((n0, nc)))
+
+    def test_column_range_traced_offset(self):
+        """n0 may be traced (an axis_index inside shard_map)."""
+        full = np.asarray(streams.uniform_block_range(7, 2, 0, 2, 9, 2))
+        f = jax.jit(lambda n0: streams.uniform_block_range(
+            7, 2, 0, 2, 9, 2, n0=n0, n_cols=3))
+        np.testing.assert_array_equal(np.asarray(f(jnp.int32(4))),
+                                      full[:, :, 4:7])
+
     def test_levels_from_uniform_covers_range(self):
         u = streams.uniforms(0, 1, 400, 8)
         lv = np.asarray(streams.levels_from_uniform(u, 5))
