@@ -27,6 +27,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import PeakTracker, emit
+from benchmarks.trajectory import make_row
 from repro.core import fleet
 from repro.serve.compile import compile_service_streaming
 from repro.serve.simulator import SimConfig, simulate_service, synthetic_pool
@@ -59,31 +60,51 @@ def _materialized_bytes(N: int, T: int) -> int:
     return T * N * 4 * 7
 
 
+def _run_streaming(N: int, pool):
+    """One streaming-engine config: autotuned, warmed, timed, peak-
+    tracked — shared by the CSV bench and the trajectory rows."""
+    T = _horizon(N)
+    sim = _sim(N, T)
+    cs = compile_service_streaming(sim, pool)
+    tune = fleet.autotune(cs.tables, cs.params, cs.rule,
+                          source=cs.slab, T=T, N=N, chunks=(8, 16),
+                          probe_slots=32, slab=SLAB, repeats=1)
+    kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
+                  chunk=tune.chunk, block_n=tune.block_n)
+    with PeakTracker() as peak:
+        simulate_service(sim, pool, **kwargs)  # warm the jits
+        t0 = time.perf_counter()
+        out = simulate_service(sim, pool, **kwargs)
+        dt = time.perf_counter() - t0
+    return sim, out, dt, peak.peak_bytes, tune
+
+
+def trajectory_rows(pr: int, Ns=(10_000,)) -> list:
+    """Fast-config rows for the committed BENCH_fleet_scale.json
+    trajectory (p99_ms is null: the batch engine has no per-wave
+    latency — devslots/sec is the gate metric)."""
+    pool = synthetic_pool()
+    rows = []
+    for N in Ns:
+        sim, out, dt, peak_bytes, tune = _run_streaming(N, pool)
+        rows.append(make_row(
+            pr, "fleet_scale", f"N{N}", N * sim.T / dt, None, peak_bytes,
+            chunk=tune.chunk, accuracy=round(out["accuracy"], 4),
+            slots=sim.T))
+    return rows
+
+
 def bench_fleet_scale(Ns=(10_000, 100_000, 300_000)):
     pool = synthetic_pool()
     for N in Ns:
-        T = _horizon(N)
-        sim = _sim(N, T)
-
-        # autotune (chunk, block_n) on a short streaming probe
-        cs = compile_service_streaming(sim, pool)
-        tune = fleet.autotune(cs.tables, cs.params, cs.rule,
-                              source=cs.slab, T=T, N=N, chunks=(8, 16),
-                              probe_slots=32, slab=SLAB, repeats=1)
-
-        kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
-                      chunk=tune.chunk, block_n=tune.block_n)
-        with PeakTracker() as peak:
-            simulate_service(sim, pool, **kwargs)  # warm the jits
-            t0 = time.perf_counter()
-            out = simulate_service(sim, pool, **kwargs)
-            dt = time.perf_counter() - t0
+        sim, out, dt, peak_bytes, tune = _run_streaming(N, pool)
+        T = sim.T
         mat_bytes = _materialized_bytes(N, T)
         emit(f"fleet_scale/N={N}/T={T}/streaming", dt * 1e6 / T,
              f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
              f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
              f"devslots_per_s={N * T / dt:.0f};"
-             f"peak_mb={peak.peak_bytes / 1e6:.0f};"
+             f"peak_mb={peak_bytes / 1e6:.0f};"
              f"materialized_mb={mat_bytes / 1e6:.0f};"
              f"materialized_fig5_mb={_materialized_bytes(N, 2500) / 1e6:.0f};"
              f"chunk={tune.chunk};block_n={tune.block_n}")

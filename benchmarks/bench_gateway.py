@@ -1,0 +1,121 @@
+"""Live serving gateway benchmark: sustained decisions/sec + latency.
+
+Drives the closed-loop load generator (one wave per workload slot,
+counter-addressed arrivals) through :class:`~repro.serve.gateway.LiveGateway`
+and measures what a deployment cares about:
+
+  * sustained decision throughput — decisions/sec over the reports the
+    fleet actually filed, and devslots/sec (N * slots / wall, the gate
+    metric every engine shares);
+  * wave latency p50 / p99 (arrival -> decisions materialized), after a
+    warm-up phase so per-bucket compiles don't pollute the percentiles;
+  * peak device bytes (``PeakTracker``) — the gateway's working set is
+    O(N * M) persistent state + one bucket-padded wave, never a horizon.
+
+Fast configs (CI + the committed trajectory): N in {1024, 16384}.
+``BENCH_GATEWAY_FULL=1`` adds the fleet-scale points up to N = 10^6
+with horizons scaled down like bench_fleet_scale.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import PeakTracker, emit
+from benchmarks.trajectory import make_row
+from repro.serve.compile import compile_service_streaming
+from repro.serve.gateway import GatewayCore, run_closed_loop
+from repro.serve.simulator import SimConfig, synthetic_pool
+from repro.workload.loadgen import ServiceLoadGen
+
+SLAB = 64
+FAST_NS = (1024, 16384)
+FULL_NS = (131072, 1048576)
+WARM_SLOTS = 24  # covers every bucket the arrival process touches
+
+
+def _horizon(N: int) -> int:
+    """Measurement slots after warm-up: a few hundred at CI sizes,
+    shrinking with N so the 10^6-device point stays minutes-sized."""
+    return int(min(192, max(2 * SLAB, (1 << 22) // N)))
+
+
+def _sim(N: int, T: int) -> SimConfig:
+    # same fleet economics as bench_fleet_scale: fig5 per-device budget,
+    # cloudlet capacity scaled with the fleet
+    return SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
+                     H=N / 4 * 2 * 441e6, seed=1)
+
+
+def run_gateway(N: int, pool=None) -> dict:
+    """One config: warm the buckets, then serve a timed closed loop."""
+    T = WARM_SLOTS + _horizon(N)
+    sim = _sim(N, T)
+    pool = pool if pool is not None else synthetic_pool()
+    ss = compile_service_streaming(sim, pool)
+    core = GatewayCore.for_service(ss)
+    lg = ServiceLoadGen(ss, slab=SLAB)
+
+    # warm-up phase: compiles + first estimates (separate stats)
+    run_closed_loop(core, lg, 0, WARM_SLOTS, slo_ms=120_000.0)
+
+    slots = T - WARM_SLOTS
+    with PeakTracker() as peak:
+        t0 = time.perf_counter()
+        replies, stats = run_closed_loop(core, lg, WARM_SLOTS, slots,
+                                         slo_ms=120_000.0)
+        dt = time.perf_counter() - t0
+    assert stats.fallback_waves == 0 and stats.shed_chunks == 0, (
+        "bench ran into its own SLO — raise slo_ms")
+    return {
+        "N": N,
+        "slots": slots,
+        "wall_s": dt,
+        "decisions": stats.reports,
+        "decisions_per_sec": stats.reports / dt,
+        "devslots_per_sec": N * slots / dt,
+        "p50_ms": stats.percentile(50.0),
+        "p99_ms": stats.percentile(99.0),
+        "peak_bytes": peak.peak_bytes,
+        "compiles": core.stats.compiles,
+    }
+
+
+def trajectory_rows(pr: int) -> list:
+    """Fast-config rows for the committed BENCH_gateway.json trajectory."""
+    pool = synthetic_pool()
+    rows = []
+    for N in FAST_NS:
+        r = run_gateway(N, pool)
+        rows.append(make_row(
+            pr, "gateway", f"N{N}", r["devslots_per_sec"], r["p99_ms"],
+            r["peak_bytes"], decisions_per_sec=r["decisions_per_sec"],
+            p50_ms=r["p50_ms"], slots=r["slots"]))
+    return rows
+
+
+def bench_gateway(Ns=None):
+    pool = synthetic_pool()
+    if Ns is None:
+        Ns = FAST_NS + (FULL_NS if os.environ.get("BENCH_GATEWAY_FULL")
+                        else ())
+    for N in Ns:
+        r = run_gateway(N, pool)
+        emit(f"gateway/N={N}/slots={r['slots']}/closed_loop",
+             r["wall_s"] * 1e6 / r["slots"],
+             f"decisions_per_s={r['decisions_per_sec']:.0f};"
+             f"devslots_per_s={r['devslots_per_sec']:.0f};"
+             f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+             f"peak_mb={r['peak_bytes'] / 1e6:.0f};"
+             f"compiles={r['compiles']}")
+
+
+def run_all():
+    bench_gateway()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run_all()

@@ -9,7 +9,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: figs,convergence,controller,kernels,"
-                         "compile_service,fleet_scale,topology")
+                         "compile_service,fleet_scale,topology,gateway")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -37,6 +37,9 @@ def main() -> None:
     if only is None or "topology" in only:
         from benchmarks import bench_topology
         bench_topology.run_all()
+    if only is None or "gateway" in only:
+        from benchmarks import bench_gateway
+        bench_gateway.run_all()
     print("benchmarks: done", file=sys.stderr)
 
 

@@ -1,0 +1,208 @@
+"""Committed perf trajectories + the CI regression gate.
+
+Every PR appends one row per (bench, config) to the committed
+``benchmarks/BENCH_<bench>.json`` files, so the repo carries its own
+performance history; CI re-runs the *fast* configs and fails when
+sustained throughput regresses more than ``THRESHOLD`` against the
+latest committed row.
+
+Row schema (flat scalar dicts, the wandb-style flattened logging shape —
+nested extras are flattened to ``section/key`` names):
+
+    {"pr": int, "bench": str, "config": str,
+     "devslots_per_sec": float, "p99_ms": float | null,
+     "peak_bytes": int, ...extra}
+
+``devslots_per_sec`` is the gate metric (device-slots of decision work
+per wall second — the one number every engine shares); ``p99_ms`` is
+null for batch engines that have no per-wave latency.
+
+CLI::
+
+    python -m benchmarks.trajectory run --pr 6 --out current.json
+    python -m benchmarks.trajectory check --current current.json \
+        [--threshold 0.25] [--report gate_report.txt]
+    python -m benchmarks.trajectory commit --current current.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterable, List, Optional
+
+SCHEMA = ("pr", "bench", "config", "devslots_per_sec", "p99_ms",
+          "peak_bytes")
+THRESHOLD = 0.25  # >25% devslots/sec regression fails the gate
+BENCHES = ("gateway", "fleet_scale")
+_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def flatten(prefix: str, d: dict) -> dict:
+    """Flatten a nested dict to ``prefix/key`` scalar entries."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten(key, v))
+        else:
+            out[key] = v
+    return out
+
+
+def make_row(pr: int, bench: str, config: str, devslots_per_sec: float,
+             p99_ms: Optional[float], peak_bytes: int, **extra) -> dict:
+    row = {
+        "pr": int(pr),
+        "bench": str(bench),
+        "config": str(config),
+        "devslots_per_sec": float(devslots_per_sec),
+        "p99_ms": None if p99_ms is None else float(p99_ms),
+        "peak_bytes": int(peak_bytes),
+    }
+    row.update(flatten("", extra))
+    return row
+
+
+def bench_path(bench: str) -> str:
+    return os.path.join(_DIR, f"BENCH_{bench}.json")
+
+
+def load_rows(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rows = json.load(f)
+    for row in rows:
+        missing = [k for k in SCHEMA if k not in row]
+        if missing:
+            raise ValueError(f"{path}: row {row} missing {missing}")
+    return rows
+
+
+def write_rows(path: str, rows: List[dict]) -> None:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def append_committed(rows: Iterable[dict]) -> List[str]:
+    """Append rows into the per-bench committed trajectory files."""
+    touched = []
+    by_bench: dict = {}
+    for row in rows:
+        by_bench.setdefault(row["bench"], []).append(row)
+    for bench, new in sorted(by_bench.items()):
+        path = bench_path(bench)
+        write_rows(path, load_rows(path) + new)
+        touched.append(path)
+    return touched
+
+
+def latest_baseline(rows: List[dict]) -> dict:
+    """config -> the LAST committed row (the trajectory's newest point)."""
+    out = {}
+    for row in rows:
+        out[row["config"]] = row
+    return out
+
+
+def check_rows(current: List[dict],
+               threshold: float = THRESHOLD) -> tuple:
+    """Compare fresh rows against the committed baselines.
+
+    Returns (failures, lines): ``failures`` is the list of regressed
+    rows; ``lines`` a human-readable comparison report.  A config with
+    no committed baseline passes (first recording).
+    """
+    lines = [f"bench gate: threshold {threshold:.0%} devslots/sec "
+             f"regression"]
+    failures = []
+    baselines = {b: latest_baseline(load_rows(bench_path(b)))
+                 for b in {r["bench"] for r in current}}
+    for row in current:
+        base = baselines[row["bench"]].get(row["config"])
+        tag = f"{row['bench']}/{row['config']}"
+        if base is None:
+            lines.append(f"  {tag}: no committed baseline — recording "
+                         f"run ({row['devslots_per_sec']:.0f} devslots/s)")
+            continue
+        now, ref = row["devslots_per_sec"], base["devslots_per_sec"]
+        ratio = now / ref if ref > 0 else float("inf")
+        verdict = "OK"
+        if ratio < 1.0 - threshold:
+            verdict = "FAIL"
+            failures.append(row)
+        lines.append(
+            f"  {tag}: {now:.0f} vs baseline {ref:.0f} devslots/s "
+            f"(x{ratio:.2f}, pr {base['pr']}) {verdict}")
+    lines.append("bench gate: " + ("FAILED" if failures else "passed"))
+    return failures, lines
+
+
+def collect_rows(pr: int, benches=BENCHES) -> List[dict]:
+    """Run the fast bench configs and collect their trajectory rows."""
+    rows: List[dict] = []
+    for bench in benches:
+        if bench == "gateway":
+            from benchmarks import bench_gateway
+            rows += bench_gateway.trajectory_rows(pr)
+        elif bench == "fleet_scale":
+            from benchmarks import bench_fleet_scale
+            rows += bench_fleet_scale.trajectory_rows(pr)
+        else:
+            raise ValueError(f"unknown bench {bench!r} "
+                             f"(known: {', '.join(BENCHES)})")
+    return rows
+
+
+def _load_current(path: str) -> List[dict]:
+    """Load fresh rows for check/commit — a gate over nothing is an error."""
+    if not os.path.exists(path):
+        raise SystemExit(f"bench gate: current rows file {path!r} not found")
+    rows = load_rows(path)
+    if not rows:
+        raise SystemExit(f"bench gate: {path!r} holds no rows")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_run = sub.add_parser("run", help="run fast configs, write rows")
+    p_run.add_argument("--pr", type=int, required=True)
+    p_run.add_argument("--out", required=True)
+    p_run.add_argument("--benches", default=",".join(BENCHES))
+    p_chk = sub.add_parser("check", help="gate fresh rows vs committed")
+    p_chk.add_argument("--current", required=True)
+    p_chk.add_argument("--threshold", type=float, default=THRESHOLD)
+    p_chk.add_argument("--report", default=None)
+    p_com = sub.add_parser("commit", help="append rows to committed files")
+    p_com.add_argument("--current", required=True)
+    args = ap.parse_args(argv)
+
+    if args.cmd == "run":
+        rows = collect_rows(args.pr, args.benches.split(","))
+        write_rows(args.out, rows)
+        print(f"wrote {len(rows)} rows to {args.out}")
+        return 0
+    if args.cmd == "check":
+        failures, lines = check_rows(_load_current(args.current),
+                                     args.threshold)
+        report = "\n".join(lines) + "\n"
+        sys.stdout.write(report)
+        if args.report:
+            with open(args.report, "w") as f:
+                f.write(report)
+        return 1 if failures else 0
+    if args.cmd == "commit":
+        for path in append_committed(_load_current(args.current)):
+            print(f"appended to {path}")
+        return 0
+    raise AssertionError(args.cmd)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

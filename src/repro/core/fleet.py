@@ -91,7 +91,7 @@ class RawOverlay:
 
 @partial(jax.jit,
          static_argnames=("algo", "enforce_slot_capacity", "use_kernel",
-                          "with_true_rho"))
+                          "with_true_rho", "collect_decisions"))
 def simulate(trace: Trace,
              tables,
              params: OnAlgoParams,
@@ -103,7 +103,8 @@ def simulate(trace: Trace,
              true_rho: Optional[jax.Array] = None,
              with_true_rho: bool = False,
              overlay: Optional[RawOverlay] = None,
-             topology: Optional[Topology] = None):
+             topology: Optional[Topology] = None,
+             collect_decisions: bool = False):
     """Roll a trace through a policy.
 
     Returns (series dict of (T,) arrays, final_state).  Accounting:
@@ -130,6 +131,11 @@ def simulate(trace: Trace,
     ``algo`` covers OnAlgo, the paper's three baselines, and the service
     tier's two degenerate policies: ``local`` (never offload) and ``cloud``
     (offload every task, cloudlet admission permitting).
+
+    ``collect_decisions`` adds the realized per-device decision matrices
+    to the series — ``offload_mask`` / ``admit_mask``, (T, N) bool —
+    the ground truth the live gateway's replay is checked against
+    (O(T * N) memory: a test/diagnostics flag, not a fleet-scale one).
     """
     o_tab, h_tab, w_tab = tables
     T, N = trace.j_idx.shape
@@ -249,6 +255,9 @@ def simulate(trace: Trace,
             "lam_norm": lam_norm,
             "mu": mu,
         }
+        if collect_decisions:
+            out["offload_mask"] = offload
+            out["admit_mask"] = admitted
         if topology is not None:
             out["mu_k"] = (mu_k if mu_k is not None
                            else jnp.full((topology.K,), mu))
@@ -1057,14 +1066,18 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
              chunks=(8, 16, 32), block_ns=(None,),
              probe_slots: int = 128, slab: Optional[int] = None,
              algo: str = "onalgo", enforce_slot_capacity: bool = False,
-             repeats: int = 2,
+             repeats: int = 2, warmup: int = 1,
              topology: Optional[Topology] = None) -> AutotuneResult:
     """Pick (chunk, block_n) for the chunked engines by timing probes.
 
     Runs a short rollout (the first ``probe_slots`` slots) for every
     candidate in ``chunks`` x ``block_ns`` and returns the fastest —
-    wall-clock, steady-state (each candidate is warmed once before
-    timing, so compiles don't vote).  Probe either a materialized
+    wall-clock, steady-state: each candidate runs ``warmup`` untimed
+    calls before its ``repeats`` timed ones, so first-call compile time
+    never votes in the (chunk, block_n) choice (at small probe horizons
+    compiles dominate the rollout by orders of magnitude and would
+    otherwise pick whichever candidate happened to trace fastest).
+    Probe either a materialized
     ``trace`` (+ optional ``overlay``) or a streaming ``source`` with
     its ``(T, N)``; candidates with ``chunk > probe_slots`` are skipped.
 
@@ -1108,12 +1121,16 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
                 enforce_slot_capacity=enforce_slot_capacity,
                 topology=topology)
 
+    if repeats < 1 or warmup < 0:
+        raise ValueError(f"need repeats >= 1 (got {repeats}) and "
+                         f"warmup >= 0 (got {warmup})")
     timings = {}
     for chunk in chunks:
         if chunk > probe_T:
             continue
         for block_n in block_ns:
-            jax.block_until_ready(probe(chunk, block_n))  # warm the jits
+            for _ in range(warmup):  # compiles (and cold caches) don't vote
+                jax.block_until_ready(probe(chunk, block_n))
             best = float("inf")
             for _ in range(repeats):
                 t_start = time.perf_counter()

@@ -1,4 +1,7 @@
-# Serving substrate: engine (prefill/decode/classify), batcher, OnAlgo-gated
-# admission control, end-to-end edge-serving simulator, and the compile
-# layer that lowers a service run to the vectorized fleet-engine contract
-# (compile.py: SimConfig + pool -> Trace/tables/params + RawOverlay).
+# Serving substrate: wave/bucket machinery + LM engine (engine.py), the
+# live OnAlgo serving gateway (gateway.py: shape-stable jitted tick +
+# async micro-batching host loop with SLO fallback), OnAlgo-gated
+# admission control, the end-to-end edge-serving simulator, and the
+# compile layer that lowers a service run to the vectorized fleet-engine
+# contract (compile.py: SimConfig + pool -> Trace/tables/params +
+# RawOverlay, or the streaming slab form).

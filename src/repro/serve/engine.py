@@ -1,24 +1,65 @@
-"""Cloudlet serving engine: jit'd prefill/decode with a static-shape cache.
+"""Serving-tier wave machinery + the cloudlet model engine.
 
-Two request kinds, matching the paper's service and the LM dry-run shapes:
-  * classify: one forward pass -> class probabilities (the paper's image
-    task; handled by a separate small classifier or the LM head);
-  * generate: prefill + n decode steps with the KV/SSM cache.
+Everything that serves under jit shares one constraint: request waves
+must land on a small set of static shapes, or every wave recompiles.
+:class:`WaveBuckets` is that policy in one place — pad-to-bucket sizing
+shared by the LM :class:`Batcher` (token waves) and the live OnAlgo
+gateway (:mod:`repro.serve.gateway`, report waves): one compiled
+program per bucket, geometric buckets so padding waste stays bounded.
 
-Waves of requests are formed by the Batcher (pad-to-capacity static shapes:
-one compiled program per (batch, len) bucket).
+On top of it:
+
+  * :class:`ServingEngine` — batched LM serving (prefill + decode with
+    the static-shape KV/SSM cache) around :class:`~repro.models.api.ModelAPI`,
+    for the paper's cloudlet-side model;
+  * :class:`Batcher` — FIFO request accumulation + bucketed token
+    padding for the LM engine's waves.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveBuckets:
+    """Pad-to-bucket sizing: the static-shape policy for request waves.
+
+    ``bucket_len(n)`` returns the smallest bucket holding ``n`` items
+    (the largest bucket for anything bigger — callers cap wave size
+    separately).  Buckets are stored sorted; one jit compile exists per
+    bucket, so keep the tuple short (geometric spacing bounds padding
+    waste at the ratio between neighbors).
+    """
+
+    buckets: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("need at least one bucket")
+        object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+    def bucket_len(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def pad_rows(self, seqs: Sequence[np.ndarray], length: int,
+                 pad_id: int = 0) -> np.ndarray:
+        """Stack variable-length int rows into a (len(seqs), length)
+        padded matrix (rows truncate at ``length``)."""
+        out = np.full((len(seqs), length), pad_id, np.int32)
+        for i, s in enumerate(seqs):
+            out[i, :len(s)] = s[:length]
+        return out
 
 
 @dataclasses.dataclass
@@ -68,17 +109,22 @@ class ServingEngine:
 
 
 class Batcher:
-    """Pads request waves to fixed bucket shapes (static jit signatures).
+    """FIFO request accumulation + bucketed padding for LM waves.
 
-    Production framing: requests accumulate in a FIFO; each slot the engine
-    drains up to ``max_batch`` of them.  Bucketed padding keeps the number
-    of compiled programs tiny while avoiding per-request recompiles.
+    Production framing: requests accumulate in a FIFO; each slot the
+    engine drains up to ``max_batch`` of them.  Sizing policy lives in
+    :class:`WaveBuckets` (shared with the live gateway), so the number
+    of compiled programs stays tiny without per-request recompiles.
     """
 
     def __init__(self, max_batch: int, buckets=(32, 64, 128, 256)):
         self.max_batch = max_batch
-        self.buckets = sorted(buckets)
+        self.wave_buckets = WaveBuckets(tuple(buckets))
         self.queue: list = []
+
+    @property
+    def buckets(self):
+        return list(self.wave_buckets.buckets)
 
     def submit(self, request):
         self.queue.append(request)
@@ -94,14 +140,8 @@ class Batcher:
         return wave
 
     def bucket_len(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return self.buckets[-1]
+        return self.wave_buckets.bucket_len(n)
 
     @staticmethod
     def pad_tokens(seqs, length: int, pad_id: int = 0):
-        out = np.full((len(seqs), length), pad_id, np.int32)
-        for i, s in enumerate(seqs):
-            out[i, :len(s)] = s[:length]
-        return out
+        return WaveBuckets((length,)).pad_rows(seqs, length, pad_id)

@@ -1,0 +1,511 @@
+"""Live serving gateway: OnAlgo as a persistent online service.
+
+Every other engine in the repo replays a horizon it already knows.  The
+gateway runs the paper's actual deployment loop: devices *report* their
+current observation ``(o, h, w)`` as requests arrive, the cloudlet ticks
+Algorithm 1 once per slot over whatever reports came in, and streams the
+offload/admit decisions back — no future knowledge anywhere.
+
+Two layers:
+
+  :class:`GatewayCore` — the synchronous algorithm surface.  A wave of
+  device reports is padded to a size bucket, scattered into fleet-shaped
+  ``(N,)`` buffers, quantized with the same
+  :func:`~repro.serve.admission.quantize_states_device` the batch
+  lowering uses, and rolled through ONE jitted, shape-stable OnAlgo slot
+  (:func:`repro.core.onalgo.step` + per-slot cloudlet admission, with
+  the topology tier's per-cloudlet duals when a
+  :class:`~repro.topology.Topology` is attached).  The dual/rho state
+  buffers are donated back to the step, so the persistent state is
+  updated in place; there is exactly one compile per ``(bucket, K)``
+  shape.  Because non-reporting devices scatter to ``j = 0`` (null) and
+  every consumer masks by ``task``, a tick is *bit-identical* to the
+  corresponding slot of ``fleet.simulate(..., overlay=...,
+  enforce_slot_capacity=True)`` on the same workload counters
+  (tests/test_gateway.py holds this over full replays).
+
+  :class:`LiveGateway` — the asynchronous host loop.  Reports are
+  submitted as chunks into a bounded queue; the serve loop micro-batches
+  every queued chunk into one wave (one OnAlgo slot), ticks the core off
+  the event loop, and resolves each submitter's future with its slice of
+  the decisions.  Graceful degradation is explicit: a full queue sheds
+  the chunk immediately, and a wave whose estimated tick time would blow
+  the p99 latency SLO is answered with *local-execution fallback*
+  decisions (offload nobody — always feasible: it is the paper's
+  baseline action and touches no algorithm state) instead of missing the
+  deadline.
+
+Wave contract: a wave IS one OnAlgo slot.  Each device may appear at
+most once per wave; devices that do not report are treated as null-state
+(no task) for that slot, exactly like a ``False`` arrival in the batch
+workload.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import onalgo
+from repro.core.onalgo import OnAlgoParams, StepRule
+from repro.serve.admission import quantize_states_device
+from repro.serve.engine import WaveBuckets
+from repro.topology import Topology
+
+
+def default_buckets(num_devices: int, base: int = 64) -> Tuple[int, ...]:
+    """Geometric wave-size buckets: ``base`` doubling up to N.
+
+    One jit compile per bucket; doubling keeps the program count at
+    O(log(N / base)) while padding waste stays under 2x.
+    """
+    if num_devices <= base:
+        return (num_devices,)
+    out = []
+    b = base
+    while b < num_devices:
+        out.append(b)
+        b *= 2
+    out.append(num_devices)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class GatewayCoreStats:
+    ticks: int = 0
+    reports: int = 0
+    compiled_buckets: set = dataclasses.field(default_factory=set)
+
+    @property
+    def compiles(self) -> int:
+        return len(self.compiled_buckets)
+
+
+class GatewayCore:
+    """The gateway's synchronous algorithm surface (one tick = one slot).
+
+    Args:
+      space: the pool-calibrated :class:`~repro.core.state_space.StateSpace`
+        behind the value tables — reports are quantized with the same
+        fused kernel as the batch lowering.
+      tables/params/rule: the fleet-engine contract pieces
+        (``CompiledService`` / ``StreamingService`` carry them; see
+        :meth:`for_service`).
+      num_devices: fleet size N (decisions are fleet-shaped internally).
+      topology: optional multi-cloudlet :class:`Topology` — K-vector
+        duals (K > 1) and per-cloudlet admission, same semantics as
+        ``fleet.simulate(topology=...)``.  A time-varying association is
+        indexed by the gateway's own slot counter.
+      buckets: wave-size buckets (default :func:`default_buckets`).
+      mesh / device_axis: optional device mesh — the persistent state
+        (lam, rho counts) is placed sharded over ``device_axis`` so the
+        jitted tick runs SPMD; decisions are unchanged.
+      enforce_slot_capacity: apply per-slot cloudlet admission to the
+        offload decisions (the live cloudlet's semantics; default True).
+      est_alpha: EMA factor for the per-bucket tick-latency estimate
+        driving the SLO check in :class:`LiveGateway`.
+    """
+
+    def __init__(self, space, tables, params: OnAlgoParams, rule: StepRule,
+                 num_devices: int, *, topology: Optional[Topology] = None,
+                 buckets=None, mesh=None, device_axis: str = "data",
+                 enforce_slot_capacity: bool = True,
+                 est_alpha: float = 0.25):
+        self.space = space
+        self.tables = tables
+        self.params = params
+        self.rule = rule
+        self.N = int(num_devices)
+        self.M = int(tables[0].shape[-1])
+        self.topology = topology
+        self.enforce_slot_capacity = bool(enforce_slot_capacity)
+        self.buckets = WaveBuckets(tuple(buckets) if buckets is not None
+                                   else default_buckets(self.N))
+        if self.buckets.buckets[-1] < self.N:
+            raise ValueError("largest bucket must cover the fleet "
+                             f"({self.buckets.buckets[-1]} < N={self.N})")
+        self._topo_k = (topology if topology is not None and topology.K > 1
+                        else None)
+        if topology is not None:
+            if topology.assoc.shape[-1] != self.N:
+                raise ValueError(
+                    f"topology association covers {topology.assoc.shape[-1]}"
+                    f" devices, gateway serves N={self.N}")
+            self._assoc_np = np.asarray(topology.assoc, np.int32)
+        self.slots = 0  # host-side slot counter (== state.rho.t)
+        self.stats = GatewayCoreStats()
+        self._est_ms: dict = {}
+        self._est_alpha = float(est_alpha)
+        self._state = onalgo.init_state(
+            self.N, self.M, K=None if self._topo_k is None else topology.K)
+        if mesh is not None:
+            self._state = _shard_state(self._state, mesh, device_axis)
+        self._tick_fn = jax.jit(self._build_tick(), donate_argnums=(0,))
+
+    @classmethod
+    def for_service(cls, service, **kw) -> "GatewayCore":
+        """Build a core from a ``CompiledService`` / ``StreamingService``
+        (both carry space/tables/params/rule + the fleet size)."""
+        return cls(service.space, service.tables, service.params,
+                   service.rule, service.sim.num_devices, **kw)
+
+    # ------------------------------------------------------------------
+    def _build_tick(self):
+        N, space = self.N, self.space
+        topo_duals = self._topo_k is not None
+        admit_topo = self.topology is not None
+        enforce = self.enforce_slot_capacity
+
+        def tick(state, tables, params, rule, idx, o, h, w, assoc, H_k):
+            # scatter the wave into fleet-shaped buffers; pad slots carry
+            # idx = N and drop.  Non-reporting devices quantize to j = 0
+            # (null state) — identical to a False arrival in the batch
+            # workload, so the slot replays bit for bit.
+            zeros = jnp.zeros((N,), jnp.float32)
+            o_f = zeros.at[idx].set(o, mode="drop")
+            h_f = zeros.at[idx].set(h, mode="drop")
+            w_f = zeros.at[idx].set(w, mode="drop")
+            task = jnp.zeros((N,), bool).at[idx].set(True, mode="drop")
+            j = quantize_states_device(space, o_f, h_f, w_f, task)
+            if topo_duals:
+                state, off = onalgo.step(state, j, o_f, h_f, w_f, task,
+                                         tables, params, rule, assoc=assoc,
+                                         H_k=H_k)
+            else:
+                state, off = onalgo.step(state, j, o_f, h_f, w_f, task,
+                                         tables, params, rule)
+            if not enforce:
+                adm = off
+            elif admit_topo:
+                adm = bl.admit_by_capacity_topo(off, h_f, assoc, H_k)
+            else:
+                adm = bl.admit_by_capacity(off, h_f, params.H)
+            # gather the wave's decisions back (pads clip to device N-1
+            # and are sliced off on the host)
+            off_r = jnp.take(off, idx, mode="clip")
+            adm_r = jnp.take(adm, idx, mode="clip")
+            return state, off_r, adm_r
+
+        return tick
+
+    def _slot_assoc(self):
+        """(assoc, H_k) device args for the current slot (None without a
+        topology; a time-varying map is indexed by the slot counter)."""
+        if self.topology is None:
+            return None, None
+        if self.topology.time_varying:
+            if self.slots >= self._assoc_np.shape[0]:
+                raise ValueError(
+                    f"time-varying association covers "
+                    f"{self._assoc_np.shape[0]} slots, gateway is at slot "
+                    f"{self.slots}")
+            return self._assoc_np[self.slots], self.topology.H_k
+        return self.topology.assoc, self.topology.H_k
+
+    # ------------------------------------------------------------------
+    def tick(self, idx, o, h, w) -> Tuple[np.ndarray, np.ndarray]:
+        """One OnAlgo slot over a wave of device reports.
+
+        idx: (R,) int32 device ids (each at most once); o/h/w: (R,)
+        float32 raw observed values.  R = 0 is a valid (empty) slot —
+        rho and the duals still advance, like a no-arrival slot in the
+        batch replay.  Returns (offload, admitted) bool arrays aligned
+        with ``idx``; blocks until the decisions are materialized.
+        """
+        idx = np.asarray(idx, np.int32).reshape(-1)
+        R = idx.shape[0]
+        if R > self.N:
+            raise ValueError(f"wave of {R} reports exceeds fleet N={self.N}")
+        bucket = self.buckets.bucket_len(R)
+        idx_p = np.full((bucket,), self.N, np.int32)
+        idx_p[:R] = idx
+        pad = np.zeros((bucket,), np.float32)
+
+        def pad_vals(x):
+            out = pad.copy()
+            out[:R] = np.asarray(x, np.float32).reshape(-1)
+            return out
+
+        assoc, H_k = self._slot_assoc()
+        t0 = time.perf_counter()
+        self._state, off_p, adm_p = self._tick_fn(
+            self._state, self.tables, self.params, self.rule, idx_p,
+            pad_vals(o), pad_vals(h), pad_vals(w), assoc, H_k)
+        off = np.asarray(off_p)[:R]  # forces the device sync
+        adm = np.asarray(adm_p)[:R]
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        first = bucket not in self.stats.compiled_buckets
+        self.stats.compiled_buckets.add(bucket)
+        if not first:  # compiles don't vote in the latency estimate
+            prev = self._est_ms.get(bucket)
+            self._est_ms[bucket] = (dt_ms if prev is None else
+                                    prev + self._est_alpha * (dt_ms - prev))
+        self.slots += 1
+        self.stats.ticks += 1
+        self.stats.reports += R
+        return off, adm
+
+    # ------------------------------------------------------------------
+    def bucket_len(self, n_reports: int) -> int:
+        return self.buckets.bucket_len(n_reports)
+
+    def estimate_ms(self, n_reports: int) -> float:
+        """Estimated tick wall-time for a wave of ``n_reports`` (EMA of
+        past warm ticks in its bucket; conservative fallback to the
+        worst known bucket; 0 when nothing is known yet)."""
+        est = self._est_ms.get(self.buckets.bucket_len(n_reports))
+        if est is not None:
+            return est
+        return max(self._est_ms.values(), default=0.0)
+
+    def seed_estimate(self, n_reports: int, ms: float) -> None:
+        """Preset the latency estimate for a bucket (operational
+        warm-start, or fault injection in the SLO tests)."""
+        self._est_ms[self.buckets.bucket_len(n_reports)] = float(ms)
+
+    @property
+    def mu(self) -> np.ndarray:
+        """Current capacity dual(s) — () scalar or (K,). Syncs."""
+        return np.asarray(self._state.mu)
+
+    @property
+    def state(self):
+        """The persistent OnAlgoState (duals + rho). Treat as read-only:
+        its buffers are donated to the next tick."""
+        return self._state
+
+
+def _shard_state(state, mesh, device_axis: str):
+    """Place the persistent state on a mesh: per-device buffers sharded
+    over ``device_axis``, the K-vector/scalar dual and the slot counter
+    replicated — the tick then runs SPMD under jit."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dev = NamedSharding(mesh, P(device_axis))
+    dev2 = NamedSharding(mesh, P(device_axis, None))
+    rep = NamedSharding(mesh, P())
+    rho = state.rho
+    return onalgo.OnAlgoState(
+        lam=jax.device_put(state.lam, dev),
+        mu=jax.device_put(state.mu, rep),
+        rho=type(rho)(counts=jax.device_put(rho.counts, dev2),
+                      t=jax.device_put(rho.t, rep)))
+
+
+# ----------------------------------------------------------------------
+#  Async host loop
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WaveReply:
+    """Per-chunk decision reply.
+
+    ``fallback`` marks graceful degradation: the chunk was answered with
+    local execution (offload nobody) because the queue was full or the
+    wave would have missed its latency deadline; ``t`` is then -1 and no
+    algorithm state was touched.
+    """
+
+    t: int  # gateway slot that decided this chunk (-1: fallback)
+    offload: np.ndarray
+    admitted: np.ndarray
+    fallback: bool
+    latency_ms: float
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    waves: int = 0
+    chunks: int = 0
+    reports: int = 0
+    fallback_waves: int = 0
+    shed_chunks: int = 0
+    max_queue_seen: int = 0
+    latencies_ms: list = dataclasses.field(default_factory=list)
+
+    def percentile(self, q: float) -> float:
+        if not self.latencies_ms:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies_ms), q))
+
+    def summary(self) -> dict:
+        return {
+            "waves": self.waves,
+            "chunks": self.chunks,
+            "reports": self.reports,
+            "fallback_waves": self.fallback_waves,
+            "shed_chunks": self.shed_chunks,
+            "max_queue_seen": self.max_queue_seen,
+            "p50_ms": self.percentile(50.0),
+            "p99_ms": self.percentile(99.0),
+        }
+
+
+class _Chunk:
+    __slots__ = ("idx", "o", "h", "w", "fut", "t_arrival")
+
+    def __init__(self, idx, o, h, w, fut, t_arrival):
+        self.idx, self.o, self.h, self.w = idx, o, h, w
+        self.fut, self.t_arrival = fut, t_arrival
+
+
+class LiveGateway:
+    """Async serving loop around a :class:`GatewayCore`.
+
+    Submitted chunks queue (bounded by ``max_queue``); the serve loop
+    drains every queued chunk into one wave — one OnAlgo slot — ticks
+    the core off the event loop, and resolves each chunk's future with
+    its slice of the decisions.  SLO semantics: if the core's latency
+    estimate says the wave would finish past ``earliest_arrival +
+    slo_ms``, every chunk in it gets a local-execution fallback reply
+    instead (bounded staleness beats a missed deadline); a full queue
+    sheds new chunks the same way at submit time.
+
+    Use as ``async with LiveGateway(core) as gw: ...`` or call
+    :meth:`start` / :meth:`stop` explicitly.
+    """
+
+    def __init__(self, core: GatewayCore, *, slo_ms: float = 50.0,
+                 max_queue: int = 64, max_wave: Optional[int] = None,
+                 clock=time.monotonic):
+        self.core = core
+        self.slo_ms = float(slo_ms)
+        self.max_queue = int(max_queue)
+        self.max_wave = int(max_wave) if max_wave is not None else core.N
+        self.stats = GatewayStats()
+        self._clock = clock
+        self._chunks: deque = deque()
+        self._wakeup: Optional[asyncio.Event] = None
+        self._task = None
+        self._closing = False
+
+    async def __aenter__(self) -> "LiveGateway":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("gateway already started")
+        self._closing = False
+        self._wakeup = asyncio.Event()
+        self._task = asyncio.get_running_loop().create_task(self._serve())
+
+    async def stop(self) -> None:
+        """Drain the queue, then stop the serve loop."""
+        self._closing = True
+        self._wakeup.set()
+        await self._task
+        self._task = None
+
+    def _fallback_reply(self, n: int, t_arrival: float) -> WaveReply:
+        zeros = np.zeros((n,), bool)
+        return WaveReply(t=-1, offload=zeros, admitted=zeros.copy(),
+                         fallback=True,
+                         latency_ms=(self._clock() - t_arrival) * 1e3)
+
+    async def submit(self, idx, o, h, w) -> WaveReply:
+        """Submit one chunk of device reports; resolves with its slice
+        of the wave's decisions (or a fallback reply under overload).
+        An empty chunk is valid and still drives a slot tick."""
+        if self._task is None:
+            raise RuntimeError("gateway not started")
+        now = self._clock()
+        if len(self._chunks) >= self.max_queue:
+            self.stats.shed_chunks += 1
+            return self._fallback_reply(len(np.atleast_1d(idx)), now)
+        fut = asyncio.get_running_loop().create_future()
+        self._chunks.append(_Chunk(np.asarray(idx, np.int32).reshape(-1),
+                                   o, h, w, fut, now))
+        self.stats.max_queue_seen = max(self.stats.max_queue_seen,
+                                        len(self._chunks))
+        self._wakeup.set()
+        return await fut
+
+    async def _serve(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            if not self._chunks:
+                if self._closing:
+                    return
+                self._wakeup.clear()
+                await self._wakeup.wait()
+                continue
+            # micro-batch: every queued chunk joins this wave (slot),
+            # capped at max_wave reports
+            wave = [self._chunks.popleft()]
+            n = wave[0].idx.shape[0]
+            while (self._chunks
+                   and n + self._chunks[0].idx.shape[0] <= self.max_wave):
+                c = self._chunks.popleft()
+                wave.append(c)
+                n += c.idx.shape[0]
+            earliest = min(c.t_arrival for c in wave)
+            est_s = self.core.estimate_ms(n) / 1e3
+            if self._clock() + est_s > earliest + self.slo_ms / 1e3:
+                for c in wave:
+                    c.fut.set_result(
+                        self._fallback_reply(c.idx.shape[0], c.t_arrival))
+                self.stats.fallback_waves += 1
+                self.stats.chunks += len(wave)
+                continue
+            idx = np.concatenate([c.idx for c in wave])
+            o = np.concatenate([np.asarray(c.o, np.float32).reshape(-1)
+                                for c in wave])
+            h = np.concatenate([np.asarray(c.h, np.float32).reshape(-1)
+                                for c in wave])
+            w = np.concatenate([np.asarray(c.w, np.float32).reshape(-1)
+                                for c in wave])
+            slot = self.core.slots
+            # tick in the default executor so submitters keep enqueueing
+            # (that's what forms the next micro-batch)
+            off, adm = await loop.run_in_executor(
+                None, self.core.tick, idx, o, h, w)
+            done = self._clock()
+            self.stats.waves += 1
+            self.stats.chunks += len(wave)
+            self.stats.reports += int(n)
+            lo = 0
+            for c in wave:
+                hi = lo + c.idx.shape[0]
+                lat = (done - c.t_arrival) * 1e3
+                self.stats.latencies_ms.append(lat)
+                c.fut.set_result(WaveReply(
+                    t=slot, offload=off[lo:hi], admitted=adm[lo:hi],
+                    fallback=False, latency_ms=lat))
+                lo = hi
+
+
+async def drive_closed_loop(gateway: LiveGateway, loadgen, t0: int = 0,
+                            slots: Optional[int] = None) -> list:
+    """Closed-loop driver: submit one workload slot's wave, await its
+    decisions, advance — each gateway wave is exactly one workload slot,
+    so the decision stream replays ``fleet.simulate`` bit for bit."""
+    replies = []
+    for wv in loadgen.waves(t0, slots):
+        replies.append(await gateway.submit(wv.idx, wv.o, wv.h, wv.w))
+    return replies
+
+
+def run_closed_loop(core: GatewayCore, loadgen, t0: int = 0,
+                    slots: Optional[int] = None, **gateway_kw):
+    """Convenience sync wrapper: serve a closed-loop replay of
+    ``loadgen`` through a fresh :class:`LiveGateway`; returns
+    (replies, stats)."""
+
+    async def _run():
+        async with LiveGateway(core, **gateway_kw) as gw:
+            replies = await drive_closed_loop(gw, loadgen, t0, slots)
+            return replies, gw.stats
+
+    return asyncio.run(_run())

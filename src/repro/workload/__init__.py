@@ -7,6 +7,9 @@
   streaming  — the chunk-addressable lowering (StreamingWorkload): any
                [t0, t0 + L) slab from O(L * N) work, bit-identical to
                the materialized horizon
+  loadgen    — closed-loop wave source for the live gateway: per-slot
+               device reports cut from streaming slabs (bit-reproducible
+               arrivals via the same counter contract)
 
 The retired v0 contract (stateful host-order sampling) survives only as
 the pinned golden fixture under tests/golden/ and its frozen test-side
@@ -21,10 +24,12 @@ from repro.workload.service import (ServiceWorkload, arrival_chain_probs,
                                     validate_rng_version)
 from repro.workload.streaming import (StreamingWorkload,
                                       lower_service_workload)
+from repro.workload.loadgen import ServiceLoadGen, Wave
 
 __all__ = [
     "RNG_COUNTER", "RNG_LEGACY_HOST", "markov_chain", "stream_key",
     "streams", "ServiceWorkload", "arrival_chain_probs",
     "generate_service_workload", "validate_rng_version",
     "StreamingWorkload", "lower_service_workload",
+    "ServiceLoadGen", "Wave",
 ]

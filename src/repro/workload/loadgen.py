@@ -1,0 +1,101 @@
+"""Closed-loop load generator for the live serving gateway.
+
+Plays the role of the fleet: walks the counter-addressed streaming
+service workload slot by slot and emits, per slot, the *wave* of device
+reports a live cloudlet would receive — the ids of the devices whose
+arrival chain fired, with the raw ``(o, h, w)`` values each device
+observes.  Because everything below is the v1 counter-based RNG
+contract (``StreamingService.slab_cols`` →
+``StreamingWorkload.slab_cols``), the arrival stream is bit-reproducible
+and byte-identical to what ``compile_service`` would materialize — so a
+gateway replay of these waves must reproduce the batch
+``fleet.simulate`` decisions exactly (tests/test_gateway.py).
+
+Column addressing is first-class: a generator instance can own just the
+device range ``[n0, n0 + n_cols)`` (one instance per reporting shard,
+like real devices), generating O(slab * n_cols) work per slab —
+bit-identical to slicing a full-width generator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Wave:
+    """One slot's device reports: ``idx`` (R,) absolute device ids (a
+    device appears at most once), ``o/h/w`` (R,) raw observed values."""
+
+    t: int
+    idx: np.ndarray
+    o: np.ndarray
+    h: np.ndarray
+    w: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(self.idx.shape[0])
+
+
+class ServiceLoadGen:
+    """Wave source over a :class:`~repro.serve.compile.StreamingService`.
+
+    Slabs of ``slab`` slots are generated on device (one jitted pass
+    from counters) and cached; ``wave(t)`` cuts slot ``t``'s reporting
+    devices out of the cached slab on the host.  ``n0`` / ``n_cols``
+    restrict the generator to a device column range — the sharded-
+    reporter story — with absolute ids in the emitted waves.
+    """
+
+    def __init__(self, service, *, slab: int = 64, n0: int = 0,
+                 n_cols: Optional[int] = None):
+        self.service = service
+        self.T = int(service.sim.T)
+        self.N = int(service.sim.num_devices)
+        if not 0 <= n0 < self.N:
+            raise ValueError(f"n0={n0} outside fleet [0, {self.N})")
+        self.n0 = int(n0)
+        self.n_cols = int(n_cols) if n_cols is not None else self.N - n0
+        if n0 + self.n_cols > self.N:
+            raise ValueError("column range exceeds the fleet")
+        self.slab = int(slab)
+        self._t0 = -1  # cached slab start (aligned to slab)
+        self._on = self._o = self._h = self._w = None
+
+    def _ensure_slab(self, t: int) -> int:
+        """Cache the slab covering slot ``t``; return its start."""
+        t0 = (t // self.slab) * self.slab
+        if t0 != self._t0:
+            length = min(self.slab, self.T - t0)
+            j, ov = self.service.slab_cols(t0, length, self.n0, self.n_cols)
+            # j > 0 ⟺ arrival: the state space reserves index 0 for null
+            self._on = np.asarray(j) > 0
+            self._o = np.asarray(ov.o, np.float32)
+            self._h = np.asarray(ov.h, np.float32)
+            self._w = np.asarray(ov.w, np.float32)
+            self._t0 = t0
+        return t0
+
+    def wave(self, t: int) -> Wave:
+        """The reports for slot ``t`` (an empty wave when no device in
+        this generator's column range has an arrival)."""
+        if not 0 <= t < self.T:
+            raise ValueError(f"slot {t} outside horizon [0, {self.T})")
+        r = t - self._ensure_slab(t)
+        mask = self._on[r]
+        cols = np.flatnonzero(mask)
+        return Wave(t=t, idx=(self.n0 + cols).astype(np.int32),
+                    o=self._o[r][mask], h=self._h[r][mask],
+                    w=self._w[r][mask])
+
+    def waves(self, t0: int = 0,
+              slots: Optional[int] = None) -> Iterator[Wave]:
+        """Iterate waves for slots [t0, t0 + slots) (to the horizon's
+        end by default)."""
+        end = self.T if slots is None else min(self.T, t0 + slots)
+        for t in range(t0, end):
+            yield self.wave(t)
