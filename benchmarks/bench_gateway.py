@@ -15,6 +15,13 @@ and measures what a deployment cares about:
 Fast configs (CI + the committed trajectory): N in {1024, 16384}.
 ``BENCH_GATEWAY_FULL=1`` adds the fleet-scale points up to N = 10^6
 with horizons scaled down like bench_fleet_scale.
+
+The closed loop measures the service rate (each wave awaits the last);
+``open_loop_sweep`` then offers waves at fixed arrival rates around
+that rate without waiting — the saturation knee: below it latency is
+flat, above it slot-waves merge into bigger micro-batches and the SLO
+sheds load, so achieved decisions/sec plateaus while served_frac
+drops.
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ import time
 from benchmarks.common import PeakTracker, emit
 from benchmarks.trajectory import make_row
 from repro.serve.compile import compile_service_streaming
-from repro.serve.gateway import GatewayCore, run_closed_loop
+from repro.serve.gateway import GatewayCore, run_closed_loop, run_open_loop
 from repro.serve.simulator import SimConfig, synthetic_pool
 from repro.workload.loadgen import ServiceLoadGen
 
@@ -33,6 +40,12 @@ SLAB = 64
 FAST_NS = (1024, 16384)
 FULL_NS = (131072, 1048576)
 WARM_SLOTS = 24  # covers every bucket the arrival process touches
+
+# Open-loop sweep: offered wave rate as multiples of the measured
+# closed-loop service rate — below 1x the gateway keeps up, above it the
+# queue merges slot-waves and the SLO sheds load (the saturation knee).
+RATE_MULTS = (0.5, 1.0, 2.0, 4.0)
+OPEN_SLOTS = 96
 
 
 def _horizon(N: int) -> int:
@@ -82,6 +95,71 @@ def run_gateway(N: int, pool=None) -> dict:
     }
 
 
+def open_loop_sweep(N: int, pool=None, mults=RATE_MULTS,
+                    slots: int = OPEN_SLOTS) -> list:
+    """Open-loop arrival-rate sweep for one fleet size.
+
+    Calibrates the closed-loop service rate first, then offers waves at
+    ``mults`` multiples of it through :func:`run_open_loop` with a real
+    SLO, so overload degrades by shedding instead of stretching the
+    closed loop's wall clock.  Returns one dict per offered rate:
+    offered/achieved rates, latency percentiles over served waves, and
+    the shed/fallback counts that mark the saturation knee.
+    """
+    pool = pool if pool is not None else synthetic_pool()
+    cal = run_gateway(N, pool)
+    closed_rate = cal["slots"] / cal["wall_s"]  # waves/sec service rate
+    slo_ms = max(25.0, 8.0 * cal["p50_ms"])
+    sim = _sim(N, WARM_SLOTS + slots)
+    ss = compile_service_streaming(sim, pool)
+    out = []
+    for mult in mults:
+        core = GatewayCore.for_service(ss)
+        lg = ServiceLoadGen(ss, slab=SLAB)
+        # warm-up phase: compiles + first estimates (separate stats)
+        run_closed_loop(core, lg, 0, WARM_SLOTS, slo_ms=120_000.0)
+        rate = closed_rate * mult
+        t0 = time.perf_counter()
+        replies, stats = run_open_loop(core, lg, rate, WARM_SLOTS, slots,
+                                       slo_ms=slo_ms)
+        dt = time.perf_counter() - t0
+        submitted = sum(r.offload.shape[0] for r in replies)
+        out.append({
+            "N": N,
+            "slots": slots,
+            "mult": mult,
+            "slo_ms": slo_ms,
+            "offered_waves_per_sec": rate,
+            "achieved_waves_per_sec": stats.waves / dt,
+            "achieved_decisions_per_sec": stats.reports / dt,
+            "served_frac": (stats.reports / submitted if submitted
+                            else float("nan")),
+            "fallback_waves": stats.fallback_waves,
+            "shed_chunks": stats.shed_chunks,
+            "max_queue_seen": stats.max_queue_seen,
+            "p50_ms": stats.percentile(50.0),
+            "p99_ms": stats.percentile(99.0),
+        })
+    return out
+
+
+def bench_gateway_open(Ns=(FAST_NS[0],)):
+    for N in Ns:
+        for r in open_loop_sweep(N):
+            emit(f"gateway/N={N}/slots={r['slots']}/open_loop/"
+                 f"x{r['mult']:g}",
+                 1e6 / r["offered_waves_per_sec"],
+                 f"offered_waves_per_s={r['offered_waves_per_sec']:.1f};"
+                 f"achieved_waves_per_s={r['achieved_waves_per_sec']:.1f};"
+                 f"decisions_per_s={r['achieved_decisions_per_sec']:.0f};"
+                 f"served_frac={r['served_frac']:.3f};"
+                 f"fallback_waves={r['fallback_waves']};"
+                 f"shed_chunks={r['shed_chunks']};"
+                 f"max_queue={r['max_queue_seen']};"
+                 f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+                 f"slo_ms={r['slo_ms']:.0f}")
+
+
 def trajectory_rows(pr: int) -> list:
     """Fast-config rows for the committed BENCH_gateway.json trajectory."""
     pool = synthetic_pool()
@@ -113,6 +191,7 @@ def bench_gateway(Ns=None):
 
 def run_all():
     bench_gateway()
+    bench_gateway_open()
 
 
 if __name__ == "__main__":

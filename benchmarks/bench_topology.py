@@ -1,21 +1,29 @@
-"""Multi-cloudlet topology benchmark: K-vector duals at fleet scale.
+"""Multi-cloudlet topology benchmark: K-vector duals at metro scale.
 
 Drives fig5-style end-to-end service runs (OnAlgo, synthetic pool,
 per-slot per-cloudlet admission) through the streaming chunked engine
-with a mobility-walk topology, sweeping the cloudlet count
-K in {1, 4, 16, 64}.  K = 1 is the scalar-mu baseline (bit-identical to
-running without a topology), so the sweep measures exactly what the
-per-cloudlet generalization costs: the in-kernel association gather,
-the (N, K_pad) segment reduction per slot, and the O(N * K) per-slot
-admission post-pass.  Emitted columns per K:
+with a STREAMING mobility-walk topology (``mobility_walk(...,
+streaming=True)``: association slabs are regenerated on device from
+counters, never materialized as a (T, N) map), sweeping the cloudlet
+count K from 1 to 4096.  K = 1 is the scalar-mu baseline
+(bit-identical to running without a topology), so the sweep measures
+exactly what the per-cloudlet generalization costs: the in-kernel
+association gather/scatter (one-hot mask, or the binned (hi, lo)
+layout above ``fleet.autotune``'s lane-bin threshold), and the
+sort-based segmented admission post-pass — both K-sublinear, which is
+the point: K = 4096 should price like K = 4.  Emitted columns per K:
 
   * fig5-style metrics (accuracy / offload fraction / power per device);
   * devslots/sec throughput and wall-clock per slot;
   * handover rate (fraction of device-slots that switch cloudlet) — the
-    mobility knob the topology tier exists for.
+    mobility knob the topology tier exists for;
+  * the reduction layout the run used (``topo_binned``), autotuned for
+    K > 128 by probing both one-hot and binned.
 
 Runs in CI interpret mode (one CSV row per K in the per-PR artifact,
 ``--only topology``); sizes are CI-bounded like bench_fleet_scale.
+``trajectory_rows`` pins the K = 1024 binned config as the committed
+BENCH_topology.json gate point.
 """
 
 from __future__ import annotations
@@ -24,7 +32,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import PeakTracker, emit
+from benchmarks.trajectory import make_row
 from repro.serve.simulator import SimConfig, simulate_service, synthetic_pool
 from repro.topology import Topology
 
@@ -33,6 +42,7 @@ T = 256
 SLAB = 64
 CHUNK = 16
 P_HANDOVER = 0.02
+FULL_KS = (1, 4, 16, 64, 256, 1024, 4096)
 
 
 def _sim(N: int, T: int) -> SimConfig:
@@ -43,30 +53,78 @@ def _sim(N: int, T: int) -> SimConfig:
                      H=N / 4 * 441e6, seed=1)
 
 
-def bench_topology(Ks=(1, 4, 16, 64)):
-    pool = synthetic_pool()
-    sim = _sim(N, T)
-    for K in Ks:
-        if K == 1:
-            topo = Topology.uniform(1, N, sim.H)
-            handover = 0.0
-        else:
-            topo = Topology.mobility_walk(K, N, T, H=sim.H,
-                                          p_handover=P_HANDOVER, seed=3)
-            a = np.asarray(topo.assoc)
-            handover = float((a[1:] != a[:-1]).mean())
-        kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
-                      chunk=CHUNK, topology=topo)
+def _topo(sim: SimConfig, K: int):
+    """K = 1 scalar baseline, else a streaming mobility walk; returns
+    (topology, handover_rate)."""
+    if K == 1:
+        return Topology.uniform(1, N, sim.H), 0.0
+    topo = Topology.mobility_walk(K, N, T, H=sim.H,
+                                  p_handover=P_HANDOVER, seed=3,
+                                  streaming=True)
+    a = np.asarray(topo.assoc_at(0, T))  # stat only; the engine streams
+    return topo, float((a[1:] != a[:-1]).mean())
+
+
+def _run_K(sim: SimConfig, pool, K: int, topo_binned=None):
+    """One K point: warmed + timed streaming run; autotunes the
+    reduction layout (one-hot vs binned) for K > 128 unless pinned."""
+    topo, handover = _topo(sim, K)
+    if topo_binned is None and K > 128:
+        from repro.core import fleet
+        from repro.serve.compile import compile_service_streaming
+        cs = compile_service_streaming(sim, pool)
+        tune = fleet.autotune(cs.tables, cs.params, cs.rule,
+                              source=cs.slab, T=T, N=N, chunks=(CHUNK,),
+                              probe_slots=32, slab=SLAB, repeats=1,
+                              topology=topo)
+        topo_binned = tune.topo_binned
+    kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
+                  chunk=CHUNK, topology=topo, topo_binned=topo_binned)
+    with PeakTracker() as peak:
         simulate_service(sim, pool, **kwargs)  # warm the jits
         t0 = time.perf_counter()
         out = simulate_service(sim, pool, **kwargs)
         dt = time.perf_counter() - t0
+    return out, dt, handover, topo_binned, peak.peak_bytes
+
+
+def trajectory_rows(pr: int, Ks=(1024,)) -> list:
+    """Fast-config rows for the committed BENCH_topology.json trajectory.
+
+    The reduction layout is PINNED (binned above the lane-bin threshold)
+    so the gate compares like against like across PRs instead of
+    whatever the autotuner picked that day."""
+    pool = synthetic_pool()
+    sim = _sim(N, T)
+    rows = []
+    for K in Ks:
+        tb = K > 128
+        out, dt, handover, _, peak_bytes = _run_K(sim, pool, K,
+                                                  topo_binned=tb)
+        rows.append(make_row(
+            pr, "topology", f"K{K}", N * T / dt, None, peak_bytes,
+            accuracy=round(out["accuracy"], 4), slots=T, devices=N,
+            topo_binned=tb, handover_rate=round(handover, 4)))
+    return rows
+
+
+def bench_topology(Ks=FULL_KS):
+    pool = synthetic_pool()
+    sim = _sim(N, T)
+    base_rate = None
+    for K in Ks:
+        out, dt, handover, tb, peak_bytes = _run_K(sim, pool, K)
+        rate = N * T / dt
+        if K == 4:
+            base_rate = rate
+        rel = f";vs_K4=x{rate / base_rate:.2f}" if base_rate else ""
         emit(f"topology/K={K}/N={N}/T={T}", dt * 1e6 / T,
              f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
              f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
-             f"devslots_per_s={N * T / dt:.0f};"
+             f"devslots_per_s={rate:.0f};"
              f"handover_rate={handover:.4f};"
-             f"mu_final={out['mu_final']:.4g}")
+             f"mu_final={out['mu_final']:.4g};"
+             f"topo_binned={tb};peak_mb={peak_bytes / 1e6:.0f}" + rel)
 
 
 def run_all():

@@ -36,7 +36,7 @@ from typing import Iterable, List, Optional
 SCHEMA = ("pr", "bench", "config", "devslots_per_sec", "p99_ms",
           "peak_bytes")
 THRESHOLD = 0.25  # >25% devslots/sec regression fails the gate
-BENCHES = ("gateway", "fleet_scale")
+BENCHES = ("gateway", "fleet_scale", "topology")
 _DIR = os.path.dirname(os.path.abspath(__file__))
 
 
@@ -152,6 +152,9 @@ def collect_rows(pr: int, benches=BENCHES) -> List[dict]:
         elif bench == "fleet_scale":
             from benchmarks import bench_fleet_scale
             rows += bench_fleet_scale.trajectory_rows(pr)
+        elif bench == "topology":
+            from benchmarks import bench_topology
+            rows += bench_topology.trajectory_rows(pr)
         else:
             raise ValueError(f"unknown bench {bench!r} "
                              f"(known: {', '.join(BENCHES)})")

@@ -88,11 +88,54 @@ def admit_by_capacity_topo(offload, h_now, assoc, H_k,
 
     assoc: (N,) int32 cloudlet ids (ignored when K == 1 — then this is
     exactly :func:`admit_by_capacity` under ``H_k[0]``).  The segmented
-    running load is an O(N * K) one-hot cumsum — per-slot state, never
-    horizon-sized.  Returns admitted mask (N,) bool.
+    running load is a sort-by-cloudlet reset-flag cumsum — O(N log N)
+    regardless of K; :func:`admit_by_capacity_topo_onehot` is the
+    O(N * K) reference it is tested against.  The two agree bit for bit
+    whenever each cloudlet's running sums are exactly representable
+    (e.g. integer-valued cycle costs whose prefix sums stay below 2**24
+    in fp32); past that, their different summation trees can round
+    differently, which only matters at EXACT capacity ties — measure
+    zero for continuous cycle costs.  Returns admitted mask (N,) bool.
     """
     K = H_k.shape[0]
     if K == 1:  # one cloudlet: the scalar rule, bit for bit
+        return admit_by_capacity(offload, h_now, H_k[0], smallest_first)
+    h_eff = jnp.where(offload, h_now, 0.0)
+    if smallest_first:
+        # lexsort: cloudlet id primary, cycle cost secondary, original
+        # index as the stable tie-break — within a cloudlet this is the
+        # same order the one-hot reference's global key sort induces.
+        key = jnp.where(offload, h_now, jnp.inf)
+        order = jnp.lexsort((key, assoc))
+    else:
+        order = jnp.argsort(assoc, stable=True)
+    a_s = assoc[order]
+    h_s = h_eff[order]
+    # Segmented cumsum with a reset flag at each cloudlet boundary: the
+    # running load never mixes segments, so each cloudlet's prefix sums
+    # exactly the values the dense reference sums (a global cumsum minus
+    # per-segment offsets would leak other cloudlets' rounding into the
+    # comparison at fp32 cycle scales).
+    reset = jnp.concatenate([jnp.ones((1,), bool), a_s[1:] != a_s[:-1]])
+
+    def _comb(left, right):
+        s1, r1 = left
+        s2, r2 = right
+        return jnp.where(r2, s2, s1 + s2), r1 | r2
+
+    prefix, _ = jax.lax.associative_scan(_comb, (h_s, reset))
+    fits_sorted = prefix <= H_k[a_s]
+    fits = jnp.zeros(offload.shape, bool).at[order].set(fits_sorted)
+    return offload & fits
+
+
+def admit_by_capacity_topo_onehot(offload, h_now, assoc, H_k,
+                                  smallest_first: bool = False):
+    """O(N * K) one-hot reference for :func:`admit_by_capacity_topo` —
+    the segmented running load materialized as a dense (N, K) cumsum.
+    Kept as the test oracle; never called on a hot path."""
+    K = H_k.shape[0]
+    if K == 1:
         return admit_by_capacity(offload, h_now, H_k[0], smallest_first)
     h_eff = jnp.where(offload, h_now, 0.0)
     if smallest_first:

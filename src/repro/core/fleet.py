@@ -153,11 +153,6 @@ def simulate(trace: Trace,
                 "use_kernel routes the scalar-mu single-slot kernel and "
                 "does not support topology.K > 1; run with "
                 "use_kernel=False or through the chunked engines")
-        if with_true_rho:
-            raise ValueError(
-                "with_true_rho (the Theorem-1 series) assumes the "
-                "single-cloudlet scalar dual and does not support "
-                "topology.K > 1")
 
     if algo == "onalgo":
         algo_state = onalgo.init_state(
@@ -177,7 +172,9 @@ def simulate(trace: Trace,
         xs.update(o=overlay.o, h=overlay.h, w=overlay.w,
                   cl=overlay.correct_local, cc=overlay.correct_cloud)
     if topo_k is not None and topo_k.time_varying:
-        xs["assoc"] = topo_k.assoc
+        # materializes a streaming walk — the scan engine consumes the
+        # horizon as scan xs anyway
+        xs["assoc"] = topo_k.assoc_at(0, T)
 
     def slot(carry, xs):
         state = carry
@@ -278,24 +275,39 @@ def simulate(trace: Trace,
                 rho_t = state.rho.rho
             else:
                 lam_ = jnp.zeros((N,), jnp.float32)
-                mu_ = jnp.float32(0.0)
+                mu_ = (jnp.float32(0.0) if topo_k is None
+                       else jnp.zeros((topo_k.K,), jnp.float32))
                 rho_t = true_rho
-            y_pol = onalgo.policy_matrix(lam_, mu_, o_s, h_s, w_tab)
+            y_pol = onalgo.policy_matrix(
+                lam_, mu_, o_s, h_s, w_tab,
+                assoc=None if topo_k is None else assoc_now)
             w_full = jnp.broadcast_to(w_tab, (N, M))
             # f/g of the slot policy under the TRUE distribution — the
             # quantities Theorem 1 bounds (reward convention: higher better).
             out["f_true"] = jnp.sum(w_full * true_rho * y_pol)
             g_pow = jnp.sum(o_s * true_rho * y_pol, axis=-1) - B_eff
-            g_cap = jnp.sum(h_s * true_rho * y_pol) - H_eff
-            out["g_pow"] = g_pow
-            out["g_cap"] = g_cap
             # Perturbation terms delta_t(y_t) (Sec. IV.C.2): the rho_t - rho
             # error projected on the policy, per constraint row.
             drho = rho_t - true_rho
             d_pow = jnp.sum(o_s * drho * y_pol, axis=-1)  # (N,)
-            d_cap = jnp.sum(h_s * drho * y_pol)  # ()
-            out["delta_norm"] = jnp.sqrt(jnp.sum(d_pow**2) + d_cap**2)
-            out["lam_delta"] = jnp.sum(lam_ * d_pow) + mu_ * d_cap
+            if topo_k is None:
+                g_cap = jnp.sum(h_s * true_rho * y_pol) - H_eff
+                d_cap = jnp.sum(h_s * drho * y_pol)  # ()
+            else:
+                # K capacity rows: per-cloudlet loads of the policy under
+                # the true distribution, in the same (preconditioned)
+                # space the K-vector dual ascends in.
+                H_k_eff = (topo_k.H_k / params.H if params.precondition
+                           else topo_k.H_k)
+                g_cap = onalgo.capacity_loads(
+                    y_pol, true_rho, h_s, assoc_now, topo_k.K) - H_k_eff
+                d_cap = onalgo.capacity_loads(
+                    y_pol, drho, h_s, assoc_now, topo_k.K)  # (K,)
+            out["g_pow"] = g_pow
+            out["g_cap"] = g_cap
+            out["delta_norm"] = jnp.sqrt(jnp.sum(d_pow**2)
+                                         + jnp.sum(d_cap**2))
+            out["lam_delta"] = jnp.sum(lam_ * d_pow) + jnp.sum(mu_ * d_cap)
         return state, out
 
     final_state, series = jax.lax.scan(slot, algo_state, xs)
@@ -447,7 +459,8 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
                      algo: str = "onalgo",
                      overlay: Optional[RawOverlay] = None,
                      enforce_slot_capacity: bool = False,
-                     topology: Optional[Topology] = None):
+                     topology: Optional[Topology] = None,
+                     topo_binned: Optional[bool] = None):
     """OnAlgo rollout through the fused whole-simulation Pallas kernels.
 
     Equivalent to ``simulate(..., algo="onalgo")`` (same series keys, same
@@ -475,6 +488,11 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
       cloudlet's entry (assoc columns ride the trace layout), and reduce
       per-cloudlet loads in-kernel; admission runs per cloudlet.  K = 1
       takes the scalar kernels bit for bit.
+    topo_binned: route the in-kernel per-cloudlet reductions through the
+      binned (hi, lo) = (k // 128, k % 128) layout — O(K / 128) mask
+      memory and an MXU contraction instead of an (N, K_pad) one-hot
+      mask.  None (default) auto-selects by K; ``fleet.autotune`` probes
+      both on large-K topologies.  Ignored without a topology.
     """
     from repro.kernels import ops as kops
 
@@ -504,7 +522,7 @@ def simulate_chunked(trace: Trace, tables, params: OnAlgoParams,
     if topo_k is not None:
         H_k_eff = (topo_k.H_k / params.H if params.precondition
                    else topo_k.H_k)
-        topo_kw = dict(H_k=H_k_eff)
+        topo_kw = dict(H_k=H_k_eff, topo_binned=topo_binned)
 
     T_main = (T // chunk) * chunk
     lam = jnp.zeros((N,), jnp.float32)
@@ -587,7 +605,8 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
                             block_n: Optional[int] = None,
                             algo: str = "onalgo",
                             enforce_slot_capacity: bool = False,
-                            topology: Optional[Topology] = None):
+                            topology: Optional[Topology] = None,
+                            topo_binned: Optional[bool] = None):
     """The chunked engine over a *streamed* workload: no (T, N) horizon.
 
     ``source(t0, length)`` yields slots [t0, t0 + length) of the
@@ -648,7 +667,8 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
         topo_kw = ({} if topo_k is None
                    else dict(assoc=(topo_k.assoc_at(t0, L)
                                     if topo_k.time_varying
-                                    else topo_k.assoc), H_k=H_k_eff))
+                                    else topo_k.assoc), H_k=H_k_eff,
+                             topo_binned=topo_binned))
         off, mu_seq, lnorm, lam, mu, counts = kern(
             j_slab, lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
             rule.a, rule.beta, chunk=chunk, t0=jnp.int32(t0),
@@ -735,7 +755,8 @@ def simulate_sharded(trace: Trace, tables, params: OnAlgoParams,
     ov_args = (() if overlay is None
                else (overlay.o, overlay.h, overlay.w))
     topo_args = (() if topo_k is None
-                 else (topo_k.assoc, topo_k.H_k))
+                 else ((topo_k.assoc_at(0, T) if topo_k.time_varying
+                        else topo_k.assoc), topo_k.H_k))
     mu0 = (jnp.float32(0.0) if topo_k is None
            else jnp.zeros((topo_k.K,), jnp.float32))
     off, mu_seq, lnorm, lam, mu, counts = run(
@@ -1042,8 +1063,9 @@ class AutotuneResult:
     chunk: int
     block_n: Optional[int]
     seconds: float  # best probe wall-time
-    timings: dict  # (chunk, block_n) -> probe seconds
+    timings: dict  # (chunk, block_n[, topo_binned]) -> probe seconds
     topology: Optional[Topology] = None  # the topology the probes ran with
+    topo_binned: Optional[bool] = None  # winning reduction layout (topo)
 
     @property
     def kwargs(self) -> dict:
@@ -1051,11 +1073,13 @@ class AutotuneResult:
 
         When the probes ran under a multi-cloudlet topology, it is part
         of the tuned configuration (K-vector duals change the kernels'
-        working set), so it rides along here.
+        working set), so it rides along here — as does the winning
+        ``topo_binned`` reduction layout.
         """
         kw = {"chunk": self.chunk, "block_n": self.block_n}
         if self.topology is not None:
             kw["topology"] = self.topology
+            kw["topo_binned"] = self.topo_binned
         return kw
 
 
@@ -1067,7 +1091,8 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
              probe_slots: int = 128, slab: Optional[int] = None,
              algo: str = "onalgo", enforce_slot_capacity: bool = False,
              repeats: int = 2, warmup: int = 1,
-             topology: Optional[Topology] = None) -> AutotuneResult:
+             topology: Optional[Topology] = None,
+             topo_binned_opts=None) -> AutotuneResult:
     """Pick (chunk, block_n) for the chunked engines by timing probes.
 
     Runs a short rollout (the first ``probe_slots`` slots) for every
@@ -1085,7 +1110,12 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
     in-kernel association gathers and segment reductions change the
     working set, so a scalar-tuned (chunk, block_n) may be stale); the
     result carries it so ``AutotuneResult.kwargs`` stays a complete,
-    valid engine configuration.
+    valid engine configuration.  ``topo_binned_opts`` adds the in-kernel
+    reduction layout to the search grid: None (default) probes both
+    one-hot and binned when the topology has more than one lane bin of
+    cloudlets (K > 128, where the (N, K_pad) mask starts to hurt),
+    otherwise just the engine default; pass an explicit tuple such as
+    ``(False, True)`` to override.
     """
     import time
 
@@ -1102,45 +1132,57 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             correct_cloud=overlay.correct_cloud[:probe_T])
         p_topo = None if topology is None else topology.prefix(probe_T)
 
-        def probe(chunk, block_n):
+        def probe(chunk, block_n, tb):
             return simulate_chunked(p_trace, tables, params, rule,
                                     chunk=chunk, block_n=block_n, algo=algo,
                                     overlay=p_overlay,
                                     enforce_slot_capacity=(
                                         enforce_slot_capacity),
-                                    topology=p_topo)
+                                    topology=p_topo, topo_binned=tb)
     else:
         if T is None or N is None:
             raise ValueError("autotune(source=...) needs T= and N=")
         probe_T = min(T, probe_slots)
 
-        def probe(chunk, block_n):
+        def probe(chunk, block_n, tb):
             return simulate_chunked_stream(
                 source, probe_T, N, tables, params, rule, chunk=chunk,
                 slab=slab, block_n=block_n, algo=algo,
                 enforce_slot_capacity=enforce_slot_capacity,
-                topology=topology)
+                topology=topology, topo_binned=tb)
 
     if repeats < 1 or warmup < 0:
         raise ValueError(f"need repeats >= 1 (got {repeats}) and "
                          f"warmup >= 0 (got {warmup})")
+    if topo_binned_opts is None:
+        # the reduction layout only matters past one lane bin of
+        # cloudlets; below that, probing it would double every grid point
+        topo_binned_opts = ((False, True)
+                            if topology is not None and topology.K > 128
+                            else (None,))
     timings = {}
     for chunk in chunks:
         if chunk > probe_T:
             continue
         for block_n in block_ns:
-            for _ in range(warmup):  # compiles (and cold caches) don't vote
-                jax.block_until_ready(probe(chunk, block_n))
-            best = float("inf")
-            for _ in range(repeats):
-                t_start = time.perf_counter()
-                jax.block_until_ready(probe(chunk, block_n))
-                best = min(best, time.perf_counter() - t_start)
-            timings[(chunk, block_n)] = best
+            for tb in topo_binned_opts:
+                key = ((chunk, block_n) if tb is None
+                       else (chunk, block_n, tb))
+                for _ in range(warmup):  # compiles / cold caches don't vote
+                    jax.block_until_ready(probe(chunk, block_n, tb))
+                best = float("inf")
+                for _ in range(repeats):
+                    t_start = time.perf_counter()
+                    jax.block_until_ready(probe(chunk, block_n, tb))
+                    best = min(best, time.perf_counter() - t_start)
+                timings[key] = best
     if not timings:
         raise ValueError(
             f"no viable candidates: chunks={chunks} all exceed the probe "
             f"horizon ({probe_T} slots)")
-    (chunk, block_n), seconds = min(timings.items(), key=lambda kv: kv[1])
+    best_key, seconds = min(timings.items(), key=lambda kv: kv[1])
+    chunk, block_n = best_key[0], best_key[1]
+    tb_win = best_key[2] if len(best_key) == 3 else None
     return AutotuneResult(chunk=chunk, block_n=block_n, seconds=seconds,
-                          timings=timings, topology=topology)
+                          timings=timings, topology=topology,
+                          topo_binned=tb_win)

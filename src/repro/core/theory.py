@@ -13,24 +13,34 @@ from __future__ import annotations
 import numpy as np
 
 
-def sigma_g(tables, B, H, N: int, precondition: bool = True) -> float:
+def sigma_g(tables, B, H, N: int, precondition: bool = True,
+            H_k=None) -> float:
     """Uniform bound on ||g_t(y)|| over y in Y (Assumption 1).
 
     rho_t is a distribution, so |sum_j o^j rho^j y^j - B_n| <= max(B_n,
     o_max - B_n) and the capacity row is bounded by max(H, N*h_max - H).
     With preconditioning (the default OnAlgo mode) every row is divided by
     its RHS first.
+
+    With a multi-cloudlet topology pass its ``H_k`` — the single capacity
+    row becomes K rows, each bounded by max(H_k, N*h_max - H_k) (a worst
+    case where the whole fleet associates with cloudlet k); the engines
+    precondition those rows by the scalar ``params.H``, so the bound
+    divides by ``H``, not ``H_k``.
     """
     o_tab, h_tab, _ = (np.asarray(t) for t in tables)
     o_max, h_max = float(o_tab.max()), float(h_tab.max())
     B = np.broadcast_to(np.asarray(B, np.float64), (N,))
+    caps = (np.asarray([float(H)], np.float64) if H_k is None
+            else np.asarray(H_k, np.float64))
     if precondition:
         per_dev = np.maximum(1.0, o_max / B - 1.0)
-        cap = max(1.0, N * h_max / float(H) - 1.0)
+        cap = np.maximum(caps / float(H), N * h_max / float(H)
+                         - caps / float(H))
     else:
         per_dev = np.maximum(B, np.maximum(o_max - B, 0.0))
-        cap = max(float(H), N * h_max - float(H))
-    return float(np.sqrt((per_dev**2).sum() + cap**2))
+        cap = np.maximum(caps, N * h_max - caps)
+    return float(np.sqrt((per_dev**2).sum() + (cap**2).sum()))
 
 
 def step_series(rule_a: float, rule_beta: float, T: int) -> np.ndarray:
@@ -80,14 +90,16 @@ def empirical_gap(series, reward_star: float) -> float:
 
 
 def empirical_violation(series) -> float:
-    """LHS of Theorem 1(b): || (1/T) sum_t g(y_t) || over the N+1 rows."""
+    """LHS of Theorem 1(b): || (1/T) sum_t g(y_t) || over the N+K rows
+    (K = 1 without a topology: ``g_cap`` is (T,), else (T, K))."""
     g_pow = np.asarray(series["g_pow"], np.float64).mean(axis=0)  # (N,)
-    g_cap = float(np.asarray(series["g_cap"], np.float64).mean())
-    return float(np.sqrt((g_pow**2).sum() + g_cap**2))
+    g_cap = np.asarray(series["g_cap"], np.float64).mean(axis=0)
+    return float(np.sqrt((g_pow**2).sum() + (g_cap**2).sum()))
 
 
 def positive_violation(series) -> float:
     """Practical metric: || [ (1/T) sum_t g(y_t) ]^+ || (only real violations)."""
     g_pow = np.clip(np.asarray(series["g_pow"], np.float64).mean(axis=0), 0, None)
-    g_cap = max(float(np.asarray(series["g_cap"], np.float64).mean()), 0.0)
-    return float(np.sqrt((g_pow**2).sum() + g_cap**2))
+    g_cap = np.clip(np.asarray(series["g_cap"], np.float64).mean(axis=0),
+                    0, None)
+    return float(np.sqrt((g_pow**2).sum() + (g_cap**2).sum()))

@@ -130,11 +130,71 @@ def onalgo_duals_pallas(lam, mu, rho, o_tab, h_tab, w_tab, B, *,
 # the per-device row loads — one (N, K_pad) segment reduction per slot,
 # all in VMEM.  The scalar path is the K = 1 special case and compiles
 # to exactly the pre-topology program.
+#
+# Binned topology reduction (``topo_binned``, metro-scale K): the
+# one-hot mask path materializes an (N, K_pad) fp32 mask PER SLOT —
+# at K = 4096, N = 2048 that is 32 MB, past VMEM, and the compare +
+# broadcast-reduce runs on the VPU.  The binned variant decomposes a
+# cloudlet id into (hi, lo) = (a // 128, a % 128) and keeps the duals /
+# capacities / loads in a (K_hi, 128) = (K_pad / 128, 128) layout:
+#   gather: tmp = himask @ mu2 -> (N, 128); mu_n = sum(tmp * lomask, 1)
+#   scatter: load2 = himask^T @ (rows * lomask) -> (K_hi, 128)
+# himask (N, K_hi) and lomask (N, 128) replace the (N, K_pad) mask —
+# mask memory drops 128x and the contraction runs on the MXU as a
+# dense matmul (BLAS sgemm under the interpreter).  Same math, a
+# different fp reduction tree — kernel-vs-oracle tests compare with
+# allclose tolerances either way.  Selected automatically above a K
+# threshold (see ``_BINNED_K_THRESHOLD``); K = 1 always takes the
+# scalar path.
 # ---------------------------------------------------------------------------
+
+_BINNED_K_THRESHOLD = 512  # auto topo_binned above this many cloudlets
+
+
+def _topo_reducers(n_rows, Hk, topo_binned):
+    """Build (masks_of(a_col), gather(mu, masks), scatter(rows, masks))
+    for the per-slot topology reductions, in either the one-hot-mask or
+    the binned (hi, lo) layout (see the module comment)."""
+    if topo_binned:
+        K_hi = Hk.shape[0]
+        hicol = jax.lax.broadcasted_iota(jnp.int32, (n_rows, K_hi), 1)
+        locol = jax.lax.broadcasted_iota(jnp.int32, (n_rows, 128), 1)
+
+        def masks_of(a_col):  # a_col (n, 1) int32
+            himask = (hicol == a_col // 128).astype(jnp.float32)
+            lomask = (locol == a_col % 128).astype(jnp.float32)
+            return himask, lomask
+
+        def gather(mu2, masks):  # mu2 (K_hi, 128) -> (n, 1)
+            himask, lomask = masks
+            tmp = jax.lax.dot_general(
+                himask, mu2, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return jnp.sum(tmp * lomask, axis=1, keepdims=True)
+
+        def scatter(rows, masks):  # rows (n, 1) -> (K_hi, 128)
+            himask, lomask = masks
+            return jax.lax.dot_general(
+                himask, rows * lomask, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    else:
+        K_pad = Hk.shape[1]
+        kcol = jax.lax.broadcasted_iota(jnp.int32, (n_rows, K_pad), 1)
+
+        def masks_of(a_col):
+            return ((kcol == a_col).astype(jnp.float32),)
+
+        def gather(mu_row, masks):  # mu_row (1, K_pad) -> (n, 1)
+            return jnp.sum(mu_row * masks[0], axis=1, keepdims=True)
+
+        def scatter(rows, masks):  # rows (n, 1) -> (1, K_pad)
+            return jnp.sum(rows * masks[0], axis=0)[None, :]
+
+    return masks_of, gather, scatter
 
 
 def _onalgo_chunked_kernel(*refs, chunk, has_slots, has_topo,
-                           topo_tv=False):
+                           topo_tv=False, topo_binned=False):
     refs = list(refs)
     j_ref = refs.pop(0)
     if has_slots:
@@ -168,12 +228,12 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots, has_topo,
     lam = lam_ref[...]  # (N, 1)
     counts = counts_ref[...]  # (N, M)
     if has_topo:
-        mu_row = mu_ref[...]  # (1, K_pad) per-cloudlet duals
-        Hk = hk_ref[...].astype(jnp.float32)  # (1, K_pad)
-        kcol = jax.lax.broadcasted_iota(
-            jnp.int32, (o.shape[0], mu_row.shape[1]), 1)
-        if not topo_tv:  # static map: one (N, K_pad) mask for all slots
-            amask = (kcol == a_ref[...]).astype(jnp.float32)
+        mu_row = mu_ref[...]  # (1, K_pad) duals, or (K_hi, 128) binned
+        Hk = hk_ref[...].astype(jnp.float32)
+        masks_of, gather, scatter = _topo_reducers(o.shape[0], Hk,
+                                                   topo_binned)
+        if not topo_tv:  # static map: one mask set for all slots
+            amask = masks_of(a_ref[...])
     else:
         mu = mu_ref[0, 0]
 
@@ -187,8 +247,8 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots, has_topo,
 
         if has_topo:  # each device priced by its CURRENT cloudlet's dual
             if topo_tv:
-                amask = (kcol == a_ref[0, :, c:c + 1]).astype(jnp.float32)
-            mu_n = jnp.sum(mu_row * amask, axis=1, keepdims=True)  # (N, 1)
+                amask = masks_of(a_ref[0, :, c:c + 1])
+            mu_n = gather(mu_row, amask)  # (N, 1)
         else:
             mu_n = mu
 
@@ -218,9 +278,12 @@ def _onalgo_chunked_kernel(*refs, chunk, has_slots, has_topo,
         lam = jnp.maximum(lam + a_t * g_pow, 0.0)
         if has_topo:
             rows = jnp.sum(h * ry, axis=1, keepdims=True)  # (N, 1)
-            load_row = jnp.sum(rows * amask, axis=0)[None, :]  # (1, K_pad)
+            load_row = scatter(rows, amask)  # (1, K_pad) / (K_hi, 128)
             mu_row = jnp.maximum(mu_row + a_t * (load_row - Hk), 0.0)
-            museq_ref[0, c, :] = mu_row[0]
+            if topo_binned:
+                museq_ref[0, c] = mu_row
+            else:
+                museq_ref[0, c, :] = mu_row[0]
             lnorm_ref[0, c] = jnp.sqrt(jnp.sum(lam * lam)
                                        + jnp.sum(mu_row * mu_row))
         else:
@@ -308,7 +371,7 @@ def _pad_topology(assoc, H_k, mu0, K_chunks, chunk, Np):
 def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                           B, H, a, beta, *, chunk=8, t0=0,
                           slot_values=None, assoc=None, H_k=None,
-                          interpret=True):
+                          topo_binned=None, interpret=True):
     """Fused T-slot OnAlgo rollout (matches kernels/ref.onalgo_chunked_ref).
 
     j_seq: (T, N) int32 state indices, T a multiple of ``chunk``.
@@ -329,6 +392,9 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
       space).  mu0 must then be the (K,) dual vector; mu outputs gain a
       trailing K axis.  ``H`` is ignored in this mode (the per-cloudlet
       RHS is H_k).
+    topo_binned: use the binned (hi, lo) topology reduction (see the
+      module comment) instead of the one-hot (N, K_pad) mask.  None
+      (default) auto-selects it for K > _BINNED_K_THRESHOLD.
 
     Returns (offload (T, N) bool, mu_seq (T,) or (T, K), lam_norm_seq
              (T,), lam (N,), mu () or (K,), counts (N, M)).
@@ -357,17 +423,33 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     if has_topo:
         a_arr, hk_row, mu_arr, n_k, Kp = _pad_topology(assoc, H_k, mu0, K,
                                                        chunk, Np)
+        if topo_binned is None:
+            topo_binned = n_k > _BINNED_K_THRESHOLD
+        topo_binned = bool(topo_binned)
         topo_in = (a_arr,)
         topo_in_specs = [pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0))
                          if topo_tv
                          else pl.BlockSpec((Np, 1), lambda k: (0, 0))]
-        hk_args = (hk_row,)
-        hk_specs = [pl.BlockSpec((1, Kp), lambda k: (0, 0))]
-        mu_spec = pl.BlockSpec((1, Kp), lambda k: (0, 0))
-        museq_spec = pl.BlockSpec((1, chunk, Kp), lambda k: (k, 0, 0))
-        museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
-        mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
+        if topo_binned:
+            K_hi = Kp // 128
+            hk_args = (hk_row.reshape(K_hi, 128),)
+            mu_arr = mu_arr.reshape(K_hi, 128)
+            hk_specs = [pl.BlockSpec((K_hi, 128), lambda k: (0, 0))]
+            mu_spec = pl.BlockSpec((K_hi, 128), lambda k: (0, 0))
+            museq_spec = pl.BlockSpec((1, chunk, K_hi, 128),
+                                      lambda k: (k, 0, 0, 0))
+            museq_shape = jax.ShapeDtypeStruct((K, chunk, K_hi, 128),
+                                               jnp.float32)
+            mu_shape = jax.ShapeDtypeStruct((K_hi, 128), jnp.float32)
+        else:
+            hk_args = (hk_row,)
+            hk_specs = [pl.BlockSpec((1, Kp), lambda k: (0, 0))]
+            mu_spec = pl.BlockSpec((1, Kp), lambda k: (0, 0))
+            museq_spec = pl.BlockSpec((1, chunk, Kp), lambda k: (k, 0, 0))
+            museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
+            mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
     else:
+        topo_binned = False
         mu_arr = jnp.full((1, 1), mu0, jnp.float32)
         topo_in, topo_in_specs, hk_args, hk_specs = (), [], (), []
         mu_spec = pl.BlockSpec((1, 1), lambda k: (0, 0))
@@ -377,7 +459,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 
     kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk,
                              has_slots=has_slots, has_topo=has_topo,
-                             topo_tv=topo_tv)
+                             topo_tv=topo_tv, topo_binned=topo_binned)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K,),
@@ -418,8 +500,9 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     if has_topo:
+        mu_fin = (mu_f.reshape(Kp) if topo_binned else mu_f[0])[:n_k]
         return (offload, mu_seq.reshape(T, Kp)[:, :n_k], lnorm.reshape(T),
-                lam_f[:N, 0], mu_f[0, :n_k], counts_f[:N, :M])
+                lam_f[:N, 0], mu_fin, counts_f[:N, :M])
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
             lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])
 
@@ -456,7 +539,7 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 
 
 def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
-                         topo_tv=False):
+                         topo_tv=False, topo_binned=False):
     refs = list(refs)
     j_ref = refs.pop(0)
     if has_slots:
@@ -504,13 +587,13 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
 
     lam = lam_ref[...]  # (bn, 1)
     if has_topo:  # mu_t row: written by the previous slot's phase 2
-        mu_row = mu_ref[...]  # (1, K_pad)
+        mu_row = mu_ref[...]  # (1, K_pad), or (K_hi, 128) binned
         Hk = hk_ref[...].astype(jnp.float32)
-        kcol = jax.lax.broadcasted_iota(
-            jnp.int32, (o.shape[0], mu_row.shape[1]), 1)
+        masks_of, gather, scatter = _topo_reducers(o.shape[0], Hk,
+                                                   topo_binned)
         a_col = a_ref[0] if topo_tv else a_ref[...]  # (bn, 1)
-        amask = (kcol == a_col).astype(jnp.float32)  # (bn, K_pad)
-        mu_n = jnp.sum(mu_row * amask, axis=1, keepdims=True)  # (bn, 1)
+        amask = masks_of(a_col)
+        mu_n = gather(mu_row, amask)  # (bn, 1)
     else:
         mu_n = mu_ref[0, 0]
 
@@ -541,7 +624,7 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
             load_acc[...] = jnp.zeros_like(load_acc)
             lam2_acc[0, 0] = 0.0
         rows = jnp.sum(h * ry, axis=1, keepdims=True)  # (bn, 1)
-        load_acc[...] += jnp.sum(rows * amask, axis=0)[None, :]
+        load_acc[...] += scatter(rows, amask)
         lam2_acc[0, 0] += jnp.sum(lam_new * lam_new)
 
         # --- phase 2: per-cloudlet mu reduction over the tile partials
@@ -549,7 +632,10 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
         def _mu_reduce_topo():
             mu_new = jnp.maximum(mu_row + a_t * (load_acc[...] - Hk), 0.0)
             mu_ref[...] = mu_new
-            museq_ref[0, 0, :] = mu_new[0]
+            if topo_binned:
+                museq_ref[0, 0] = mu_new
+            else:
+                museq_ref[0, 0, :] = mu_new[0]
             lnorm_ref[0, 0] = jnp.sqrt(lam2_acc[0, 0]
                                        + jnp.sum(mu_new * mu_new))
     else:
@@ -573,7 +659,7 @@ def _onalgo_tiled_kernel(*refs, chunk, n_tiles, has_slots, has_topo,
 def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                         B, H, a, beta, *, chunk=8, block_n=256, t0=0,
                         slot_values=None, assoc=None, H_k=None,
-                        interpret=True):
+                        topo_binned=None, interpret=True):
     """Device-tiled fused OnAlgo rollout — same contract and results as
     ``onalgo_chunked_pallas`` (and ``kernels/ref.onalgo_chunked_ref``),
     including the service-overlay ``slot_values`` streams and the
@@ -626,20 +712,37 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     if has_topo:
         a_arr, hk_row, mu_arr, n_k, Kp = _pad_topology(assoc, H_k, mu0, K,
                                                        chunk, Np)
+        if topo_binned is None:
+            topo_binned = n_k > _BINNED_K_THRESHOLD
+        topo_binned = bool(topo_binned)
         topo_in = (a_arr,)
         topo_in_specs = [pl.BlockSpec((1, block_n, 1),
                                       lambda k, c, i: (k, i, c))
                          if topo_tv
                          else pl.BlockSpec((block_n, 1),
                                            lambda k, c, i: (i, 0))]
-        hk_args = (hk_row,)
-        hk_specs = [pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))]
-        mu_spec = pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))
-        museq_spec = pl.BlockSpec((1, 1, Kp), lambda k, c, i: (k, c, 0))
-        museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
-        mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
-        load_acc_shape = pltpu.VMEM((1, Kp), jnp.float32)
+        if topo_binned:
+            K_hi = Kp // 128
+            hk_args = (hk_row.reshape(K_hi, 128),)
+            mu_arr = mu_arr.reshape(K_hi, 128)
+            hk_specs = [pl.BlockSpec((K_hi, 128), lambda k, c, i: (0, 0))]
+            mu_spec = pl.BlockSpec((K_hi, 128), lambda k, c, i: (0, 0))
+            museq_spec = pl.BlockSpec((1, 1, K_hi, 128),
+                                      lambda k, c, i: (k, c, 0, 0))
+            museq_shape = jax.ShapeDtypeStruct((K, chunk, K_hi, 128),
+                                               jnp.float32)
+            mu_shape = jax.ShapeDtypeStruct((K_hi, 128), jnp.float32)
+            load_acc_shape = pltpu.VMEM((K_hi, 128), jnp.float32)
+        else:
+            hk_args = (hk_row,)
+            hk_specs = [pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))]
+            mu_spec = pl.BlockSpec((1, Kp), lambda k, c, i: (0, 0))
+            museq_spec = pl.BlockSpec((1, 1, Kp), lambda k, c, i: (k, c, 0))
+            museq_shape = jax.ShapeDtypeStruct((K, chunk, Kp), jnp.float32)
+            mu_shape = jax.ShapeDtypeStruct((1, Kp), jnp.float32)
+            load_acc_shape = pltpu.VMEM((1, Kp), jnp.float32)
     else:
+        topo_binned = False
         mu_arr = jnp.full((1, 1), mu0, jnp.float32)
         topo_in, topo_in_specs, hk_args, hk_specs = (), [], (), []
         mu_spec = pl.BlockSpec((1, 1), lambda k, c, i: (0, 0))
@@ -650,7 +753,8 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 
     kern = functools.partial(_onalgo_tiled_kernel, chunk=chunk,
                              n_tiles=n_tiles, has_slots=has_slots,
-                             has_topo=has_topo, topo_tv=topo_tv)
+                             has_topo=has_topo, topo_tv=topo_tv,
+                             topo_binned=topo_binned)
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K, chunk, n_tiles),
@@ -695,7 +799,8 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
 
     offload = off.transpose(0, 2, 1).reshape(T, Np)[:, :N] > 0.5
     if has_topo:
+        mu_fin = (mu_f.reshape(Kp) if topo_binned else mu_f[0])[:n_k]
         return (offload, mu_seq.reshape(T, Kp)[:, :n_k], lnorm.reshape(T),
-                lam_f[:N, 0], mu_f[0, :n_k], counts_f[:N, :M])
+                lam_f[:N, 0], mu_fin, counts_f[:N, :M])
     return (offload, mu_seq.reshape(T), lnorm.reshape(T),
             lam_f[:N, 0], mu_f[0, 0], counts_f[:N, :M])

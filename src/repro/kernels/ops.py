@@ -48,10 +48,10 @@ def onalgo_duals(lam, mu, rho, o_tab, h_tab, w_tab, B):
                                interpret=interpret_mode())
 
 
-@partial(jax.jit, static_argnames=("chunk",))
+@partial(jax.jit, static_argnames=("chunk", "topo_binned"))
 def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                    a, beta, *, chunk=8, t0=0, slot_values=None,
-                   assoc=None, H_k=None):
+                   assoc=None, H_k=None, topo_binned=None):
     """Fused multi-slot OnAlgo rollout (see onalgo_step.onalgo_chunked_pallas).
 
     ``slot_values``: optional (o, h, w) raw (T, N) streams (service
@@ -59,18 +59,20 @@ def onalgo_chunked(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
     traced: slab launches resuming at different offsets share one
     compile (the streaming engines).  ``assoc`` / ``H_k``: optional
     multi-cloudlet topology — (T, N) cloudlet ids + (K,) capacities;
-    mu0 and the mu outputs are then (K,)-vectors."""
+    mu0 and the mu outputs are then (K,)-vectors.  ``topo_binned``
+    selects the binned (hi, lo) topology reduction (None = auto by K)."""
     from repro.kernels.onalgo_step import onalgo_chunked_pallas
     return onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab,
                                  w_tab, B, H, a, beta, chunk=chunk, t0=t0,
                                  slot_values=slot_values, assoc=assoc,
-                                 H_k=H_k, interpret=interpret_mode())
+                                 H_k=H_k, topo_binned=topo_binned,
+                                 interpret=interpret_mode())
 
 
-@partial(jax.jit, static_argnames=("chunk", "block_n"))
+@partial(jax.jit, static_argnames=("chunk", "block_n", "topo_binned"))
 def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                  a, beta, *, chunk=8, block_n=256, t0=0, slot_values=None,
-                 assoc=None, H_k=None):
+                 assoc=None, H_k=None, topo_binned=None):
     """Device-tiled fused rollout (see onalgo_step.onalgo_tiled_pallas):
     same results as ``onalgo_chunked`` with O(block_n * M) VMEM."""
     from repro.kernels.onalgo_step import onalgo_tiled_pallas
@@ -78,7 +80,8 @@ def onalgo_tiled(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab, B, H,
                                w_tab, B, H, a, beta, chunk=chunk,
                                block_n=block_n, t0=t0,
                                slot_values=slot_values, assoc=assoc,
-                               H_k=H_k, interpret=interpret_mode())
+                               H_k=H_k, topo_binned=topo_binned,
+                               interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))

@@ -90,11 +90,6 @@ def run_scenario(sc: Union[Scenario, CompiledScenario, str],
                 raise ValueError(
                     f"scenario kind {sc.scenario.kind!r} has no analytic "
                     "true_rho; run without with_true_rho")
-            if multi_cloudlet:
-                raise ValueError(
-                    "with_true_rho (the Theorem-1 series) assumes the "
-                    "scalar capacity dual; this scenario carries a "
-                    f"K={sc.topology.K} topology")
             kw = dict(true_rho=sc.true_rho, with_true_rho=True)
         # the single-slot fused kernel is scalar-mu only; 'auto' falls
         # back to the jnp slot step for multi-cloudlet scenarios

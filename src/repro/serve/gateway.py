@@ -58,7 +58,7 @@ from repro.core import onalgo
 from repro.core.onalgo import OnAlgoParams, StepRule
 from repro.serve.admission import quantize_states_device
 from repro.serve.engine import WaveBuckets
-from repro.topology import Topology
+from repro.topology import Topology, validate_topology
 
 
 def default_buckets(num_devices: int, base: int = 64) -> Tuple[int, ...]:
@@ -139,7 +139,18 @@ class GatewayCore:
                 raise ValueError(
                     f"topology association covers {topology.assoc.shape[-1]}"
                     f" devices, gateway serves N={self.N}")
-            self._assoc_np = np.asarray(topology.assoc, np.int32)
+            # full validation (H_k shape, id range) at construction — the
+            # tick would otherwise silently drop out-of-range load
+            validate_topology(topology, 0, self.N)
+            if topology.streaming:
+                # a streaming walk is never materialized: _slot_assoc
+                # regenerates one ROW_BLOCK-aligned block at a time and
+                # serves slots out of the cached block
+                self._assoc_np = None
+                self._assoc_blk = None
+                self._assoc_b0 = -1
+            else:
+                self._assoc_np = np.asarray(topology.assoc, np.int32)
         self.slots = 0  # host-side slot counter (== state.rho.t)
         self.stats = GatewayCoreStats()
         self._est_ms: dict = {}
@@ -202,11 +213,21 @@ class GatewayCore:
         if self.topology is None:
             return None, None
         if self.topology.time_varying:
-            if self.slots >= self._assoc_np.shape[0]:
+            horizon = self.topology.assoc.shape[0]
+            if self.slots >= horizon:
                 raise ValueError(
-                    f"time-varying association covers "
-                    f"{self._assoc_np.shape[0]} slots, gateway is at slot "
-                    f"{self.slots}")
+                    f"time-varying association covers {horizon} slots, "
+                    f"gateway is at slot {self.slots}")
+            if self.topology.streaming:
+                from repro.workload.streams import ROW_BLOCK
+                b0 = self.slots // ROW_BLOCK
+                if b0 != self._assoc_b0:
+                    L = min(ROW_BLOCK, horizon - b0 * ROW_BLOCK)
+                    self._assoc_blk = np.asarray(
+                        self.topology.assoc.slab(b0 * ROW_BLOCK, L))
+                    self._assoc_b0 = b0
+                return (self._assoc_blk[self.slots - b0 * ROW_BLOCK],
+                        self.topology.H_k)
             return self._assoc_np[self.slots], self.topology.H_k
         return self.topology.assoc, self.topology.H_k
 
@@ -506,6 +527,48 @@ def run_closed_loop(core: GatewayCore, loadgen, t0: int = 0,
     async def _run():
         async with LiveGateway(core, **gateway_kw) as gw:
             replies = await drive_closed_loop(gw, loadgen, t0, slots)
+            return replies, gw.stats
+
+    return asyncio.run(_run())
+
+
+async def drive_open_loop(gateway: LiveGateway, loadgen, rate_hz: float,
+                          t0: int = 0,
+                          slots: Optional[int] = None) -> list:
+    """Open-loop driver: submit one workload slot's wave every
+    ``1 / rate_hz`` seconds WITHOUT awaiting the previous decision —
+    devices report on their own clocks, oblivious to gateway backlog.
+
+    Below saturation this behaves like the closed loop with idle gaps;
+    past it the queue grows, slot-waves merge into bigger micro-batches,
+    and the SLO machinery sheds load (fallback waves / shed chunks)
+    instead of the wall clock stretching — sweep ``rate_hz`` to find the
+    saturation knee.  Replies resolve concurrently; the returned list is
+    in submission order.
+    """
+    loop = asyncio.get_running_loop()
+    period = 1.0 / float(rate_hz)
+    tasks = []
+    next_t = loop.time()
+    for wv in loadgen.waves(t0, slots):
+        now = loop.time()
+        if now < next_t:
+            await asyncio.sleep(next_t - now)
+        next_t += period
+        tasks.append(asyncio.ensure_future(
+            gateway.submit(wv.idx, wv.o, wv.h, wv.w)))
+    return list(await asyncio.gather(*tasks))
+
+
+def run_open_loop(core: GatewayCore, loadgen, rate_hz: float, t0: int = 0,
+                  slots: Optional[int] = None, **gateway_kw):
+    """Convenience sync wrapper around :func:`drive_open_loop`; returns
+    (replies, stats)."""
+
+    async def _run():
+        async with LiveGateway(core, **gateway_kw) as gw:
+            replies = await drive_open_loop(gw, loadgen, rate_hz, t0,
+                                            slots)
             return replies, gw.stats
 
     return asyncio.run(_run())

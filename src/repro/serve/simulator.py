@@ -160,7 +160,8 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                      engine: str = "scan", chunk: int = 16,
                      block_n: Optional[int] = None, mesh=None,
                      device_axis: str = "data", materialize: bool = True,
-                     slab: Optional[int] = None, topology=None) -> dict:
+                     slab: Optional[int] = None, topology=None,
+                     topo_binned: Optional[bool] = None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
@@ -201,6 +202,10 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
     bit for bit on every engine.  Build it with total capacity ``sim.H``
     (the builders split it over cloudlets) so the dual preconditioner
     and the K = 1 path stay consistent.
+
+    ``topo_binned``: reduction layout for the chunked kernels' in-kernel
+    per-cloudlet gathers/scatters (None = auto by K; see
+    ``fleet.simulate_chunked``).  Scan/sharded engines ignore it.
     """
     from repro.serve.compile import (compile_service,
                                      compile_service_streaming,
@@ -233,7 +238,7 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
                 cs.rule, chunk=chunk, slab=slab, block_n=block_n,
                 algo=sim.algo, enforce_slot_capacity=True,
-                topology=topology)
+                topology=topology, topo_binned=topo_binned)
         else:
             series, _ = simulate_sharded_stream(
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
@@ -254,7 +259,8 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                                      chunk=chunk, block_n=block_n,
                                      algo=sim.algo, overlay=cs.overlay,
                                      enforce_slot_capacity=True,
-                                     topology=topology)
+                                     topology=topology,
+                                     topo_binned=topo_binned)
     else:
         from repro.core.fleet import simulate_sharded
         series, _ = simulate_sharded(*cs.simulate_args(), cs.rule, mesh,

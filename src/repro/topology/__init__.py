@@ -12,6 +12,8 @@ cloudlet dual mu generalizes to a (K,) vector, each device priced by its
 current cloudlet's entry, with per-cloudlet capacity admission.
 """
 
-from repro.topology.topology import Topology, validate_topology
+from repro.topology.topology import (StreamingAssoc, Topology,
+                                     lower_mobility_walk, validate_topology)
 
-__all__ = ["Topology", "validate_topology"]
+__all__ = ["StreamingAssoc", "Topology", "lower_mobility_walk",
+           "validate_topology"]

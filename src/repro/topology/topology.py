@@ -50,6 +50,96 @@ def _capacities(K: int, H) -> jax.Array:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
+class StreamingAssoc:
+    """A mobility-walk association lowered to a slab-addressable form.
+
+    The materialized walk is a held-value process over counter-addressed
+    uniforms (:meth:`Topology.mobility_walk`); like the workload layer's
+    :class:`~repro.workload.streaming.StreamingWorkload`, it only needs
+    the held value *entering* each ROW_BLOCK-aligned block to regenerate
+    any slab ``[t0, t0 + length)`` from O(length * N) device work —
+    bit-identical to slicing the (T, N) materialization (integer holds,
+    no float re-association), so slab boundaries are unobservable.
+
+    Engines never see this class directly: a :class:`Topology` may carry
+    it in place of a dense ``assoc`` array and ``Topology.assoc_at``
+    dispatches here.  ``shape``/``ndim`` mimic the dense map so the
+    Topology accessors (``N``/``T``/``time_varying``) are unchanged.
+    """
+
+    entry: jax.Array  # (n_blocks, N) int32: held assoc entering block b
+    p_handover: jax.Array  # float32 scalar (traced)
+    seed: jax.Array  # int32 scalar — the counter streams' root
+    T: int = dataclasses.field(metadata={"static": True})
+    N: int = dataclasses.field(metadata={"static": True})
+    K: int = dataclasses.field(metadata={"static": True})
+
+    ndim = 2  # quacks like the (T, N) map it lowers
+
+    @property
+    def shape(self):
+        return (self.T, self.N)
+
+    def slab(self, t0, length: int) -> jax.Array:
+        """(length, N) association for slots [t0, t0 + length).
+
+        ``t0`` may be traced (the streaming engines slice a slab per
+        launch); ``length`` is static.  Requires t0 + length <= T.
+        """
+        from repro.workload import streams
+        RB = streams.ROW_BLOCK
+        nb = (length - 1) // RB + 2  # covers any offset within a block
+        b0 = t0 // RB
+        off = t0 - b0 * RB
+        u = streams.uniform_block_range(self.seed, streams.STREAM_TOPOLOGY,
+                                        b0, nb, self.N, 2)
+        change = u[0] < self.p_handover
+        cand = streams.levels_from_uniform(u[1], self.K)
+        entry_b = jax.lax.dynamic_index_in_dim(self.entry, b0,
+                                               keepdims=False)
+        assoc = streams.hold_resample_from(change, cand, entry_b)
+        return jax.lax.dynamic_slice_in_dim(
+            assoc, off, length, axis=0).astype(jnp.int32)
+
+
+def lower_mobility_walk(seed, K: int, N: int, T: int,
+                        p_handover) -> StreamingAssoc:
+    """Lower a mobility walk to streaming form (jitted boundary pass).
+
+    One scan over the horizon's ROW_BLOCK-aligned blocks records the
+    held association entering every block — O(ROW_BLOCK * N) transient
+    memory, never the (T, N) horizon.  The hold recurrence is integer-
+    exact, so slabs reproduce the materialized walk bit for bit.
+    """
+    from repro.workload import streams
+
+    @jax.jit
+    def lower(seed, p_handover):
+        RB = streams.ROW_BLOCK
+        n_blocks = -(-T // RB)
+        entry0 = (jnp.arange(N, dtype=jnp.int32) % K).astype(jnp.int32)
+
+        def block(carry, b):
+            u = streams.uniform_block_range(seed, streams.STREAM_TOPOLOGY,
+                                            b, 1, N, 2)
+            change = u[0] < p_handover
+            cand = streams.levels_from_uniform(u[1], K)
+            assoc_blk = streams.hold_resample_from(change, cand, carry)
+            return assoc_blk[-1].astype(jnp.int32), carry
+
+        _, entries = jax.lax.scan(
+            block, entry0, jnp.arange(n_blocks, dtype=jnp.uint32))
+        return entries
+
+    p_handover = jnp.float32(p_handover)
+    seed_arr = jnp.asarray(seed, jnp.int32)
+    return StreamingAssoc(entry=lower(seed_arr, p_handover),
+                          p_handover=p_handover, seed=seed_arr,
+                          T=T, N=N, K=K)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
 class Topology:
     """K cloudlets serving an N-device fleet.
 
@@ -80,21 +170,33 @@ class Topology:
         """Horizon of a time-varying association map (None when static)."""
         return self.assoc.shape[0] if self.time_varying else None
 
+    @property
+    def streaming(self) -> bool:
+        """True when the association is a slab-addressable walk."""
+        return isinstance(self.assoc, StreamingAssoc)
+
     def assoc_at(self, t0, length: int) -> jax.Array:
         """(length, N) association slab for slots [t0, t0 + length).
 
         ``t0`` may be traced (the streaming engines slice a slab per
-        launch); a static association broadcasts.
+        launch); a static association broadcasts; a streaming walk
+        regenerates the slab from its block boundary states.
         """
         if not self.time_varying:
             return jnp.broadcast_to(self.assoc, (length, self.N))
+        if self.streaming:
+            return self.assoc.slab(t0, length)
         return jax.lax.dynamic_slice_in_dim(self.assoc, t0, length, axis=0)
 
     def prefix(self, T: int) -> "Topology":
         """The topology restricted to slots [0, T) (autotune probes)."""
         if not self.time_varying or self.assoc.shape[0] == T:
             return self
-        return Topology(assoc=self.assoc[:T], H_k=self.H_k, K=self.K)
+        if self.streaming:
+            assoc = dataclasses.replace(self.assoc, T=T)
+        else:
+            assoc = self.assoc[:T]
+        return Topology(assoc=assoc, H_k=self.H_k, K=self.K)
 
     # --- builders ---------------------------------------------------------
 
@@ -127,7 +229,7 @@ class Topology:
 
     @staticmethod
     def mobility_walk(K: int, N: int, T: int, H, p_handover: float = 0.05,
-                      seed: int = 0) -> "Topology":
+                      seed: int = 0, streaming: bool = False) -> "Topology":
         """Time-varying association from a counter-addressed random walk.
 
         Each slot, each device hands over to a uniformly random cloudlet
@@ -136,7 +238,17 @@ class Topology:
         workload layer's v1 RNG contract, so the walk is reproducible,
         horizon-extensible, and fully on-device.  Initial placement is
         the deterministic round-robin of :meth:`uniform`.
+
+        ``streaming=True`` skips the (T, N) materialization and carries
+        a :class:`StreamingAssoc` instead — the same realization, block
+        boundary states only, with any slab regenerated on demand
+        bit-identical to the dense walk.  Peak memory drops from
+        O(T * N) to O(T / ROW_BLOCK * N).
         """
+        if streaming:
+            return Topology(
+                assoc=lower_mobility_walk(seed, K, N, T, p_handover),
+                H_k=_capacities(K, H), K=K)
         from repro.workload import streams
 
         u = streams.uniform_block(seed, streams.STREAM_TOPOLOGY, T, N, 2)
@@ -193,9 +305,20 @@ def validate_topology(topology, T: int, N: int) -> None:
     if topology.H_k.shape != (topology.K,):
         raise ValueError(
             f"H_k shape {topology.H_k.shape} != ({topology.K},)")
-    if not isinstance(topology.assoc, jax.core.Tracer):
-        lo = int(jnp.min(topology.assoc))
-        hi = int(jnp.max(topology.assoc))
+    if topology.streaming:
+        # slabs draw candidates in [0, K) by construction; the boundary
+        # states are the only stored ids, so checking them (plus the K
+        # consistency) covers the whole walk
+        if topology.assoc.K != topology.K:
+            raise ValueError(
+                f"streaming association draws over K={topology.assoc.K} "
+                f"cloudlets, topology has K={topology.K}")
+        ids = topology.assoc.entry
+    else:
+        ids = topology.assoc
+    if not isinstance(ids, jax.core.Tracer):
+        lo = int(jnp.min(ids))
+        hi = int(jnp.max(ids))
         if lo < 0 or hi >= topology.K:
             raise ValueError(
                 f"association ids must lie in [0, K={topology.K}); map "

@@ -11,7 +11,8 @@ from repro.core import fleet
 from repro.serve.compile import compile_service, compile_service_streaming
 from repro.serve.engine import Batcher, WaveBuckets
 from repro.serve.gateway import (GatewayCore, LiveGateway, default_buckets,
-                                 drive_closed_loop, run_closed_loop)
+                                 drive_closed_loop, run_closed_loop,
+                                 run_open_loop)
 from repro.serve.simulator import SimConfig, synthetic_pool
 from repro.topology import Topology
 from repro.workload.loadgen import ServiceLoadGen
@@ -131,6 +132,18 @@ class TestGatewayCore:
             core.tick(np.zeros((N + 1,), np.int32),
                       np.zeros(N + 1), np.zeros(N + 1), np.zeros(N + 1))
 
+    def test_invalid_topology_rejected_at_construction(self, streaming):
+        """Out-of-range association ids must fail when the core is
+        built, not as a silent gather clamp slots later."""
+        import jax.numpy as jnp
+        bad = Topology(assoc=jnp.full((N,), 3, jnp.int32),
+                       H_k=jnp.ones((2,), jnp.float32), K=2)
+        with pytest.raises(ValueError, match=r"\[0, K=2\)"):
+            GatewayCore.for_service(streaming, topology=bad)
+        wrong_n = Topology.uniform(2, N + 1, 4.0)
+        with pytest.raises(ValueError, match=f"covers {N + 1} devices"):
+            GatewayCore.for_service(streaming, topology=wrong_n)
+
 
 class TestLiveGateway:
     def test_soak_bounded_queue_and_bit_identity(self, batch, streaming):
@@ -226,6 +239,33 @@ class TestLiveGateway:
         replies, stats = asyncio.run(run())
         assert [r.t for r in replies] == list(range(40))
         assert stats.waves == 40 and stats.chunks == 40
+
+    def test_open_loop_below_saturation_serves_everything(self, streaming):
+        """run_open_loop at a modest offered rate with a generous SLO:
+        every submitted chunk gets a real decision (no shedding, no
+        fallback), slots advance monotonically, and the report count
+        matches the decisions the replies carry."""
+        core = GatewayCore.for_service(streaming)
+        lg = ServiceLoadGen(streaming)
+        slots = 32
+        replies, stats = run_open_loop(core, lg, rate_hz=200.0, t0=0,
+                                       slots=slots, slo_ms=120_000.0)
+        assert len(replies) == slots
+        assert stats.fallback_waves == 0 and stats.shed_chunks == 0
+        ts = [r.t for r in replies]
+        assert all(not r.fallback for r in replies)
+        assert ts == sorted(ts)  # micro-batched waves keep slot order
+        assert stats.reports == sum(r.offload.shape[0] for r in replies)
+        # overload at an absurd offered rate merges queued slot-waves
+        # into micro-batches: fewer waves than chunks, nothing lost
+        core2 = GatewayCore.for_service(streaming)
+        lg2 = ServiceLoadGen(streaming)
+        replies2, stats2 = run_open_loop(core2, lg2, rate_hz=1e6, t0=0,
+                                         slots=slots, slo_ms=120_000.0,
+                                         max_queue=slots)
+        assert len(replies2) == slots
+        assert stats2.chunks == slots
+        assert stats2.waves <= stats2.chunks
 
 
 class TestWaveBuckets:

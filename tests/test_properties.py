@@ -181,6 +181,57 @@ class TestTopologyK1Properties:
                                           err_msg=name)
 
 
+class TestSegmentedAdmissionProperties:
+    """The O(N log N) sort-based segmented admission must reproduce the
+    O(N * K) one-hot oracle BIT FOR BIT whenever every cloudlet's
+    running load is fp-exact — integer-valued fp32 cycle costs with
+    small prefix sums make every summation order exact, so the test
+    covers exact capacity ties, empty cloudlets, zero-capacity
+    cloudlets, and K > N without tolerance."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), K=st.integers(1, 24),
+           N=st.integers(1, 48), smallest=st.booleans())
+    def test_segmented_matches_onehot_bitwise(self, seed, K, N, smallest):
+        from repro.core.baselines import (admit_by_capacity_topo,
+                                          admit_by_capacity_topo_onehot)
+        rng = np.random.default_rng(seed)
+        h = rng.integers(0, 8, N).astype(np.float32)
+        Hk = rng.integers(0, 24, K).astype(np.float32)
+        assoc = rng.integers(0, K, N).astype(np.int32)
+        off = jnp.asarray(rng.random(N) < 0.7)
+        args = (off, jnp.asarray(h), jnp.asarray(assoc), jnp.asarray(Hk),
+                smallest)
+        got = admit_by_capacity_topo(*args)
+        ref = admit_by_capacity_topo_onehot(*args)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        # admission never invents an offloader
+        assert bool(jnp.all(~got | off))
+
+
+class TestStreamingAssocProperties:
+    """``mobility_walk(streaming=True)`` slabs must be bit-equal to the
+    materialized walk at every offset — including slabs that start
+    mid-block and span ROW_BLOCK boundaries (the boundary-state resume
+    path)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(T=st.sampled_from([64, 65, 127, 128, 200, 256]),
+           t0=st.integers(0, 255), L=st.integers(1, 96),
+           K=st.sampled_from([2, 5, 16]), seed=st.integers(0, 99))
+    def test_assoc_slab_matches_materialized_walk(self, T, t0, L, K, seed):
+        from repro.topology import Topology
+        N = 6
+        t0 = min(t0, T - 1)
+        L = min(L, T - t0)
+        kw = dict(H=1e9, p_handover=0.1, seed=seed)
+        dense = Topology.mobility_walk(K, N, T, **kw)
+        stream = Topology.mobility_walk(K, N, T, streaming=True, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(stream.assoc_at(t0, L)),
+            np.asarray(dense.assoc_at(t0, L)))
+
+
 class TestShardingProperties:
     @settings(max_examples=50, deadline=None)
     @given(dim=st.integers(1, 4096))

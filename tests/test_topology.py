@@ -95,6 +95,25 @@ class TestBuilders:
         with pytest.raises(ValueError, match=r"\[0, K=2\)"):
             validate_topology(bad, 10, 8)
 
+    def test_validate_topology_streaming_errors(self):
+        """Streaming walks are validated through their boundary states:
+        corrupt entry associations and K mismatches fail fast instead of
+        clamping inside a gather slots later."""
+        import dataclasses
+        sw = Topology.mobility_walk(2, 8, 64, H=4.0, p_handover=0.1,
+                                    seed=5, streaming=True)
+        validate_topology(sw, 64, 8)  # the healthy walk passes
+        corrupt = dataclasses.replace(
+            sw, assoc=dataclasses.replace(
+                sw.assoc, entry=jnp.full_like(sw.assoc.entry, 5)))
+        with pytest.raises(ValueError, match=r"\[0, K=2\)"):
+            validate_topology(corrupt, 64, 8)
+        mismatched = dataclasses.replace(sw, K=3, H_k=jnp.ones((3,)))
+        with pytest.raises(ValueError, match="draws over K=2"):
+            validate_topology(mismatched, 64, 8)
+        with pytest.raises(ValueError, match="covers 64"):
+            validate_topology(sw, 100, 8)
+
     def test_longer_assoc_map_runs_on_every_engine(self):
         """A mobility walk covering MORE slots than the rollout (maps
         are horizon-extensible) must run on the scan and sharded
@@ -382,13 +401,33 @@ class TestServiceTopology:
             simulate(trace, tables, params, rule, topology=topo,
                      use_kernel=True)
 
-    def test_true_rho_with_topology_rejected(self):
-        trace, tables, params, rule = _problem(N=6, T=24)
+    def test_true_rho_per_cloudlet_series(self):
+        """with_true_rho under K > 1: the Theorem-1 series carries K
+        capacity rows, they decompose the fleet load, and the violation
+        bound holds with the K-row sigma_g."""
+        from repro.core import theory
+        trace, tables, params, rule = _problem(N=6, T=200)
+        M = tables[0].shape[-1]
+        rho = jnp.full((6, M), 1.0 / M, jnp.float32)
         topo = Topology.uniform(2, 6, params.H)
-        with pytest.raises(ValueError, match="with_true_rho"):
-            simulate(trace, tables, params, rule, topology=topo,
-                     with_true_rho=True,
-                     true_rho=jnp.zeros((6, tables[0].shape[0])))
+        s, fin = simulate(trace, tables, params, rule, topology=topo,
+                          with_true_rho=True, true_rho=rho)
+        s0, _ = simulate(trace, tables, params, rule,
+                         with_true_rho=True, true_rho=rho)
+        assert np.asarray(s["g_cap"]).shape == (200, 2)
+        # duals start at zero, so slot 0's policy matches the scalar
+        # run's; H_k sums to H, so the K rows decompose the scalar row
+        np.testing.assert_allclose(
+            np.asarray(s["g_cap"])[0].sum(),
+            np.asarray(s0["g_cap"])[0], rtol=1e-5, atol=1e-6)
+        # Theorem 1(b) with the per-cloudlet capacity rows
+        sg = theory.sigma_g(tables, params.B, params.H, 6,
+                            H_k=np.asarray(topo.H_k))
+        lam_fin = float(np.sqrt(np.sum(np.asarray(fin.lam) ** 2)
+                                + np.sum(np.asarray(fin.mu) ** 2)))
+        terms = theory.theorem1_terms(s, lam_fin, 0.5, 0.5, sg)
+        assert (theory.positive_violation(s)
+                <= terms["viol_bound"] + 1e-6)
 
     def test_autotune_carries_topology(self):
         """autotune(topology=...) probes the K-vector kernels and its
