@@ -2,29 +2,46 @@
 
 Drives fig5-style end-to-end service runs (OnAlgo, synthetic pool,
 per-slot cloudlet admission) at fleet sizes far beyond the paper's
-testbed — N in {10^4, 10^5, 3*10^5} — through the STREAMING chunked
-engine (``simulate_service(engine="chunked", materialize=False)``):
+testbed — N up to 10^6 — through the STREAMING chunked engine:
 workload slabs are generated on device from counters inside the engine
 loop, so peak memory is O(slab * N) + O(N * M) state, independent of
-the horizon.  Emitted columns per N:
+the horizon.  Each N is measured through BOTH walk modes of the engine:
+
+  * ``sequential`` — the reference per-slab host loop (generate, roll,
+    fold the series part on host);
+  * ``pipelined``  — the fused-launch runtime (generation + Pallas
+    rollout + accounting in one donated-carry dispatch per slab,
+    series written into device-resident buffers, no host sync in the
+    loop), bit-identical to sequential by contract.
+
+Both modes share one ``StreamingService`` and one autotuned
+(chunk, block_n), so the comparison isolates the runtime.  Emitted
+columns per (N, mode):
 
   * fig5-style metrics (accuracy / offload fraction / power per device);
   * slots/sec device-slot throughput and wall-clock per slot;
-  * measured peak device bytes (``benchmarks.common.PeakTracker``) next
-    to the O(T * N) bytes the materialized lowering would need — the
-    materialized run itself only executes while its arrays fit under
-    ``MATERIALIZE_BYTE_CAP`` (it would OOM CI above that) and is emitted
-    as ``skipped`` otherwise;
+  * measured peak device bytes (``benchmarks.common.PeakTracker`` —
+    the pipelined runs force the live-arrays sampler: donation aliases
+    buffers, so allocator deltas under-count; the sampler mode rides
+    in the row) next to the O(T * N) bytes the materialized lowering
+    would need — the materialized run itself only executes while its
+    arrays fit under ``MATERIALIZE_BYTE_CAP`` (it would OOM CI above
+    that) and is emitted as ``skipped`` otherwise;
   * the ``fleet.autotune`` pick for (chunk, block_n) from a short probe.
 
 Horizons scale down as N grows (fig5's T=2500 is a *convergence*
 horizon; throughput and memory scaling need only a few hundred slots),
-keeping the whole sweep CI-sized.
+keeping the whole sweep CI-sized.  The N=10^6 point is heavy and runs
+only under ``BENCH_FLEET_FULL=1`` (its trajectory rows are committed
+from a full local run).
 """
 
 from __future__ import annotations
 
+import os
 import time
+
+import jax
 
 from benchmarks.common import PeakTracker, emit
 from benchmarks.trajectory import make_row
@@ -39,6 +56,8 @@ MATERIALIZE_BYTE_CAP = 3.0e8
 
 # Streaming slab: 64 slots = one ROW_BLOCK of on-device generation per
 # slab and a multiple of every probed chunk; peak memory ~ SLAB * N.
+# Block alignment also routes the pipelined walk through the aligned
+# slab source (one covering uniform block per slab instead of two).
 SLAB = 64
 
 
@@ -60,54 +79,111 @@ def _materialized_bytes(N: int, T: int) -> int:
     return T * N * 4 * 7
 
 
-def _run_streaming(N: int, pool):
-    """One streaming-engine config: autotuned, warmed, timed, peak-
-    tracked — shared by the CSV bench and the trajectory rows."""
-    T = _horizon(N)
-    sim = _sim(N, T)
-    cs = compile_service_streaming(sim, pool)
-    tune = fleet.autotune(cs.tables, cs.params, cs.rule,
-                          source=cs.slab, T=T, N=N, chunks=(8, 16),
-                          probe_slots=32, slab=SLAB, repeats=1)
-    kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
-                  chunk=tune.chunk, block_n=tune.block_n)
-    with PeakTracker() as peak:
-        simulate_service(sim, pool, **kwargs)  # warm the jits
-        t0 = time.perf_counter()
-        out = simulate_service(sim, pool, **kwargs)
-        dt = time.perf_counter() - t0
-    return sim, out, dt, peak.peak_bytes, tune
+class _ScaleRun:
+    """One N's compiled service + tune, measured through both walk modes.
+
+    A single ``StreamingService`` backs every measurement: the pipelined
+    runtime's fused-step jit cache is keyed on the source instance, so
+    warm and timed runs (and the sequential rival) must share it for the
+    timings to be steady-state.
+    """
+
+    def __init__(self, N: int, pool):
+        self.N = N
+        self.T = _horizon(N)
+        self.sim = _sim(N, self.T)
+        self.cs = compile_service_streaming(self.sim, pool)
+        self.tune = fleet.autotune(
+            self.cs.tables, self.cs.params, self.cs.rule,
+            source=self.cs.slab, T=self.T, N=N, chunks=(8, 16),
+            probe_slots=32, slab=SLAB, repeats=1)
+
+    def measure(self, pipelined: bool):
+        """(metrics, seconds, peak_bytes, peak_mode) for one walk mode:
+        warmed, timed, peak-tracked.  Donated-buffer (pipelined) runs
+        force the live-arrays sampler — see PeakTracker."""
+        from repro.serve.compile import service_metrics
+
+        cs = self.cs
+
+        def run():
+            series, _ = fleet.simulate_chunked_stream(
+                cs.slab, self.T, self.N, cs.tables, cs.params, cs.rule,
+                chunk=self.tune.chunk, slab=SLAB,
+                block_n=self.tune.block_n, algo=self.sim.algo,
+                enforce_slot_capacity=True, pipelined=pipelined,
+                source_aligned=cs.slab_aligned)
+            return series
+
+        mode = "live_arrays" if pipelined else "auto"
+        with PeakTracker(mode=mode) as peak:
+            jax.block_until_ready(run())  # warm the jits
+            t0 = time.perf_counter()
+            series = run()
+            jax.block_until_ready(series)  # one final transfer/sync
+            dt = time.perf_counter() - t0
+        return service_metrics(self.sim, series), dt, peak.peak_bytes, peak.mode
 
 
-def trajectory_rows(pr: int, Ns=(10_000,)) -> list:
+def trajectory_rows(pr: int, Ns=(10_000, 100_000)) -> list:
     """Fast-config rows for the committed BENCH_fleet_scale.json
     trajectory (p99_ms is null: the batch engine has no per-wave
-    latency — devslots/sec is the gate metric)."""
+    latency — devslots/sec is the gate metric).
+
+    Each N >= 10^5 lands two rows — ``N<n>`` (sequential) and
+    ``N<n>_pipelined`` carrying ``must_beat=N<n>``, so the gate fails
+    whenever the pipelined runtime measures slower than the sequential
+    walk it replaces.  ``BENCH_FLEET_FULL=1`` adds the N=10^6 pair.
+    """
+    if os.environ.get("BENCH_FLEET_FULL") and 1_000_000 not in Ns:
+        Ns = tuple(Ns) + (1_000_000,)
     pool = synthetic_pool()
     rows = []
     for N in Ns:
-        sim, out, dt, peak_bytes, tune = _run_streaming(N, pool)
+        run = _ScaleRun(N, pool)
+        out, dt, peak_bytes, peak_mode = run.measure(pipelined=False)
+        common = dict(chunk=run.tune.chunk, slots=run.sim.T)
         rows.append(make_row(
-            pr, "fleet_scale", f"N{N}", N * sim.T / dt, None, peak_bytes,
-            chunk=tune.chunk, accuracy=round(out["accuracy"], 4),
-            slots=sim.T))
+            pr, "fleet_scale", f"N{N}", N * run.sim.T / dt, None,
+            peak_bytes, accuracy=round(out["accuracy"], 4),
+            peak_mode=peak_mode, **common))
+        if N < 100_000:
+            continue  # N10000 stays the single-row continuity config
+        out_p, dt_p, peak_p, mode_p = run.measure(pipelined=True)
+        assert abs(out_p["accuracy"] - out["accuracy"]) < 1e-9, (
+            out_p["accuracy"], out["accuracy"])
+        rows.append(make_row(
+            pr, "fleet_scale", f"N{N}_pipelined", N * run.sim.T / dt_p,
+            None, peak_p, accuracy=round(out_p["accuracy"], 4),
+            peak_mode=mode_p, must_beat=f"N{N}", **common))
     return rows
 
 
 def bench_fleet_scale(Ns=(10_000, 100_000, 300_000)):
+    if os.environ.get("BENCH_FLEET_FULL"):
+        Ns = tuple(Ns) + (1_000_000,)
     pool = synthetic_pool()
     for N in Ns:
-        sim, out, dt, peak_bytes, tune = _run_streaming(N, pool)
-        T = sim.T
+        run = _ScaleRun(N, pool)
+        T, sim, tune = run.T, run.sim, run.tune
         mat_bytes = _materialized_bytes(N, T)
-        emit(f"fleet_scale/N={N}/T={T}/streaming", dt * 1e6 / T,
-             f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
-             f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
-             f"devslots_per_s={N * T / dt:.0f};"
-             f"peak_mb={peak_bytes / 1e6:.0f};"
-             f"materialized_mb={mat_bytes / 1e6:.0f};"
-             f"materialized_fig5_mb={_materialized_bytes(N, 2500) / 1e6:.0f};"
-             f"chunk={tune.chunk};block_n={tune.block_n}")
+        results = {}
+        for mode_name, pipelined in (("streaming", False),
+                                     ("pipelined", True)):
+            out, dt, peak_bytes, peak_mode = run.measure(pipelined)
+            results[mode_name] = out
+            emit(f"fleet_scale/N={N}/T={T}/{mode_name}", dt * 1e6 / T,
+                 f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+                 f"power_mW={out['avg_power_per_dev'] * 1e3:.2f};"
+                 f"devslots_per_s={N * T / dt:.0f};"
+                 f"peak_mb={peak_bytes / 1e6:.0f};peak_mode={peak_mode};"
+                 f"materialized_mb={mat_bytes / 1e6:.0f};"
+                 f"materialized_fig5_mb="
+                 f"{_materialized_bytes(N, 2500) / 1e6:.0f};"
+                 f"chunk={tune.chunk};block_n={tune.block_n}")
+        # the pipelined runtime's non-negotiable contract
+        assert abs(results["pipelined"]["accuracy"]
+                   - results["streaming"]["accuracy"]) < 1e-9, results
 
         if mat_bytes <= MATERIALIZE_BYTE_CAP:
             with PeakTracker() as peak_m:
@@ -119,8 +195,9 @@ def bench_fleet_scale(Ns=(10_000, 100_000, 300_000)):
                                        block_n=tune.block_n)
                 dt_m = time.perf_counter() - t0
             # same chunk => the two paths must agree exactly
-            assert abs(ref["accuracy"] - out["accuracy"]) < 1e-9, (
-                ref["accuracy"], out["accuracy"])
+            assert abs(ref["accuracy"]
+                       - results["streaming"]["accuracy"]) < 1e-9, (
+                ref["accuracy"], results["streaming"]["accuracy"])
             emit(f"fleet_scale/N={N}/T={T}/materialized", dt_m * 1e6 / T,
                  f"acc={ref['accuracy']:.4f};"
                  f"devslots_per_s={N * T / dt_m:.0f};"

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 
@@ -9,6 +10,24 @@ import jax
 import numpy as np
 
 ROWS = []
+
+
+def jitter_env() -> dict:
+    """Which host-jitter knobs are active in this process.
+
+    The CI bench jobs (and operators chasing p99) can preload tcmalloc
+    and pin XLA's step-marker placement; neither changes results, both
+    change timings — so every bench row records what was live when it
+    was measured, and rows from differently-tuned hosts never get
+    compared as like-for-like.
+
+      tcmalloc:  True when a tcmalloc build is in LD_PRELOAD.
+      xla_flags: the raw XLA_FLAGS string ("" when unset).
+    """
+    return {
+        "tcmalloc": "tcmalloc" in os.environ.get("LD_PRELOAD", ""),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -49,36 +68,61 @@ def live_bytes() -> int:
 class PeakTracker:
     """Peak device-memory tracker around a benchmark region.
 
-    A daemon thread samples current usage — the backend's
-    ``memory_stats()['bytes_in_use']`` where kept (TPU/GPU), summed
-    ``jax.live_arrays()`` otherwise (CPU) — and records the region max.
+    A daemon thread samples current usage and records the region max.
     (The backends' ``peak_bytes_in_use`` is a process-lifetime
     high-water mark, useless for a region that isn't the process's
     biggest so far; sampling sidesteps that.)  Peak is good to the
     sampling interval, which is plenty to tell O(chunk * N) from
     O(T * N).
 
+    ``mode`` picks the sampler — and is recorded on the instance so
+    bench rows can flag which one produced the number:
+
+      "auto"         ``memory_stats()['bytes_in_use']`` where the
+                     backend keeps it (TPU/GPU), summed
+                     ``jax.live_arrays()`` otherwise (CPU).
+      "live_arrays"  force the live-arrays sampler.  REQUIRED for
+                     donated-buffer (pipelined) regions: donation
+                     aliases input to output buffers, so an
+                     allocator-side bytes_in_use delta under-counts the
+                     working set the run actually holds live — the
+                     live-arrays walk values every array the program
+                     can still reach, honestly.
+      "memory_stats" force the allocator counter (raises at first
+                     sample if the backend doesn't keep one).
+
     Usage::
 
-        with PeakTracker() as peak:
-            run()
-        print(peak.peak_bytes)
+        with PeakTracker(mode="live_arrays") as peak:
+            run_pipelined()
+        print(peak.peak_bytes, peak.mode)
     """
 
-    def __init__(self, interval: float = 0.005):
+    def __init__(self, interval: float = 0.005, mode: str = "auto"):
+        if mode not in ("auto", "live_arrays", "memory_stats"):
+            raise ValueError(f"unknown PeakTracker mode {mode!r}")
         self.interval = interval
+        self.mode = mode
         self.peak_bytes = 0
         self._stop = threading.Event()
         self._thread = None
 
-    @staticmethod
-    def _current_bytes() -> int:
-        try:
-            stats = jax.local_devices()[0].memory_stats() or {}
-            if "bytes_in_use" in stats:
-                return int(stats["bytes_in_use"])
-        except Exception:
-            pass
+    def _current_bytes(self) -> int:
+        if self.mode != "live_arrays":
+            try:
+                stats = jax.local_devices()[0].memory_stats() or {}
+                if "bytes_in_use" in stats:
+                    if self.mode == "auto":
+                        self.mode = "memory_stats"  # record what we used
+                    return int(stats["bytes_in_use"])
+            except Exception:
+                if self.mode == "memory_stats":
+                    raise
+            if self.mode == "memory_stats":
+                raise RuntimeError(
+                    "PeakTracker(mode='memory_stats'): backend keeps no "
+                    "bytes_in_use counter")
+            self.mode = "live_arrays"
         return live_bytes()
 
     def _sample(self):

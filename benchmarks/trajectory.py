@@ -54,6 +54,13 @@ def flatten(prefix: str, d: dict) -> dict:
 
 def make_row(pr: int, bench: str, config: str, devslots_per_sec: float,
              p99_ms: Optional[float], peak_bytes: int, **extra) -> dict:
+    """One trajectory row.  The host-jitter knobs active when the number
+    was measured (``env/tcmalloc``, ``env/xla_flags``) ride along
+    automatically so differently-tuned hosts are visible in the history;
+    ``extra`` may also carry ``must_beat=<config>`` — a same-bench,
+    same-run ordering the gate enforces (see :func:`check_rows`)."""
+    from benchmarks.common import jitter_env
+
     row = {
         "pr": int(pr),
         "bench": str(bench),
@@ -62,6 +69,7 @@ def make_row(pr: int, bench: str, config: str, devslots_per_sec: float,
         "p99_ms": None if p99_ms is None else float(p99_ms),
         "peak_bytes": int(peak_bytes),
     }
+    row.update(flatten("env", jitter_env()))
     row.update(flatten("", extra))
     return row
 
@@ -116,28 +124,55 @@ def check_rows(current: List[dict],
     Returns (failures, lines): ``failures`` is the list of regressed
     rows; ``lines`` a human-readable comparison report.  A config with
     no committed baseline passes (first recording).
+
+    Two rules:
+
+      * trajectory: devslots/sec must not drop more than ``threshold``
+        below the latest committed row for the same (bench, config);
+      * ordering: a row carrying ``must_beat=<config>`` must measure at
+        least that config's devslots/sec FROM THE SAME RUN — e.g. the
+        pipelined streaming engine must never be slower than the
+        sequential walk it replaces (both numbers come from one host,
+        one process, so the comparison is jitter-fair).
     """
     lines = [f"bench gate: threshold {threshold:.0%} devslots/sec "
              f"regression"]
     failures = []
     baselines = {b: latest_baseline(load_rows(bench_path(b)))
                  for b in {r["bench"] for r in current}}
+    by_key = {(r["bench"], r["config"]): r for r in current}
     for row in current:
         base = baselines[row["bench"]].get(row["config"])
         tag = f"{row['bench']}/{row['config']}"
+        now = row["devslots_per_sec"]
         if base is None:
             lines.append(f"  {tag}: no committed baseline — recording "
-                         f"run ({row['devslots_per_sec']:.0f} devslots/s)")
-            continue
-        now, ref = row["devslots_per_sec"], base["devslots_per_sec"]
-        ratio = now / ref if ref > 0 else float("inf")
-        verdict = "OK"
-        if ratio < 1.0 - threshold:
-            verdict = "FAIL"
-            failures.append(row)
-        lines.append(
-            f"  {tag}: {now:.0f} vs baseline {ref:.0f} devslots/s "
-            f"(x{ratio:.2f}, pr {base['pr']}) {verdict}")
+                         f"run ({now:.0f} devslots/s)")
+        else:
+            ref = base["devslots_per_sec"]
+            ratio = now / ref if ref > 0 else float("inf")
+            verdict = "OK"
+            if ratio < 1.0 - threshold:
+                verdict = "FAIL"
+                failures.append(row)
+            lines.append(
+                f"  {tag}: {now:.0f} vs baseline {ref:.0f} devslots/s "
+                f"(x{ratio:.2f}, pr {base['pr']}) {verdict}")
+        rival_cfg = row.get("must_beat")
+        if rival_cfg:
+            rival = by_key.get((row["bench"], rival_cfg))
+            if rival is None:
+                failures.append(row)
+                lines.append(f"  {tag}: must_beat {rival_cfg!r} but that "
+                             f"config is not in this run FAIL")
+            else:
+                ref = rival["devslots_per_sec"]
+                verdict = "OK" if now >= ref else "FAIL"
+                if verdict == "FAIL":
+                    failures.append(row)
+                lines.append(
+                    f"  {tag}: {now:.0f} must beat {rival_cfg} "
+                    f"{ref:.0f} devslots/s (same run) {verdict}")
     lines.append("bench gate: " + ("FAILED" if failures else "passed"))
     return failures, lines
 

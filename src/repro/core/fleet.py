@@ -581,14 +581,150 @@ def _cat_series(parts):
     return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
 
 
+# The pipelined streaming runtime turns on automatically at fleet sizes
+# where the per-slab host round-trip (one jit call for generation, one
+# for the kernel, ~10 eager accounting dispatches, a Python list append)
+# costs more than the one-off trace+compile of the fused slab step.
+_PIPELINE_AUTO_N = 65536
+
+
+class _StaticSource:
+    """Identity-hashed wrapper making any slab source a valid jit static.
+
+    The fused slab step closes over nothing: the source callable enters
+    ``_pipelined_slab_step`` as a STATIC argument so every slab of a run
+    — and every later run over the same source object — reuses one
+    compiled executable.  Bound methods are re-created on each attribute
+    access (``svc.slab is svc.slab`` is False) and may hang off
+    unhashable instances, so the cache key is ``(__func__,
+    id(__self__))``; the jit cache keeps the wrapper (hence the bound
+    instance) alive, so the id cannot be recycled while the entry lives.
+    """
+
+    __slots__ = ("fn", "_key")
+
+    def __init__(self, fn):
+        self.fn = fn
+        bound = getattr(fn, "__self__", None)
+        self._key = ((fn.__func__, id(bound)) if bound is not None
+                     else (fn, None))
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return (isinstance(other, _StaticSource)
+                and self._key == other._key)
+
+    def __call__(self, t0, length):
+        return self.fn(t0, length)
+
+
+def _stream_series_buffers(length: int, topology: Optional[Topology],
+                           has_overlay: bool) -> dict:
+    """Preallocated device-resident series buffers for a streaming run.
+
+    One (length,) float32 buffer per series key (``mu_k`` is
+    (length, K)); the fused slab steps write each slab's accounting into
+    them with ``dynamic_update_slice`` so no per-slab part ever reaches
+    the host — the whole dict transfers once, at the end of the run.
+    Key set mirrors :func:`_series_from_offloads` exactly (a mismatch
+    fails loudly at trace time in the slab step's update).
+    """
+    keys = ["reward", "power", "power_per_dev", "load", "offloads",
+            "admits", "tasks", "lam_norm", "mu"]
+    bufs = {k: jnp.zeros((length,), jnp.float32) for k in keys}
+    if topology is not None:
+        bufs["mu_k"] = jnp.zeros((length, topology.K), jnp.float32)
+    if has_overlay:
+        bufs["correct"] = jnp.zeros((length,), jnp.float32)
+    return bufs
+
+
+def _write_series(bufs: dict, part: dict, at) -> dict:
+    """Write one slab's series ``part`` into the run buffers at ``at``
+    (traced offset).  Works traced (inside the fused step) and eager
+    (folding the jnp tail after the loop)."""
+    return {k: jax.lax.dynamic_update_slice_in_dim(
+        bufs[k], part[k].astype(bufs[k].dtype), at, axis=0)
+        for k in bufs}
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("enforce",))
+def _stream_acct(bufs, off, j_slab, overlay, mu_seq, lnorm, t0, tables,
+                 params, topology, *, enforce: bool):
+    """The device-resident accounting half of a pipelined SHARDED walk.
+
+    The shard_map rollout stays its own launch — fusing a jnp scan into
+    a larger jit lets XLA re-associate its arithmetic (the lam-norm
+    sqrt picks up an FMA), which would break the bit-identity contract
+    with the sequential walk — so only the accounting post-pass and the
+    series-buffer writes ride this donated-carry dispatch.  (The
+    chunked engine has no such hazard: its rollout is an opaque Pallas
+    call XLA cannot fuse into, so :func:`_pipelined_slab_step` fuses
+    generation + rollout + accounting into one launch.)
+    """
+    part = _series_from_offloads(j_slab, off, tables, params, mu_seq,
+                                 lnorm, overlay, enforce,
+                                 topology=topology, t0=t0)
+    return _write_series(bufs, part, t0)
+
+
+@partial(jax.jit,
+         static_argnames=("src", "L", "chunk", "block_n",
+                          "enforce_slot_capacity", "topo_binned"),
+         donate_argnums=(0,))
+def _pipelined_slab_step(carry, t0, t_buf, tables, params, rule, topology,
+                         *, src, L, chunk, block_n,
+                         enforce_slot_capacity, topo_binned):
+    """One fused launch of the pipelined chunked stream: slab generation
+    (+ assoc slab + overlay gathers), the Pallas rollout, and the
+    device-resident accounting, in a single jitted call.
+
+    The carried ``(lam, mu, counts, series_buffers)`` tuple is DONATED:
+    shapes are loop-invariant, so steady state reuses the same device
+    buffers launch after launch and allocates nothing.  ``t0`` (global
+    slot) and ``t_buf`` (buffer write offset, differs when resuming from
+    t0 > 0) are traced — every slab of a run shares this one compile.
+    The host loop never touches the outputs, so slab t+1's launch is
+    enqueued while slab t is still executing (double-buffered dispatch).
+    """
+    from repro.kernels import ops as kops
+
+    lam, mu, counts, bufs = carry
+    j_slab, overlay = src(t0, L)
+    o_tab, h_tab, w_tab = tables
+    o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(o_tab, h_tab,
+                                                        params)
+    sv = (None if overlay is None
+          else _overlay_slot_values(overlay, params))
+    topo_k = _topo_duals(topology)
+    topo_kw = {}
+    if topo_k is not None:
+        H_k_eff = (topo_k.H_k / params.H if params.precondition
+                   else topo_k.H_k)
+        topo_kw = dict(assoc=(topo_k.assoc_at(t0, L)
+                              if topo_k.time_varying else topo_k.assoc),
+                       H_k=H_k_eff, topo_binned=topo_binned)
+    kern = (kops.onalgo_chunked if block_n is None
+            else partial(kops.onalgo_tiled, block_n=block_n))
+    off, mu_seq, lnorm, lam, mu, counts = kern(
+        j_slab, lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
+        rule.a, rule.beta, chunk=chunk, t0=t0, slot_values=sv, **topo_kw)
+    part = _series_from_offloads(j_slab, off, tables, params, mu_seq,
+                                 lnorm, overlay, enforce_slot_capacity,
+                                 topology=topology, t0=t0)
+    return lam, mu, counts, _write_series(bufs, part, t_buf)
+
+
 def _stream_trivial(source, T: int, N: int, slab: int, tables,
                     params: OnAlgoParams, algo: str,
                     enforce_slot_capacity: bool,
-                    topology: Optional[Topology] = None):
+                    topology: Optional[Topology] = None, start: int = 0):
     """local / cloud policies over a streamed workload: stateless, so the
     rollout is just per-slab accounting."""
     parts = []
-    for t0 in range(0, T, slab):
+    for t0 in range(start, T, slab):
         L = min(slab, T - t0)
         j_slab, overlay = source(t0, L)
         off, mu_seq, lnorm, final = _trivial_policy_rollout(j_slab, algo)
@@ -606,7 +742,10 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
                             algo: str = "onalgo",
                             enforce_slot_capacity: bool = False,
                             topology: Optional[Topology] = None,
-                            topo_binned: Optional[bool] = None):
+                            topo_binned: Optional[bool] = None,
+                            pipelined: Optional[bool] = None,
+                            source_aligned=None, t0: int = 0,
+                            state0=None):
     """The chunked engine over a *streamed* workload: no (T, N) horizon.
 
     ``source(t0, length)`` yields slots [t0, t0 + length) of the
@@ -625,6 +764,27 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
     the same fp32 state and the same slab values (counter-addressed
     draws are slab-invariant), so the rollout is bit-equal.
 
+    ``pipelined`` selects the PIPELINED runtime (default: automatic at
+    N >= 65536): slab generation, the kernel, and the accounting fuse
+    into ONE jitted launch per slab (:func:`_pipelined_slab_step`) with
+    the carried duals/rho/series buffers donated, per-slab series
+    written device-resident via ``dynamic_update_slice``, and no host
+    sync inside the loop, so slab t+1 is enqueued while slab t executes.
+    Results are bit-identical to the sequential walk (property-tested);
+    the trade is one fused compile per distinct (source, slab length).
+
+    ``source_aligned``, when given, is a source producing the same slabs
+    from fewer covering ROW_BLOCK blocks when ``t0`` is ROW_BLOCK-
+    aligned (e.g. ``StreamingService.slab_aligned``); the pipelined
+    runtime uses it for the main slabs whenever the (start, slab) pair
+    keeps every launch aligned.
+
+    ``t0`` / ``state0`` resume the rollout mid-horizon: slots
+    [t0, T) are rolled starting from ``state0`` (an ``OnAlgoState``
+    whose ``rho.t`` must equal ``t0``) and the returned series covers
+    exactly those T - t0 slots.  Bit-identical to the same span of a
+    full run — slab and chunk boundaries are unobservable.
+
     Returns the standard ``(series, final_state)`` contract.
     """
     from repro.kernels import ops as kops
@@ -637,14 +797,77 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
         raise ValueError(f"slab={slab} must be a multiple of chunk={chunk}")
     validate_topology(topology, T, N)
     topo_k = _topo_duals(topology)
+    start = int(t0)
+    if not 0 <= start < max(T, 1):
+        raise ValueError(f"resume t0={start} outside horizon [0, {T})")
+    if pipelined is None:
+        pipelined = N >= _PIPELINE_AUTO_N
 
     if algo in ("local", "cloud"):
         return _stream_trivial(source, T, N, slab, tables, params, algo,
-                               enforce_slot_capacity, topology=topology)
+                               enforce_slot_capacity, topology=topology,
+                               start=start)
     if algo != "onalgo":
         raise ValueError("the chunked streaming engine rolls OnAlgo (plus "
                          "the stateless local/cloud policies); got "
                          f"{algo!r}")
+
+    if state0 is not None:
+        # copies: the pipelined steps donate their carry, and the caller
+        # keeps its resume state
+        lam = jnp.array(state0.lam, jnp.float32)
+        mu = jnp.array(state0.mu, jnp.float32)
+        counts = jnp.array(state0.rho.counts, jnp.float32)
+    else:
+        lam = jnp.zeros((N,), jnp.float32)
+        mu = (jnp.float32(0.0) if topo_k is None
+              else jnp.zeros((topo_k.K,), jnp.float32))
+        counts = jnp.zeros((N, M), jnp.float32)
+    T_main = start + ((T - start) // chunk) * chunk
+
+    if pipelined:
+        from repro.workload.streams import ROW_BLOCK
+        use_aligned = (source_aligned is not None
+                       and start % ROW_BLOCK == 0
+                       and slab % ROW_BLOCK == 0)
+        src = _StaticSource(source_aligned if use_aligned else source)
+        probe_L = min(slab, T - start)
+        has_overlay = jax.eval_shape(
+            lambda t: source(t, probe_L),
+            jax.ShapeDtypeStruct((), jnp.int32))[1] is not None
+        bufs = _stream_series_buffers(T - start, topology, has_overlay)
+        carry = (lam, mu, counts, bufs)
+        for s0 in range(start, T_main, slab):
+            L = min(slab, T_main - s0)
+            carry = _pipelined_slab_step(
+                carry, jnp.int32(s0), jnp.int32(s0 - start), tables,
+                params, rule, topology, src=src, L=L, chunk=chunk,
+                block_n=block_n,
+                enforce_slot_capacity=enforce_slot_capacity,
+                topo_binned=topo_binned)
+        lam, mu, counts, bufs = carry
+        if T_main < T:  # finish the tail with the jnp slot step
+            j_tail, overlay_t = source(T_main, T - T_main)
+            state = onalgo.OnAlgoState(
+                lam=lam, mu=mu,
+                rho=onalgo.RhoEstimator(counts=counts,
+                                        t=jnp.int32(T_main)))
+            assoc_tail = (topo_k.assoc_at(T_main, T - T_main)
+                          if topo_k is not None and topo_k.time_varying
+                          else None)
+            state, off_t, mu_t, ln_t = _onalgo_tail(
+                state, j_tail, overlay_t, tables, params, rule,
+                topo_k=topo_k, assoc_tail=assoc_tail)
+            part = _series_from_offloads(j_tail, off_t, tables, params,
+                                         mu_t, ln_t, overlay_t,
+                                         enforce_slot_capacity,
+                                         topology=topology, t0=T_main)
+            bufs = _write_series(bufs, part, T_main - start)
+            lam, mu, counts = state.lam, state.mu, state.rho.counts
+        final = onalgo.OnAlgoState(
+            lam=lam, mu=mu,
+            rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
+        return bufs, final
 
     o_s, h_s, B_eff, H_eff = onalgo.precondition_tables(o_tab, h_tab,
                                                         params)
@@ -653,30 +876,25 @@ def simulate_chunked_stream(source, T: int, N: int, tables,
     if topo_k is not None:
         H_k_eff = (topo_k.H_k / params.H if params.precondition
                    else topo_k.H_k)
-    T_main = (T // chunk) * chunk
-    lam = jnp.zeros((N,), jnp.float32)
-    mu = (jnp.float32(0.0) if topo_k is None
-          else jnp.zeros((topo_k.K,), jnp.float32))
-    counts = jnp.zeros((N, M), jnp.float32)
     parts = []
-    for t0 in range(0, T_main, slab):
-        L = min(slab, T_main - t0)
-        j_slab, overlay = source(t0, L)
+    for s0 in range(start, T_main, slab):
+        L = min(slab, T_main - s0)
+        j_slab, overlay = source(s0, L)
         sv = (None if overlay is None
               else _overlay_slot_values(overlay, params))
         topo_kw = ({} if topo_k is None
-                   else dict(assoc=(topo_k.assoc_at(t0, L)
+                   else dict(assoc=(topo_k.assoc_at(s0, L)
                                     if topo_k.time_varying
                                     else topo_k.assoc), H_k=H_k_eff,
                              topo_binned=topo_binned))
         off, mu_seq, lnorm, lam, mu, counts = kern(
             j_slab, lam, mu, counts, o_s, h_s, w_tab, B_eff, H_eff,
-            rule.a, rule.beta, chunk=chunk, t0=jnp.int32(t0),
+            rule.a, rule.beta, chunk=chunk, t0=jnp.int32(s0),
             slot_values=sv, **topo_kw)
         parts.append(_series_from_offloads(j_slab, off, tables, params,
                                            mu_seq, lnorm, overlay,
                                            enforce_slot_capacity,
-                                           topology=topology, t0=t0))
+                                           topology=topology, t0=s0))
     if T_main < T:  # finish the tail with the jnp slot step
         j_tail, overlay_t = source(T_main, T - T_main)
         state = onalgo.OnAlgoState(
@@ -950,7 +1168,8 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
                             algo: str = "onalgo",
                             enforce_slot_capacity: bool = False,
                             topology: Optional[Topology] = None,
-                            source_cols=None):
+                            source_cols=None,
+                            pipelined: Optional[bool] = None):
     """The sharded engine over a *streamed* workload: no (T, N) horizon.
 
     Same source contract and memory story as
@@ -967,6 +1186,14 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
     slicing a full-width slab, so peak workload-generation memory drops
     to O(slab * N / shards) per shard.  ``source`` is still used for the
     stateless local/cloud policies.
+
+    ``pipelined`` (default: automatic at N >= 65536) drops every host
+    sync and host-side series part from the loop: the rollout's carry
+    args are donated, accounting is fused with the series-buffer writes
+    into a donated-carry dispatch (:func:`_stream_acct`), and the whole
+    series transfers once at the end.  The shard_map rollout itself
+    stays its own launch — both walk modes run the same executable, so
+    pipelined is bit-identical to the sequential walk by construction.
     """
     o_tab, h_tab, w_tab = tables
     M = o_tab.shape[-1]
@@ -977,6 +1204,8 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
     topo_k = _topo_duals(topology)
     topo_static = (None if topo_k is None
                    else (topo_k.K, topo_k.time_varying))
+    if pipelined is None:
+        pipelined = N >= _PIPELINE_AUTO_N
 
     if algo in ("local", "cloud"):
         return _stream_trivial(source, T, N, slab, tables, params, algo,
@@ -990,6 +1219,23 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
     mu = (jnp.float32(0.0) if topo_k is None
           else jnp.zeros((topo_k.K,), jnp.float32))
     counts = jnp.zeros((N, M), jnp.float32)
+
+    def topo_args_at(t0, L):
+        return (() if topo_k is None
+                else ((topo_k.assoc_at(t0, L) if topo_k.time_varying
+                       else topo_k.assoc), topo_k.H_k))
+
+    def unpack(out, has_overlay):
+        if has_overlay:
+            (off, j_slab, ov_o, ov_h, ov_w, ov_cl, ov_cc,
+             mu_seq, lnorm, lam, mu, counts) = out
+            overlay = RawOverlay(o=ov_o, h=ov_h, w=ov_w,
+                                 correct_local=ov_cl, correct_cloud=ov_cc)
+        else:
+            off, j_slab, mu_seq, lnorm, lam, mu, counts = out
+            overlay = None
+        return off, j_slab, overlay, mu_seq, lnorm, lam, mu, counts
+
     parts = []
     if source_cols is not None:  # shard-local slab generation
         local_N = N // mesh.shape[device_axis]
@@ -999,61 +1245,81 @@ def simulate_sharded_stream(source, T: int, N: int, tables,
             jax.ShapeDtypeStruct((), jnp.int32),
             jax.ShapeDtypeStruct((), jnp.int32))[1] is not None
         runs = {}  # one compiled run per distinct slab length
+
+        def make_run(L):
+            # lam0/mu0/counts0 (args 5-7) are donated: each slab's carry
+            # is dead the moment the next rollout returns.  Both walk
+            # modes share this construction so they run the exact same
+            # executable — the bit-identity contract rules out fusing
+            # the shard_map scan into a larger jit (see _stream_acct).
+            return jax.jit(_make_sharded_stream_run(
+                mesh, device_axis, rule, source_cols, L, local_N,
+                per_device_tables=o_tab.ndim == 2,
+                has_overlay=has_overlay, topo=topo_static),
+                donate_argnums=(5, 6, 7))
+
+        bufs = (_stream_series_buffers(T, topology, has_overlay)
+                if pipelined else None)
         for t0 in range(0, T, slab):
             L = min(slab, T - t0)
             if L not in runs:
-                runs[L] = jax.jit(_make_sharded_stream_run(
-                    mesh, device_axis, rule, source_cols, L, local_N,
-                    per_device_tables=o_tab.ndim == 2,
-                    has_overlay=has_overlay, topo=topo_static))
-            topo_args = (() if topo_k is None
-                         else ((topo_k.assoc_at(t0, L) if
-                                topo_k.time_varying else topo_k.assoc),
-                               topo_k.H_k))
+                runs[L] = make_run(L)
             out = runs[L](o_tab, h_tab, w_tab, params.B, params.H, lam,
-                          mu, counts, jnp.int32(t0), *topo_args)
-            if has_overlay:
-                (off, j_slab, ov_o, ov_h, ov_w, ov_cl, ov_cc,
-                 mu_seq, lnorm, lam, mu, counts) = out
-                overlay = RawOverlay(o=ov_o, h=ov_h, w=ov_w,
-                                     correct_local=ov_cl,
-                                     correct_cloud=ov_cc)
+                          mu, counts, jnp.int32(t0), *topo_args_at(t0, L))
+            (off, j_slab, overlay, mu_seq, lnorm,
+             lam, mu, counts) = unpack(out, has_overlay)
+            if pipelined:
+                bufs = _stream_acct(bufs, off, j_slab, overlay, mu_seq,
+                                    lnorm, jnp.int32(t0), tables, params,
+                                    topology, enforce=enforce_slot_capacity)
             else:
-                off, j_slab, mu_seq, lnorm, lam, mu, counts = out
-                overlay = None
-            parts.append(_series_from_offloads(
-                j_slab, off, tables, params, mu_seq, lnorm, overlay,
-                enforce_slot_capacity, topology=topology, t0=t0))
+                parts.append(_series_from_offloads(
+                    j_slab, off, tables, params, mu_seq, lnorm, overlay,
+                    enforce_slot_capacity, topology=topology, t0=t0))
         final = onalgo.OnAlgoState(
             lam=lam, mu=mu,
             rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
-        return _cat_series(parts), final
+        return (bufs if pipelined else _cat_series(parts)), final
 
     run = None
+    bufs = None
     for t0 in range(0, T, slab):
         L = min(slab, T - t0)
+        # Generation stays an eager per-slab call (service sources are
+        # themselves jitted slab launches) — dispatch is async, so the
+        # pipelined walk still never syncs inside the loop.
         j_slab, overlay = source(t0, L)
         if run is None:
+            # lam0/mu0/counts0 (args 6-8) are donated: the carry is dead
+            # once the next rollout returns.  Both walk modes share this
+            # construction so they run the exact same executable — the
+            # bit-identity contract rules out fusing the shard_map scan
+            # into a larger jit (see _stream_acct).
             run = jax.jit(_make_sharded_run(
                 mesh, device_axis, rule,
                 per_device_tables=o_tab.ndim == 2,
-                has_overlay=overlay is not None, topo=topo_static))
+                has_overlay=overlay is not None, topo=topo_static),
+                donate_argnums=(6, 7, 8))
+            if pipelined:
+                bufs = _stream_series_buffers(T, topology,
+                                              overlay is not None)
         ov_args = (() if overlay is None
                    else (overlay.o, overlay.h, overlay.w))
-        topo_args = (() if topo_k is None
-                     else ((topo_k.assoc_at(t0, L) if topo_k.time_varying
-                            else topo_k.assoc), topo_k.H_k))
         off, mu_seq, lnorm, lam, mu, counts = run(
             j_slab, o_tab, h_tab, w_tab, params.B, params.H, lam, mu,
-            counts, jnp.int32(t0), *ov_args, *topo_args)
-        parts.append(_series_from_offloads(j_slab, off, tables, params,
-                                           mu_seq, lnorm, overlay,
-                                           enforce_slot_capacity,
-                                           topology=topology, t0=t0))
+            counts, jnp.int32(t0), *ov_args, *topo_args_at(t0, L))
+        if pipelined:
+            bufs = _stream_acct(bufs, off, j_slab, overlay, mu_seq, lnorm,
+                                jnp.int32(t0), tables, params, topology,
+                                enforce=enforce_slot_capacity)
+        else:
+            parts.append(_series_from_offloads(
+                j_slab, off, tables, params, mu_seq, lnorm, overlay,
+                enforce_slot_capacity, topology=topology, t0=t0))
     final = onalgo.OnAlgoState(
         lam=lam, mu=mu,
         rho=onalgo.RhoEstimator(counts=counts, t=jnp.int32(T)))
-    return _cat_series(parts), final
+    return (bufs if pipelined else _cat_series(parts)), final
 
 
 @dataclasses.dataclass
@@ -1063,9 +1329,10 @@ class AutotuneResult:
     chunk: int
     block_n: Optional[int]
     seconds: float  # best probe wall-time
-    timings: dict  # (chunk, block_n[, topo_binned]) -> probe seconds
+    timings: dict  # (chunk, block_n[, topo_binned][, slab]) -> seconds
     topology: Optional[Topology] = None  # the topology the probes ran with
     topo_binned: Optional[bool] = None  # winning reduction layout (topo)
+    slab: Optional[int] = None  # winning slab length (slabs= probed)
 
     @property
     def kwargs(self) -> dict:
@@ -1074,12 +1341,15 @@ class AutotuneResult:
         When the probes ran under a multi-cloudlet topology, it is part
         of the tuned configuration (K-vector duals change the kernels'
         working set), so it rides along here — as does the winning
-        ``topo_binned`` reduction layout.
+        ``topo_binned`` reduction layout, and the winning ``slab``
+        length when ``slabs=`` joined the search space.
         """
         kw = {"chunk": self.chunk, "block_n": self.block_n}
         if self.topology is not None:
             kw["topology"] = self.topology
             kw["topo_binned"] = self.topo_binned
+        if self.slab is not None:
+            kw["slab"] = self.slab
         return kw
 
 
@@ -1089,6 +1359,7 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
              source=None, T: Optional[int] = None, N: Optional[int] = None,
              chunks=(8, 16, 32), block_ns=(None,),
              probe_slots: int = 128, slab: Optional[int] = None,
+             slabs=(None,), pipelined: Optional[bool] = None,
              algo: str = "onalgo", enforce_slot_capacity: bool = False,
              repeats: int = 2, warmup: int = 1,
              topology: Optional[Topology] = None,
@@ -1116,11 +1387,21 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
     cloudlets (K > 128, where the (N, K_pad) mask starts to hurt),
     otherwise just the engine default; pass an explicit tuple such as
     ``(False, True)`` to override.
+
+    ``slabs`` adds the streaming slab length to the search grid (source
+    probes only): each candidate slab is timed with every
+    (chunk, block_n) pair — keys grow a trailing slab element — and the
+    winner rides ``AutotuneResult.slab`` / ``.kwargs``.  The default
+    ``(None,)`` keeps the legacy grid (the single ``slab=`` value, no
+    key change).  ``pipelined`` routes the source probes through the
+    pipelined runtime (pass the value the production run will use — the
+    fused launch shifts the (chunk, slab) trade-off).
     """
     import time
 
     if (trace is None) == (source is None):
         raise ValueError("autotune needs exactly one of trace= or source=")
+    probe_slab_grid = tuple(slabs) != (None,)
     if trace is not None:
         probe_T = min(trace.T, probe_slots)
         p_trace = Trace(j_idx=trace.j_idx[:probe_T],
@@ -1131,8 +1412,11 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             correct_local=overlay.correct_local[:probe_T],
             correct_cloud=overlay.correct_cloud[:probe_T])
         p_topo = None if topology is None else topology.prefix(probe_T)
+        if probe_slab_grid:
+            raise ValueError("slabs= probes the streaming engine; pass "
+                             "source= (trace probes have no slab)")
 
-        def probe(chunk, block_n, tb):
+        def probe(chunk, block_n, tb, slab_c):
             return simulate_chunked(p_trace, tables, params, rule,
                                     chunk=chunk, block_n=block_n, algo=algo,
                                     overlay=p_overlay,
@@ -1144,12 +1428,13 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             raise ValueError("autotune(source=...) needs T= and N=")
         probe_T = min(T, probe_slots)
 
-        def probe(chunk, block_n, tb):
+        def probe(chunk, block_n, tb, slab_c):
             return simulate_chunked_stream(
                 source, probe_T, N, tables, params, rule, chunk=chunk,
-                slab=slab, block_n=block_n, algo=algo,
+                slab=slab if slab_c is None else slab_c,
+                block_n=block_n, algo=algo,
                 enforce_slot_capacity=enforce_slot_capacity,
-                topology=topology, topo_binned=tb)
+                topology=topology, topo_binned=tb, pipelined=pipelined)
 
     if repeats < 1 or warmup < 0:
         raise ValueError(f"need repeats >= 1 (got {repeats}) and "
@@ -1166,23 +1451,32 @@ def autotune(tables, params: OnAlgoParams, rule: StepRule, *,
             continue
         for block_n in block_ns:
             for tb in topo_binned_opts:
-                key = ((chunk, block_n) if tb is None
-                       else (chunk, block_n, tb))
-                for _ in range(warmup):  # compiles / cold caches don't vote
-                    jax.block_until_ready(probe(chunk, block_n, tb))
-                best = float("inf")
-                for _ in range(repeats):
-                    t_start = time.perf_counter()
-                    jax.block_until_ready(probe(chunk, block_n, tb))
-                    best = min(best, time.perf_counter() - t_start)
-                timings[key] = best
+                for slab_c in slabs:
+                    if slab_c is not None and slab_c % chunk:
+                        continue  # engine requires slab % chunk == 0
+                    key = ((chunk, block_n) if tb is None
+                           else (chunk, block_n, tb))
+                    if probe_slab_grid:
+                        key = key + (slab_c,)
+                    for _ in range(warmup):  # compiles don't vote
+                        jax.block_until_ready(
+                            probe(chunk, block_n, tb, slab_c))
+                    best = float("inf")
+                    for _ in range(repeats):
+                        t_start = time.perf_counter()
+                        jax.block_until_ready(
+                            probe(chunk, block_n, tb, slab_c))
+                        best = min(best, time.perf_counter() - t_start)
+                    timings[key] = best
     if not timings:
         raise ValueError(
             f"no viable candidates: chunks={chunks} all exceed the probe "
             f"horizon ({probe_T} slots)")
     best_key, seconds = min(timings.items(), key=lambda kv: kv[1])
     chunk, block_n = best_key[0], best_key[1]
-    tb_win = best_key[2] if len(best_key) == 3 else None
+    slab_win = best_key[-1] if probe_slab_grid else None
+    mid = best_key[2:-1] if probe_slab_grid else best_key[2:]
+    tb_win = mid[0] if mid else None
     return AutotuneResult(chunk=chunk, block_n=block_n, seconds=seconds,
                           timings=timings, topology=topology,
-                          topo_binned=tb_win)
+                          topo_binned=tb_win, slab=slab_win)

@@ -460,9 +460,17 @@ def onalgo_chunked_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
     kern = functools.partial(_onalgo_chunked_kernel, chunk=chunk,
                              has_slots=has_slots, has_topo=has_topo,
                              topo_tv=topo_tv, topo_binned=topo_binned)
+    # Donation-safe carry: lam/mu/counts inputs alias their output
+    # buffers (same shapes/dtypes), so a donated caller runs the whole
+    # rollout without a second copy of the state.  Safe because the
+    # kernel reads the seed refs only at grid step k == 0, before any
+    # output block is flushed back to HBM.
+    lam_in = 1 + len(sv_args) + len(topo_in) + 4
+    io_aliases = {lam_in: 3, lam_in + 1: 4, lam_in + 2: 5}
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K,),
+        input_output_aliases=io_aliases,
         in_specs=[
             pl.BlockSpec((1, Np, chunk), lambda k: (k, 0, 0)),
             *sv_specs,
@@ -755,9 +763,16 @@ def onalgo_tiled_pallas(j_seq, lam0, mu0, counts0, o_tab, h_tab, w_tab,
                              n_tiles=n_tiles, has_slots=has_slots,
                              has_topo=has_topo, topo_tv=topo_tv,
                              topo_binned=topo_binned)
+    # Donation-safe carry (see the chunked variant): lam/mu/counts seed
+    # inputs alias the final-state outputs.  Safe: each tile reads its
+    # seed refs only on its first visit (k == 0, c == 0), which precedes
+    # that tile's first output write-back.
+    lam_in = 1 + len(sv_args) + len(topo_in) + 4
+    io_aliases = {lam_in: 3, lam_in + 1: 4, lam_in + 2: 5}
     off, mu_seq, lnorm, lam_f, mu_f, counts_f = pl.pallas_call(
         kern,
         grid=(K, chunk, n_tiles),
+        input_output_aliases=io_aliases,
         in_specs=[
             pl.BlockSpec((1, block_n, 1), lambda k, c, i: (k, i, c)),
             *sv_specs,

@@ -190,15 +190,18 @@ def compile_service(sim, pool, on: Optional[np.ndarray] = None
                            overlay=overlay, on=on)
 
 
-@partial(jax.jit, static_argnames=("space", "length"))
+@partial(jax.jit, static_argnames=("space", "length", "aligned"))
 def _service_slab(wl: StreamingWorkload, space, t0, length, o_levels,
                   cycles, phi_hat, sigma, d_local, corr_local, corr_cloud,
-                  v_risk, zeta_pen):
+                  v_risk, zeta_pen, aligned: bool = False):
     """One fused device pass from counters to a service slab: workload
-    slab -> gathers -> quantization, slots [t0, t0 + length)."""
-    return _lower_values(wl.slab(t0, length), space, None, o_levels,
-                         cycles, phi_hat, sigma, d_local, corr_local,
-                         corr_cloud, v_risk, zeta_pen)
+    slab -> gathers -> quantization, slots [t0, t0 + length).
+
+    ``aligned`` promises ``t0 % ROW_BLOCK == 0`` and generates one fewer
+    covering uniform block per slab (see ``StreamingWorkload.slab``)."""
+    return _lower_values(wl.slab(t0, length, aligned=aligned), space,
+                         None, o_levels, cycles, phi_hat, sigma, d_local,
+                         corr_local, corr_cloud, v_risk, zeta_pen)
 
 
 @partial(jax.jit, static_argnames=("space", "length", "n_cols"))
@@ -241,6 +244,19 @@ class StreamingService:
         """(j_idx (L, N) int32, RawOverlay slab) for [t0, t0 + length)."""
         _, j, o_raw, h_raw, w_raw, c_local, c_cloud, _ = _service_slab(
             self.wl, self.space, t0, length, *self.arrays, *self.knobs)
+        return j, RawOverlay(o=o_raw, h=h_raw, w=w_raw,
+                             correct_local=c_local, correct_cloud=c_cloud)
+
+    def slab_aligned(self, t0, length: int):
+        """``slab`` for block-aligned starts: requires ``t0 % ROW_BLOCK
+        == 0`` (the caller's burden — t0 may be traced) and generates
+        one fewer covering uniform block per slab, bit-identical to
+        ``slab``.  The pipelined chunked engine routes its main-loop
+        slabs here (``source_aligned=``) when start and slab length are
+        block-aligned."""
+        _, j, o_raw, h_raw, w_raw, c_local, c_cloud, _ = _service_slab(
+            self.wl, self.space, t0, length, *self.arrays, *self.knobs,
+            aligned=True)
         return j, RawOverlay(o=o_raw, h=h_raw, w=w_raw,
                              correct_local=c_local, correct_cloud=c_cloud)
 

@@ -89,6 +89,32 @@ class GatewayCoreStats:
         return len(self.compiled_buckets)
 
 
+@dataclasses.dataclass
+class PendingTick:
+    """A dispatched-but-unresolved gateway tick.
+
+    Returned by :meth:`GatewayCore.tick_async`: the decision arrays stay
+    device-resident (no host sync has happened) until :meth:`resolve`
+    materializes them.  The core's persistent state has already advanced
+    — resolving late (or never) cannot change any decision, so pending
+    ticks can be held across subsequent dispatches to double-buffer the
+    serve loop.
+    """
+
+    off_p: jax.Array  # padded (bucket,) offload decisions, on device
+    adm_p: jax.Array  # padded (bucket,) admitted decisions, on device
+    n_reports: int  # R — the unpadded wave size
+    bucket: int  # padded wave bucket this tick compiled under
+    first_compile: bool  # True when this dispatch compiled its bucket
+
+    def resolve(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Block until the decisions are materialized; returns
+        (offload, admitted) bool arrays aligned with the wave's idx."""
+        off = np.asarray(self.off_p)[: self.n_reports]
+        adm = np.asarray(self.adm_p)[: self.n_reports]
+        return off, adm
+
+
 class GatewayCore:
     """The gateway's synchronous algorithm surface (one tick = one slot).
 
@@ -232,14 +258,21 @@ class GatewayCore:
         return self.topology.assoc, self.topology.H_k
 
     # ------------------------------------------------------------------
-    def tick(self, idx, o, h, w) -> Tuple[np.ndarray, np.ndarray]:
-        """One OnAlgo slot over a wave of device reports.
+    def tick_async(self, idx, o, h, w) -> "PendingTick":
+        """Dispatch one OnAlgo slot WITHOUT waiting for its decisions.
 
-        idx: (R,) int32 device ids (each at most once); o/h/w: (R,)
-        float32 raw observed values.  R = 0 is a valid (empty) slot —
-        rho and the duals still advance, like a no-arrival slot in the
-        batch replay.  Returns (offload, admitted) bool arrays aligned
-        with ``idx``; blocks until the decisions are materialized.
+        Same wave contract as :meth:`tick`, but returns a
+        :class:`PendingTick` immediately after enqueueing the jitted
+        slot: the persistent state advances on device (its buffers are
+        donated to the launch), the decision arrays stay device-resident
+        until ``resolve()`` is called, and no host sync happens here.
+        That makes the gateway double-bufferable — dispatch slot t+1
+        while slot t's decisions are still in flight — reusing the
+        streaming engines' donated-carry contract.
+
+        Because nothing is timed (timing would force the sync this
+        method exists to avoid), async ticks do NOT feed the per-bucket
+        latency EMA behind :meth:`estimate_ms`; only :meth:`tick` does.
         """
         idx = np.asarray(idx, np.int32).reshape(-1)
         R = idx.shape[0]
@@ -256,22 +289,37 @@ class GatewayCore:
             return out
 
         assoc, H_k = self._slot_assoc()
-        t0 = time.perf_counter()
         self._state, off_p, adm_p = self._tick_fn(
             self._state, self.tables, self.params, self.rule, idx_p,
             pad_vals(o), pad_vals(h), pad_vals(w), assoc, H_k)
-        off = np.asarray(off_p)[:R]  # forces the device sync
-        adm = np.asarray(adm_p)[:R]
-        dt_ms = (time.perf_counter() - t0) * 1e3
         first = bucket not in self.stats.compiled_buckets
         self.stats.compiled_buckets.add(bucket)
-        if not first:  # compiles don't vote in the latency estimate
-            prev = self._est_ms.get(bucket)
-            self._est_ms[bucket] = (dt_ms if prev is None else
-                                    prev + self._est_alpha * (dt_ms - prev))
         self.slots += 1
         self.stats.ticks += 1
         self.stats.reports += R
+        return PendingTick(off_p=off_p, adm_p=adm_p, n_reports=R,
+                           bucket=bucket, first_compile=first)
+
+    def tick(self, idx, o, h, w) -> Tuple[np.ndarray, np.ndarray]:
+        """One OnAlgo slot over a wave of device reports.
+
+        idx: (R,) int32 device ids (each at most once); o/h/w: (R,)
+        float32 raw observed values.  R = 0 is a valid (empty) slot —
+        rho and the duals still advance, like a no-arrival slot in the
+        batch replay.  Returns (offload, admitted) bool arrays aligned
+        with ``idx``; blocks until the decisions are materialized, and
+        feeds the measured wall-time into the per-bucket latency EMA
+        (warm ticks only — compiles don't vote).
+        """
+        t0 = time.perf_counter()
+        pending = self.tick_async(idx, o, h, w)
+        off, adm = pending.resolve()  # forces the device sync
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        if not pending.first_compile:
+            prev = self._est_ms.get(pending.bucket)
+            self._est_ms[pending.bucket] = (
+                dt_ms if prev is None else
+                prev + self._est_alpha * (dt_ms - prev))
         return off, adm
 
     # ------------------------------------------------------------------

@@ -161,7 +161,8 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                      block_n: Optional[int] = None, mesh=None,
                      device_axis: str = "data", materialize: bool = True,
                      slab: Optional[int] = None, topology=None,
-                     topo_binned: Optional[bool] = None) -> dict:
+                     topo_binned: Optional[bool] = None,
+                     pipelined: Optional[bool] = None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
@@ -206,6 +207,13 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
     ``topo_binned``: reduction layout for the chunked kernels' in-kernel
     per-cloudlet gathers/scatters (None = auto by K; see
     ``fleet.simulate_chunked``).  Scan/sharded engines ignore it.
+
+    ``pipelined``: streaming engines only (``materialize=False``) —
+    route the slab walk through the pipelined runtime (fused launches,
+    donated carries, device-resident accounting; default automatic at
+    N >= 65536, bit-identical either way).  The chunked stream also
+    gets the block-aligned slab source (one fewer covering uniform
+    block generated per slab).
     """
     from repro.serve.compile import (compile_service,
                                      compile_service_streaming,
@@ -238,13 +246,15 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
                 cs.rule, chunk=chunk, slab=slab, block_n=block_n,
                 algo=sim.algo, enforce_slot_capacity=True,
-                topology=topology, topo_binned=topo_binned)
+                topology=topology, topo_binned=topo_binned,
+                pipelined=pipelined, source_aligned=cs.slab_aligned)
         else:
             series, _ = simulate_sharded_stream(
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
                 cs.rule, mesh, device_axis=device_axis, slab=slab,
                 algo=sim.algo, enforce_slot_capacity=True,
-                topology=topology, source_cols=cs.slab_cols)
+                topology=topology, source_cols=cs.slab_cols,
+                pipelined=pipelined)
         return service_metrics(sim, series)
 
     cs = compile_service(sim, pool, on)

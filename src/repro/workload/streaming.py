@@ -89,16 +89,29 @@ class StreamingWorkload:
         cut = lambda x: jax.lax.dynamic_slice_in_dim(x, off, length, axis=0)
         return ServiceWorkload(on=cut(on), img=cut(img), rates=cut(rates))
 
-    def slab(self, t0, length: int) -> ServiceWorkload:
+    def slab(self, t0, length: int, *, aligned: bool = False
+             ) -> ServiceWorkload:
         """Slots [t0, t0 + length) of the realized workload.
 
         ``t0`` may be traced (the engines sweep it inside one compiled
         slab step); ``length`` is static.  Requires t0 + length <= T.
+
+        ``aligned=True`` promises ``t0 % ROW_BLOCK == 0`` (the caller's
+        burden — t0 may be traced, so it cannot be checked here): the
+        slab then starts exactly on a block boundary and one fewer
+        covering block is generated (at length == ROW_BLOCK that halves
+        the uniforms drawn per slab).  Counter addressing makes the
+        result bit-identical to the unaligned path.
         """
         RB = streams.ROW_BLOCK
-        nb = (length - 1) // RB + 2  # covers any offset within a block
-        b0 = t0 // RB
-        off = t0 - b0 * RB
+        if aligned:
+            nb = (length - 1) // RB + 1  # t0 starts a block: no lead-in
+            b0 = t0 // RB
+            off = 0
+        else:
+            nb = (length - 1) // RB + 2  # covers any offset within a block
+            b0 = t0 // RB
+            off = t0 - b0 * RB
         u = streams.uniform_block_range(self.seed, streams.STREAM_SERVICE,
                                         b0, nb, self.N, 4)
         on_in = jax.lax.dynamic_index_in_dim(self.on_entry, b0,
@@ -107,7 +120,8 @@ class StreamingWorkload:
                                                keepdims=False)
         return self._finish_slab(u, on_in, rate_in, b0, nb, off, length)
 
-    def slab_cols(self, t0, length: int, n0, n_cols: int) -> ServiceWorkload:
+    def slab_cols(self, t0, length: int, n0, n_cols: int, *,
+                  aligned: bool = False) -> ServiceWorkload:
         """Device columns [n0, n0 + n_cols) of ``slab(t0, length)``.
 
         Bit-identical to slicing the full-width slab — the counter-offset
@@ -116,12 +130,18 @@ class StreamingWorkload:
         generate exactly its own devices' workload
         (``fleet.simulate_sharded_stream(source_cols=...)``).  ``t0`` and
         ``n0`` may be traced (e.g. an ``axis_index`` offset inside
-        shard_map); ``length`` / ``n_cols`` are static.
+        shard_map); ``length`` / ``n_cols`` are static.  ``aligned``:
+        see :meth:`slab`.
         """
         RB = streams.ROW_BLOCK
-        nb = (length - 1) // RB + 2
-        b0 = t0 // RB
-        off = t0 - b0 * RB
+        if aligned:
+            nb = (length - 1) // RB + 1
+            b0 = t0 // RB
+            off = 0
+        else:
+            nb = (length - 1) // RB + 2
+            b0 = t0 // RB
+            off = t0 - b0 * RB
         u = streams.uniform_block_range(self.seed, streams.STREAM_SERVICE,
                                         b0, nb, self.N, 4, n0=n0,
                                         n_cols=n_cols)

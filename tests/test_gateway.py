@@ -117,6 +117,31 @@ class TestGatewayCore:
                     np.concatenate([getattr(p, f) for p in parts]),
                     getattr(ref, f))
 
+    def test_tick_async_matches_sync_ticks(self, streaming):
+        """Double-buffered dispatch: a run of tick_async dispatches —
+        every pending tick resolved only after ALL slots are in flight —
+        produces the same decisions, state, and stats as blocking
+        ticks, and feeds no latency estimates (nothing was timed)."""
+        slots = 24
+        loadgen = ServiceLoadGen(streaming)
+        sync = GatewayCore.for_service(streaming)
+        asyn = GatewayCore.for_service(streaming)
+        ref, pend = [], []
+        for wv in loadgen.waves(0, slots):
+            ref.append(sync.tick(wv.idx, wv.o, wv.h, wv.w))
+            pend.append(asyn.tick_async(wv.idx, wv.o, wv.h, wv.w))
+        assert asyn.slots == slots and asyn.stats.ticks == slots
+        assert asyn._est_ms == {}  # async ticks never feed the EMA
+        for (off_ref, adm_ref), p in zip(ref, pend):
+            off, adm = p.resolve()  # late resolve: decisions unchanged
+            assert np.array_equal(off, off_ref)
+            assert np.array_equal(adm, adm_ref)
+        assert np.array_equal(np.asarray(asyn.state.lam),
+                              np.asarray(sync.state.lam))
+        assert np.array_equal(np.asarray(asyn.state.rho.counts),
+                              np.asarray(sync.state.rho.counts))
+        assert asyn.stats.compiles == sync.stats.compiles
+
     def test_empty_wave_advances_slot(self, streaming):
         """A no-report slot still ticks rho and the duals — like a
         no-arrival slot in the batch replay."""

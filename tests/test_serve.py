@@ -294,6 +294,63 @@ class TestStreamingService:
         for k in SERVICE_METRICS:
             assert out[k] == pytest.approx(ref[k], rel=2e-5, abs=1e-5), k
 
+    def test_pipelined_equals_sequential_service(self, pool):
+        """The pipelined streaming runtime (fused launches, donated
+        carries, device-resident series buffers) is bit-identical to
+        the sequential slab walk on both streaming engines."""
+        sim = SimConfig(num_devices=5, T=203, algo="onalgo", B_n=0.06,
+                        H=1.5 * 441e6, seed=4)
+        for eng in ("chunked", "sharded"):
+            ref = simulate_service(sim, pool, engine=eng, chunk=8,
+                                   materialize=False, slab=64,
+                                   pipelined=False)
+            out = simulate_service(sim, pool, engine=eng, chunk=8,
+                                   materialize=False, slab=64,
+                                   pipelined=True)
+            for k in SERVICE_METRICS:
+                assert out[k] == ref[k], (eng, k)  # bitwise, not approx
+
+    def test_slab_aligned_equals_slab(self, pool):
+        """The block-aligned slab source (one fewer covering uniform
+        block generated per slab) is bit-identical to the general one
+        at every ROW_BLOCK-aligned start."""
+        from repro.serve.compile import compile_service_streaming
+        sim = SimConfig(num_devices=5, T=203, algo="onalgo", seed=11)
+        cs = compile_service_streaming(sim, pool)
+        for t0, L in ((0, 64), (64, 64), (128, 75), (64, 40)):
+            j_a, ov_a = cs.slab_aligned(t0, L)
+            j, ov = cs.slab(t0, L)
+            np.testing.assert_array_equal(np.asarray(j_a), np.asarray(j))
+            for f in ("o", "h", "w", "correct_local", "correct_cloud"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ov_a, f)),
+                    np.asarray(getattr(ov, f)),
+                    err_msg=f"{f} at t0={t0}")
+
+    def test_autotune_slab_search(self, pool):
+        """slabs= joins the autotune search space (pipelined runtime):
+        keys grow a slab coordinate, the winner rides AutotuneResult,
+        and its kwargs reproduce the scan metrics."""
+        from repro.core import fleet
+        from repro.serve.compile import compile_service_streaming
+        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=2)
+        cs = compile_service_streaming(sim, pool)
+        tune = fleet.autotune(cs.tables, cs.params, cs.rule,
+                              source=cs.slab, T=sim.T, N=4,
+                              chunks=(8, 16), block_ns=(None,),
+                              slabs=(64, 128), pipelined=True,
+                              probe_slots=128, repeats=1)
+        assert tune.slab in (64, 128)
+        assert len(tune.timings) == 4  # 2 chunks x 1 block_n x 2 slabs
+        assert all(len(k) == 3 for k in tune.timings)  # (..., slab) keys
+        assert tune.kwargs["slab"] == tune.slab
+        ref = simulate_service(sim, pool, engine="scan")
+        out = simulate_service(sim, pool, engine="chunked",
+                               materialize=False, pipelined=True,
+                               **tune.kwargs)
+        for k in SERVICE_METRICS:
+            assert out[k] == pytest.approx(ref[k], rel=2e-5, abs=1e-5), k
+
 
 class TestServiceWorkloads:
     def test_scenario_arrivals_drive_batched_service(self):
