@@ -1,8 +1,8 @@
 """Live serving gateway benchmark: sustained decisions/sec + latency.
 
-Drives the closed-loop load generator (one wave per workload slot,
-counter-addressed arrivals) through :class:`~repro.serve.gateway.LiveGateway`
-and measures what a deployment cares about:
+Drives the counter-addressed load generator (one wave per workload
+slot) through :class:`~repro.serve.gateway.LiveGateway` and measures
+what a deployment cares about:
 
   * sustained decision throughput — decisions/sec over the reports the
     fleet actually filed, and devslots/sec (N * slots / wall, the gate
@@ -11,6 +11,25 @@ and measures what a deployment cares about:
     warm-up phase so per-bucket compiles don't pollute the percentiles;
   * peak device bytes (``PeakTracker``) — the gateway's working set is
     O(N * M) persistent state + one bucket-padded wave, never a horizon.
+
+Three loop variants per fleet size, all on the same StreamingService:
+
+  * ``closed``   — the awaiting closed loop (each wave blocks on the
+    last; the trajectory's historical ``N<n>`` config);
+  * ``windowed(1)`` — the pipelined driver at ``max_in_flight=1``:
+    sequential dispatch-then-resolve, but with waves queued at the
+    gateway (the ``N<n>_seq`` config — the fair baseline);
+  * ``windowed(2)`` — the depth-2 wave pipeline: wave t+1's host
+    scatter/gather overlaps wave t's device execution
+    (``N<n>_pipelined``, gate-ordered ``must_beat=N<n>_seq`` — the
+    decision stream is bit-identical, only the wall clock moves).
+
+Every variant preps with :meth:`GatewayCore.warmup` in a background
+thread overlapped with the loadgen's first slab generation, so XLA
+compiles never touch the serve path or the percentiles.  The variants
+run ``REPS`` interleaved repetitions each and the best run is kept —
+the ``must_beat`` ordering compares steady-state against steady-state
+instead of whoever drew the process's cold first measurement.
 
 Fast configs (CI + the committed trajectory): N in {1024, 16384}.
 ``BENCH_GATEWAY_FULL=1`` adds the fleet-scale points up to N = 10^6
@@ -32,7 +51,8 @@ import time
 from benchmarks.common import PeakTracker, emit
 from benchmarks.trajectory import make_row
 from repro.serve.compile import compile_service_streaming
-from repro.serve.gateway import GatewayCore, run_closed_loop, run_open_loop
+from repro.serve.gateway import (GatewayCore, run_closed_loop,
+                                 run_open_loop, run_pipelined_loop)
 from repro.serve.simulator import SimConfig, synthetic_pool
 from repro.workload.loadgen import ServiceLoadGen
 
@@ -40,6 +60,8 @@ SLAB = 64
 FAST_NS = (1024, 16384)
 FULL_NS = (131072, 1048576)
 WARM_SLOTS = 24  # covers every bucket the arrival process touches
+PIPE_DEPTH = 2  # max_in_flight for the pipelined rows
+REPS = 3  # interleaved repetitions per loop variant (best-of)
 
 # Open-loop sweep: offered wave rate as multiples of the measured
 # closed-loop service rate — below 1x the gateway keeps up, above it the
@@ -61,38 +83,97 @@ def _sim(N: int, T: int) -> SimConfig:
                      H=N / 4 * 2 * 441e6, seed=1)
 
 
+class _GatewayRun:
+    """One fleet size's measurement harness.
+
+    Holds ONE compiled StreamingService; every loop variant gets a
+    fresh core + loadgen over the same counters, so the closed /
+    sequential / pipelined numbers come from one host and one process —
+    the ``must_beat`` ordering row compares jitter-fairly, exactly like
+    bench_fleet_scale's engine pairs.
+    """
+
+    def __init__(self, N: int, pool=None):
+        self.N = N
+        self.T = WARM_SLOTS + _horizon(N)
+        self.slots = self.T - WARM_SLOTS
+        pool = pool if pool is not None else synthetic_pool()
+        self.ss = compile_service_streaming(_sim(N, self.T), pool)
+
+    def _prep(self):
+        """Fresh core + loadgen, serve-ready: the bucket-ladder warmup
+        compiles in a background thread WHILE the loadgen generates its
+        first slab, then both are joined — no XLA stall and no slab
+        stall ever reaches the measured loop."""
+        core = GatewayCore.for_service(self.ss)
+        th = core.warmup(background=True)
+        lg = ServiceLoadGen(self.ss, slab=SLAB, prefetch=True)
+        lg.wave(0)  # materialize the first slab under the compiles
+        th.join()
+        return core, lg
+
+    def _measure(self, run_loop) -> dict:
+        """Warm phase (EMAs + workload advance), then the timed loop."""
+        core, lg = self._prep()
+        run_loop(core, lg, 0, WARM_SLOTS)
+        with PeakTracker() as peak:
+            t0 = time.perf_counter()
+            replies, stats = run_loop(core, lg, WARM_SLOTS, self.slots)
+            dt = time.perf_counter() - t0
+        assert stats.fallback_waves == 0 and stats.shed_chunks == 0, (
+            "bench ran into its own SLO — raise slo_ms")
+        return {
+            "N": self.N,
+            "slots": self.slots,
+            "wall_s": dt,
+            "decisions": stats.reports,
+            "decisions_per_sec": stats.reports / dt,
+            "devslots_per_sec": self.N * self.slots / dt,
+            "p50_ms": stats.percentile(50.0),
+            "p99_ms": stats.percentile(99.0),
+            "peak_bytes": peak.peak_bytes,
+            "compiles": core.stats.compiles,
+            "overlapped_waves": stats.overlapped_waves,
+            "max_in_flight_seen": stats.max_in_flight_seen,
+        }
+
+    def closed(self) -> dict:
+        """The awaiting closed loop (historical ``N<n>`` config)."""
+        return self._measure(
+            lambda core, lg, t0, slots: run_closed_loop(
+                core, lg, t0, slots, slo_ms=120_000.0))
+
+    def windowed(self, depth: int) -> dict:
+        """The pipelined driver at ``max_in_flight=depth`` (depth 1 is
+        the sequential baseline, depth 2 the overlap row)."""
+        return self._measure(
+            lambda core, lg, t0, slots: run_pipelined_loop(
+                core, lg, t0, slots, max_in_flight=depth,
+                slo_ms=120_000.0))
+
+    def measure(self, reps: int = REPS) -> dict:
+        """All three loop variants, ``reps`` INTERLEAVED repetitions
+        each, keeping every variant's best run (highest devslots/sec).
+        Interleaving spreads process warm-up and scheduler jitter
+        evenly across the variants and best-of filters it out, so the
+        seq-vs-pipelined ordering row compares steady-state against
+        steady-state."""
+        variants = (("closed", self.closed),
+                    ("seq", lambda: self.windowed(1)),
+                    ("pipelined", lambda: self.windowed(PIPE_DEPTH)))
+        best: dict = {}
+        for _ in range(reps):
+            for name, fn in variants:
+                r = fn()
+                if (name not in best or r["devslots_per_sec"]
+                        > best[name]["devslots_per_sec"]):
+                    best[name] = r
+        return best
+
+
 def run_gateway(N: int, pool=None) -> dict:
     """One config: warm the buckets, then serve a timed closed loop."""
-    T = WARM_SLOTS + _horizon(N)
-    sim = _sim(N, T)
-    pool = pool if pool is not None else synthetic_pool()
-    ss = compile_service_streaming(sim, pool)
-    core = GatewayCore.for_service(ss)
-    lg = ServiceLoadGen(ss, slab=SLAB)
-
-    # warm-up phase: compiles + first estimates (separate stats)
-    run_closed_loop(core, lg, 0, WARM_SLOTS, slo_ms=120_000.0)
-
-    slots = T - WARM_SLOTS
-    with PeakTracker() as peak:
-        t0 = time.perf_counter()
-        replies, stats = run_closed_loop(core, lg, WARM_SLOTS, slots,
-                                         slo_ms=120_000.0)
-        dt = time.perf_counter() - t0
-    assert stats.fallback_waves == 0 and stats.shed_chunks == 0, (
-        "bench ran into its own SLO — raise slo_ms")
-    return {
-        "N": N,
-        "slots": slots,
-        "wall_s": dt,
-        "decisions": stats.reports,
-        "decisions_per_sec": stats.reports / dt,
-        "devslots_per_sec": N * slots / dt,
-        "p50_ms": stats.percentile(50.0),
-        "p99_ms": stats.percentile(99.0),
-        "peak_bytes": peak.peak_bytes,
-        "compiles": core.stats.compiles,
-    }
+    return _GatewayRun(N, pool).closed()
 
 
 def open_loop_sweep(N: int, pool=None, mults=RATE_MULTS,
@@ -115,8 +196,9 @@ def open_loop_sweep(N: int, pool=None, mults=RATE_MULTS,
     out = []
     for mult in mults:
         core = GatewayCore.for_service(ss)
-        lg = ServiceLoadGen(ss, slab=SLAB)
-        # warm-up phase: compiles + first estimates (separate stats)
+        core.warmup()
+        lg = ServiceLoadGen(ss, slab=SLAB, prefetch=True)
+        # warm-up phase: first estimates (separate stats)
         run_closed_loop(core, lg, 0, WARM_SLOTS, slo_ms=120_000.0)
         rate = closed_rate * mult
         t0 = time.perf_counter()
@@ -161,15 +243,27 @@ def bench_gateway_open(Ns=(FAST_NS[0],)):
 
 
 def trajectory_rows(pr: int) -> list:
-    """Fast-config rows for the committed BENCH_gateway.json trajectory."""
+    """Fast-config rows for the committed BENCH_gateway.json trajectory.
+
+    Per fleet size: the historical closed-loop ``N<n>`` row, the
+    sequential windowed baseline ``N<n>_seq``, and the depth-2
+    ``N<n>_pipelined`` row carrying ``must_beat=N<n>_seq`` — the gate
+    fails if the overlap ever stops paying, in the same run.
+    """
     pool = synthetic_pool()
     rows = []
     for N in FAST_NS:
-        r = run_gateway(N, pool)
-        rows.append(make_row(
-            pr, "gateway", f"N{N}", r["devslots_per_sec"], r["p99_ms"],
-            r["peak_bytes"], decisions_per_sec=r["decisions_per_sec"],
-            p50_ms=r["p50_ms"], slots=r["slots"]))
+        best = _GatewayRun(N, pool).measure()
+        for config, r, extra in (
+                (f"N{N}", best["closed"], {}),
+                (f"N{N}_seq", best["seq"], {}),
+                (f"N{N}_pipelined", best["pipelined"],
+                 {"must_beat": f"N{N}_seq"})):
+            rows.append(make_row(
+                pr, "gateway", config, r["devslots_per_sec"], r["p99_ms"],
+                r["peak_bytes"], decisions_per_sec=r["decisions_per_sec"],
+                p50_ms=r["p50_ms"], slots=r["slots"],
+                overlapped_waves=r["overlapped_waves"], **extra))
     return rows
 
 
@@ -179,14 +273,18 @@ def bench_gateway(Ns=None):
         Ns = FAST_NS + (FULL_NS if os.environ.get("BENCH_GATEWAY_FULL")
                         else ())
     for N in Ns:
-        r = run_gateway(N, pool)
-        emit(f"gateway/N={N}/slots={r['slots']}/closed_loop",
-             r["wall_s"] * 1e6 / r["slots"],
-             f"decisions_per_s={r['decisions_per_sec']:.0f};"
-             f"devslots_per_s={r['devslots_per_sec']:.0f};"
-             f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
-             f"peak_mb={r['peak_bytes'] / 1e6:.0f};"
-             f"compiles={r['compiles']}")
+        best = _GatewayRun(N, pool).measure()
+        for variant, r in (("closed_loop", best["closed"]),
+                           ("windowed_seq", best["seq"]),
+                           ("pipelined_d2", best["pipelined"])):
+            emit(f"gateway/N={N}/slots={r['slots']}/{variant}",
+                 r["wall_s"] * 1e6 / r["slots"],
+                 f"decisions_per_s={r['decisions_per_sec']:.0f};"
+                 f"devslots_per_s={r['devslots_per_sec']:.0f};"
+                 f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+                 f"peak_mb={r['peak_bytes'] / 1e6:.0f};"
+                 f"compiles={r['compiles']};"
+                 f"overlapped={r['overlapped_waves']}")
 
 
 def run_all():

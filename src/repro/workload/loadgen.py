@@ -52,7 +52,7 @@ class ServiceLoadGen:
     """
 
     def __init__(self, service, *, slab: int = 64, n0: int = 0,
-                 n_cols: Optional[int] = None):
+                 n_cols: Optional[int] = None, prefetch: bool = False):
         self.service = service
         self.T = int(service.sim.T)
         self.N = int(service.sim.num_devices)
@@ -63,21 +63,41 @@ class ServiceLoadGen:
         if n0 + self.n_cols > self.N:
             raise ValueError("column range exceeds the fleet")
         self.slab = int(slab)
+        # prefetch=True dispatches slab t0+slab on device as soon as
+        # slab t0 materializes: JAX's async dispatch computes it while
+        # the host serves t0's waves, so a sequential walk never blocks
+        # on generation at a slab boundary.  Waves are bit-identical
+        # either way (same jitted slab_cols, just dispatched early).
+        self.prefetch = bool(prefetch)
         self._t0 = -1  # cached slab start (aligned to slab)
         self._on = self._o = self._h = self._w = None
+        self._next_t0 = -1  # prefetched slab start (device-resident)
+        self._next = None
+
+    def _dispatch_slab(self, t0: int):
+        """Kick slab [t0, t0+L) on device; returns unmaterialized
+        (j, overlay) arrays."""
+        length = min(self.slab, self.T - t0)
+        return self.service.slab_cols(t0, length, self.n0, self.n_cols)
 
     def _ensure_slab(self, t: int) -> int:
         """Cache the slab covering slot ``t``; return its start."""
         t0 = (t // self.slab) * self.slab
         if t0 != self._t0:
-            length = min(self.slab, self.T - t0)
-            j, ov = self.service.slab_cols(t0, length, self.n0, self.n_cols)
+            if t0 == self._next_t0:
+                j, ov = self._next  # already in flight on device
+            else:
+                j, ov = self._dispatch_slab(t0)
+            self._next, self._next_t0 = None, -1
             # j > 0 ⟺ arrival: the state space reserves index 0 for null
             self._on = np.asarray(j) > 0
             self._o = np.asarray(ov.o, np.float32)
             self._h = np.asarray(ov.h, np.float32)
             self._w = np.asarray(ov.w, np.float32)
             self._t0 = t0
+            if self.prefetch and t0 + self.slab < self.T:
+                self._next = self._dispatch_slab(t0 + self.slab)
+                self._next_t0 = t0 + self.slab
         return t0
 
     def wave(self, t: int) -> Wave:

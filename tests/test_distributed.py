@@ -415,3 +415,47 @@ class TestShardedGateway:
             print("OK")
         """, n_devices=4)
         assert "OK" in out
+
+    def test_pipelined_loop_on_mesh_matches_single_device(self):
+        """The depth-bounded wave pipeline over a mesh-sharded core —
+        warmup compiles included — still replays the unsharded
+        sequential core's decision stream bit for bit."""
+        out = run_with_devices("""
+            import numpy as np, jax
+            from repro.launch.mesh import make_test_mesh
+            from repro.serve.compile import compile_service_streaming
+            from repro.serve.gateway import GatewayCore, run_pipelined_loop
+            from repro.serve.simulator import SimConfig, synthetic_pool
+            from repro.workload.loadgen import ServiceLoadGen
+
+            assert jax.device_count() == 4
+            pool = synthetic_pool()
+            sim = SimConfig(num_devices=32, T=96, algo="onalgo", seed=4)
+            ss = compile_service_streaming(sim, pool)
+            mesh = make_test_mesh((4,), ("data",))
+
+            ref = GatewayCore.for_service(ss)
+            lg = ServiceLoadGen(ss)
+            offs, adms = [], []
+            for wv in lg.waves(0, 96):
+                o, a = ref.tick(wv.idx, wv.o, wv.h, wv.w)
+                offs.append(o); adms.append(a)
+
+            sh = GatewayCore.for_service(ss, mesh=mesh)
+            sh.warmup()  # throwaway state shares the mesh sharding
+            replies, stats = run_pipelined_loop(
+                sh, ServiceLoadGen(ss), 0, 96, max_in_flight=2,
+                slo_ms=60_000.0)
+            assert stats.waves == 96 and stats.fallback_waves == 0
+            assert stats.overlapped_waves > 0
+            for t, r in enumerate(replies):
+                assert not r.fallback and r.t == t
+                assert np.array_equal(r.offload, offs[t]), t
+                assert np.array_equal(r.admitted, adms[t]), t
+            assert np.array_equal(np.asarray(ref.state.lam),
+                                  np.asarray(sh.state.lam))
+            shd = sh.state.lam.sharding
+            assert getattr(shd, "spec", None) is not None, shd
+            print("OK")
+        """, n_devices=4)
+        assert "OK" in out

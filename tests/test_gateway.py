@@ -2,6 +2,8 @@
 degradation, queue bounds, and the wave/bucket machinery."""
 
 import asyncio
+import json
+import threading
 import time
 
 import numpy as np
@@ -10,9 +12,10 @@ import pytest
 from repro.core import fleet
 from repro.serve.compile import compile_service, compile_service_streaming
 from repro.serve.engine import Batcher, WaveBuckets
-from repro.serve.gateway import (GatewayCore, LiveGateway, default_buckets,
+from repro.serve.gateway import (GatewayCore, GatewayStats, LatencyReservoir,
+                                 LiveGateway, default_buckets,
                                  drive_closed_loop, run_closed_loop,
-                                 run_open_loop)
+                                 run_open_loop, run_pipelined_loop)
 from repro.serve.simulator import SimConfig, synthetic_pool
 from repro.topology import Topology
 from repro.workload.loadgen import ServiceLoadGen
@@ -44,6 +47,19 @@ def batch(sim, pool):
 @pytest.fixture(scope="module")
 def streaming(sim, pool):
     return compile_service_streaming(sim, pool)
+
+
+def _masks_from_replies(replies, loadgen, slots, n):
+    """Scatter slot-ordered replies back into (T, N) decision masks,
+    asserting every wave was served (no fallback) in slot order."""
+    off = np.zeros((slots, n), bool)
+    adm = np.zeros_like(off)
+    for t, r in enumerate(replies):
+        assert not r.fallback and r.t == t
+        wv = loadgen.wave(t)
+        off[t, wv.idx] = r.offload
+        adm[t, wv.idx] = r.admitted
+    return off, adm
 
 
 def _replay(core, loadgen, slots):
@@ -117,11 +133,23 @@ class TestGatewayCore:
                     np.concatenate([getattr(p, f) for p in parts]),
                     getattr(ref, f))
 
+    def test_prefetch_waves_bit_identical(self, streaming):
+        """prefetch=True only dispatches slab generation early — the
+        emitted wave stream is unchanged bit for bit."""
+        plain = ServiceLoadGen(streaming, slab=32)
+        pre = ServiceLoadGen(streaming, slab=32, prefetch=True)
+        for t in range(T):
+            a, b = plain.wave(t), pre.wave(t)
+            assert np.array_equal(a.idx, b.idx), t
+            for f in ("o", "h", "w"):
+                assert np.array_equal(getattr(a, f), getattr(b, f)), t
+
     def test_tick_async_matches_sync_ticks(self, streaming):
         """Double-buffered dispatch: a run of tick_async dispatches —
         every pending tick resolved only after ALL slots are in flight —
         produces the same decisions, state, and stats as blocking
-        ticks, and feeds no latency estimates (nothing was timed)."""
+        ticks; a bare ``resolve()`` never feeds the resolve EMA (only
+        resolve_timed / tick measure device time)."""
         slots = 24
         loadgen = ServiceLoadGen(streaming)
         sync = GatewayCore.for_service(streaming)
@@ -131,11 +159,14 @@ class TestGatewayCore:
             ref.append(sync.tick(wv.idx, wv.o, wv.h, wv.w))
             pend.append(asyn.tick_async(wv.idx, wv.o, wv.h, wv.w))
         assert asyn.slots == slots and asyn.stats.ticks == slots
-        assert asyn._est_ms == {}  # async ticks never feed the EMA
+        # dispatch is timed sync-free (warm ticks), resolve never was
+        assert asyn._est_resolve_ms == {}
+        assert asyn._est_dispatch_ms  # warm dispatches did vote
         for (off_ref, adm_ref), p in zip(ref, pend):
             off, adm = p.resolve()  # late resolve: decisions unchanged
             assert np.array_equal(off, off_ref)
             assert np.array_equal(adm, adm_ref)
+        assert asyn._est_resolve_ms == {}  # still nothing timed a sync
         assert np.array_equal(np.asarray(asyn.state.lam),
                               np.asarray(sync.state.lam))
         assert np.array_equal(np.asarray(asyn.state.rho.counts),
@@ -223,17 +254,18 @@ class TestLiveGateway:
         assert core.slots == 2
 
     def test_full_queue_sheds_with_fallback(self, streaming):
-        """Overload: with a slow tick and a tiny queue, excess chunks
-        are shed at submit time with fallback replies, queued ones merge
-        into micro-batched waves, and every future resolves."""
+        """Overload: with a slow dispatch and a tiny queue, excess
+        chunks are shed at submit time with fallback replies, queued
+        ones merge into micro-batched waves, and every future
+        resolves."""
         core = GatewayCore.for_service(streaming)
-        real_tick = core.tick
+        real_async = core.tick_async
 
-        def slow_tick(idx, o, h, w):
+        def slow_async(idx, o, h, w):
             time.sleep(0.05)
-            return real_tick(idx, o, h, w)
+            return real_async(idx, o, h, w)
 
-        core.tick = slow_tick
+        core.tick_async = slow_async
         lg = ServiceLoadGen(streaming)
 
         async def run():
@@ -291,6 +323,242 @@ class TestLiveGateway:
         assert len(replies2) == slots
         assert stats2.chunks == slots
         assert stats2.waves <= stats2.chunks
+
+
+class TestPipelinedGateway:
+    """The PR's non-negotiable invariant: the depth-bounded wave
+    pipeline (dispatch wave t+1 while wave t resolves) produces a
+    decision stream bit-identical to the sequential loop and to the
+    batch replay, at every depth."""
+
+    @pytest.mark.parametrize("depth", [1, 2, 4])
+    def test_bit_identical_across_depths(self, batch, streaming, depth):
+        _, series, fin = batch
+        core = GatewayCore.for_service(streaming)
+        core.warmup()
+        lg = ServiceLoadGen(streaming, prefetch=True)
+        replies, stats = run_pipelined_loop(core, lg, 0, T,
+                                            max_in_flight=depth,
+                                            slo_ms=60_000.0)
+        off, adm = _masks_from_replies(replies, lg, T, N)
+        assert np.array_equal(off, np.asarray(series["offload_mask"]))
+        assert np.array_equal(adm, np.asarray(series["admit_mask"]))
+        assert np.array_equal(np.asarray(core.state.lam),
+                              np.asarray(fin.lam))
+        assert np.array_equal(np.asarray(core.state.rho.counts),
+                              np.asarray(fin.rho.counts))
+        assert stats.waves == T and stats.fallback_waves == 0
+        assert stats.max_in_flight_seen <= depth
+        if depth == 1:
+            # sequential bit-for-bit: no wave ever overlapped another
+            assert stats.overlapped_waves == 0
+        else:
+            assert stats.overlapped_waves > 0  # the pipeline filled
+
+    @pytest.mark.parametrize("build", [
+        lambda: Topology.hotspot(4, N, H=8e8),
+        lambda: Topology.mobility_walk(3, N, T, H=8e8, seed=7),
+    ], ids=["hotspot_k4", "mobility_k3"])
+    def test_topology_pipelined_bit_identical(self, batch, streaming,
+                                              build):
+        """Per-cloudlet duals + time-varying association maps survive
+        the overlapped loop bit for bit."""
+        topo = build()
+        cs, _, _ = batch
+        series, _ = fleet.simulate(cs.trace, cs.tables, cs.params, cs.rule,
+                                   algo="onalgo", overlay=cs.overlay,
+                                   enforce_slot_capacity=True,
+                                   topology=topo, collect_decisions=True)
+        core = GatewayCore.for_service(streaming, topology=topo)
+        core.warmup()
+        lg = ServiceLoadGen(streaming)
+        replies, stats = run_pipelined_loop(core, lg, 0, T,
+                                            max_in_flight=3,
+                                            slo_ms=60_000.0)
+        off, adm = _masks_from_replies(replies, lg, T, N)
+        assert np.array_equal(off, np.asarray(series["offload_mask"]))
+        assert np.array_equal(adm, np.asarray(series["admit_mask"]))
+        assert stats.waves == T and stats.overlapped_waves > 0
+
+    def test_slo_fallback_under_overlap_keeps_state_order(self,
+                                                          streaming):
+        """A wave that trips the SLO check while an earlier wave is
+        still in flight is answered with fallback decisions WITHOUT
+        being dispatched: the in-flight wave and later waves tick the
+        state strictly in dispatch order, exactly like a sequential
+        run that never saw the fallback wave."""
+        core = GatewayCore.for_service(streaming)
+        core.warmup()
+        lg = ServiceLoadGen(streaming)
+        w0, w1, w2 = lg.wave(0), lg.wave(1), lg.wave(2)
+        release = threading.Event()
+        real_resolve = core.resolve_timed
+
+        def gated_resolve(pending):
+            assert release.wait(30)
+            return real_resolve(pending)
+
+        core.resolve_timed = gated_resolve
+
+        async def run():
+            async with LiveGateway(core, slo_ms=50.0, max_in_flight=2,
+                                   coalesce=False) as gw:
+                fut0 = asyncio.ensure_future(
+                    gw.submit(w0.idx, w0.o, w0.h, w0.w))
+                while core.slots == 0:  # w0 dispatched, unresolved
+                    await asyncio.sleep(0.002)
+                core.seed_estimate(w1.size, 10_000.0)  # blow the budget
+                r1 = await gw.submit(w1.idx, w1.o, w1.h, w1.w)
+                assert r1.fallback and not fut0.done()  # answered mid-flight
+                core.seed_estimate(w1.size, 0.0)
+                core.seed_estimate(w2.size, 0.0)
+                fut2 = asyncio.ensure_future(
+                    gw.submit(w2.idx, w2.o, w2.h, w2.w))
+                while core.slots < 2:  # w2 dispatched behind gated w0
+                    await asyncio.sleep(0.002)
+                assert not fut0.done() and not fut2.done()
+                release.set()
+                return await fut0, r1, await fut2, gw.stats
+
+        r0, r1, r2, stats = asyncio.run(asyncio.wait_for(run(), 60))
+        assert not r0.fallback and r0.t == 0
+        assert r1.fallback and r1.t == -1
+        assert not r1.offload.any() and not r1.admitted.any()
+        assert not r2.fallback and r2.t == 1  # the fallback never ticked
+        assert stats.waves == 2 and stats.fallback_waves == 1
+        assert stats.max_in_flight_seen == 2
+        # surviving decisions + state == a sequential core fed only the
+        # served waves, in the same order
+        seq = GatewayCore.for_service(streaming)
+        off0, adm0 = seq.tick(w0.idx, w0.o, w0.h, w0.w)
+        off1, adm1 = seq.tick(w2.idx, w2.o, w2.h, w2.w)
+        assert np.array_equal(r0.offload, off0)
+        assert np.array_equal(r0.admitted, adm0)
+        assert np.array_equal(r2.offload, off1)
+        assert np.array_equal(r2.admitted, adm1)
+        assert np.array_equal(np.asarray(core.state.lam),
+                              np.asarray(seq.state.lam))
+        assert np.array_equal(np.asarray(core.state.rho.counts),
+                              np.asarray(seq.state.rho.counts))
+
+    def test_coalesce_false_keeps_one_chunk_per_wave(self, streaming):
+        """With merging off, a backlog of queued chunks never collapses
+        into a micro-batch — every chunk stays its own slot."""
+        core = GatewayCore.for_service(streaming)
+        lg = ServiceLoadGen(streaming)
+        replies, stats = run_pipelined_loop(core, lg, 0, 32,
+                                            max_in_flight=2, window=8,
+                                            slo_ms=60_000.0)
+        assert stats.waves == 32 and stats.chunks == 32
+        assert [r.t for r in replies] == list(range(32))
+
+    def test_depth_validation(self, streaming):
+        core = GatewayCore.for_service(streaming)
+        with pytest.raises(ValueError, match="max_in_flight"):
+            LiveGateway(core, max_in_flight=0)
+
+
+class TestWarmup:
+    def test_warmup_compiles_off_the_serve_path(self, batch, streaming):
+        """warmup() precompiles every bucket against a throwaway state:
+        slot counter, EMAs, and persistent state are untouched, the
+        first real wave per bucket is a warm tick, and the subsequent
+        replay is still bit-identical from slot 0."""
+        _, series, _ = batch
+        core = GatewayCore.for_service(streaming, buckets=(8, N))
+        assert core.warmup() == [8, N]
+        assert core.stats.compiles == 2 and core.stats.ticks == 0
+        assert core.slots == 0
+        assert int(np.asarray(core.state.rho.t)) == 0  # state untouched
+        assert core.estimate_ms(1) == 0.0  # compiles never feed the EMA
+        lg = ServiceLoadGen(streaming)
+        off, adm, _ = _replay(core, lg, T)
+        assert np.array_equal(off, np.asarray(series["offload_mask"]))
+        assert np.array_equal(adm, np.asarray(series["admit_mask"]))
+        assert core.stats.compiles == 2  # no serve-path compile happened
+        assert core.estimate_ms(1) > 0.0  # first real tick was warm
+
+    def test_warmup_subset_background_and_validation(self, streaming):
+        core = GatewayCore.for_service(streaming, buckets=(8, N))
+        assert core.warmup(n_reports=3) == [8]
+        assert core.stats.compiles == 1
+        th = core.warmup(background=True)  # compiles the rest
+        th.join(60)
+        assert not th.is_alive()
+        assert core.stats.compiles == 2
+        assert core.warmup(buckets=(8,)) == [8]  # idempotent re-warm
+        with pytest.raises(ValueError, match="not both"):
+            core.warmup(n_reports=3, buckets=(8,))
+
+
+class TestLatencyReservoir:
+    def test_exact_below_capacity(self):
+        r = LatencyReservoir(capacity=128)
+        vals = np.linspace(5.0, 10.0, 100)
+        for v in vals:
+            r.append(v)
+        assert len(r) == 100
+        assert r.percentile(50.0) == pytest.approx(np.percentile(vals, 50))
+        assert r.percentile(99.0) == pytest.approx(np.percentile(vals, 99))
+
+    def test_bounded_memory_pinned_accuracy(self):
+        """50k samples of a known distribution through a 4k reservoir:
+        p50/p99 stay within sampling error of the exact stream
+        percentiles while memory stays at capacity."""
+        r = LatencyReservoir(capacity=4096, seed=7)
+        vals = np.random.RandomState(0).permutation(
+            np.linspace(0.0, 100.0, 50_001))
+        for v in vals:
+            r.append(v)
+        assert len(r) == 50_001
+        assert r.sample().shape == (4096,)
+        assert abs(r.percentile(50.0) - 50.0) < 3.0
+        assert abs(r.percentile(99.0) - 99.0) < 1.0
+
+    def test_empty_validation_and_stats_api(self):
+        assert np.isnan(LatencyReservoir().percentile(50.0))
+        with pytest.raises(ValueError, match="capacity"):
+            LatencyReservoir(capacity=1)
+        st = GatewayStats()  # same percentile()/summary() surface
+        assert np.isnan(st.percentile(99.0))
+        st.latencies_ms.append(4.0)
+        assert st.percentile(50.0) == 4.0
+        assert st.summary()["latency_count"] == 1
+
+
+class TestSeedFromTrajectory:
+    def _rows(self):
+        def row(config, p50, pr):
+            return {"bench": "gateway", "config": config, "pr": pr,
+                    "devslots_per_sec": 1.0, "p99_ms": 2 * p50,
+                    "peak_bytes": 1, "p50_ms": p50}
+        return [row("N1024", 3.5, 6), row("N16384", 9.0, 6),
+                row("N1024", 4.0, 7)]
+
+    def test_bulk_warm_start(self, streaming, tmp_path):
+        path = tmp_path / "BENCH_gateway.json"
+        path.write_text(json.dumps(self._rows()))
+        core = GatewayCore.for_service(streaming)
+        assert core.estimate_ms(5) == 0.0  # cold: nothing known
+        ms = core.seed_from_trajectory(path)
+        assert ms == 4.0  # nearest fleet size, latest committed row
+        assert core.estimate_ms(5) == 4.0
+        # live measurements are never clobbered by a re-seed
+        core.seed_estimate(5, 1.25)
+        core.seed_from_trajectory(path)
+        assert core.estimate_ms(5) == 1.25
+        # explicit config pick + clear error when nothing matches
+        core2 = GatewayCore.for_service(streaming)
+        assert core2.seed_from_trajectory(path, config="N16384") == 9.0
+        with pytest.raises(ValueError, match="no gateway row"):
+            core2.seed_from_trajectory(path, config="N999")
+
+    def test_committed_file_seeds_cold_core(self, streaming):
+        """The repo's own committed trajectory is a valid seed source."""
+        from benchmarks.trajectory import bench_path
+        core = GatewayCore.for_service(streaming)
+        assert core.seed_from_trajectory(bench_path("gateway")) > 0.0
+        assert core.estimate_ms(1) > 0.0
 
 
 class TestWaveBuckets:
