@@ -1,0 +1,123 @@
+"""Gain-source benchmark: what a trained predictor costs in the loop.
+
+Drives fig5-style end-to-end service runs through the streaming chunked
+engine with each :class:`~repro.gain.GainSource` tier behind the fused
+value lowering — the pool's own tables (oracle), and a class-specific
+ridge :class:`~repro.gain.ModelGain` resolved from the images' local
+softmax output.  Because a source resolves ONCE at compile time into the
+same (S,) device tables the engines always gather from, the steady-state
+devslots/sec should be source-independent; the bench exists to hold that
+claim (the committed rows gate it) and to price the one-off resolution:
+
+  * devslots/sec throughput per source (the gate metric);
+  * ``resolve_ms`` — model inference + quantization over the whole pool;
+  * ``mae`` — predictor estimation error vs the pool's true gains
+    (paper Fig. 4 reports ~12% for this configuration);
+  * ``accuracy`` — the end-to-end service accuracy under each source.
+
+Runs in CI interpret mode (``--only gain``); ``trajectory_rows`` pins
+the "table" and "model" configs as the committed BENCH_gain.json gate
+points.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import PeakTracker, emit
+from benchmarks.trajectory import make_row
+from repro.gain import (ModelGain, TableGain, fit_ridge_gain, oracle_pool,
+                        synthetic_gain_problem)
+from repro.serve.simulator import SimConfig, simulate_service
+
+N = 2048
+T = 256
+SLAB = 64
+CHUNK = 16
+POOL_S = 4096
+
+
+def _sim(N: int, T: int) -> SimConfig:
+    # fig5 per-device budget, tight total capacity (1 task/slot per 4
+    # devices) so the duals engage and the gain tables actually steer
+    # admission during the run
+    return SimConfig(num_devices=N, T=T, algo="onalgo", B_n=0.06,
+                     H=N / 4 * 441e6, seed=1)
+
+
+def _problem(S: int = POOL_S, seed: int = 0):
+    """(sources dict, oracle pool, per-source MAE vs the true gains)."""
+    probs, gains = synthetic_gain_problem(S=S, seed=seed)
+    pool = oracle_pool(probs, gains, seed=seed)
+    ridge = fit_ridge_gain(probs, gains)
+    phi = np.asarray(ridge.apply(np.asarray(probs, np.float32))[0])
+    sources = {"table": TableGain(), "model": ModelGain(ridge, probs)}
+    mae = {"table": 0.0,
+           "model": float(np.abs(phi - gains).mean())}
+    return sources, pool, mae
+
+
+def _resolve_ms(src, pool, sim) -> float:
+    """One-off source-resolution cost: tables + space, post-warm."""
+    src.tables(pool, sim)  # warm the jits
+    t0 = time.perf_counter()
+    gt = src.tables(pool, sim)
+    np.asarray(gt.phi_hat)  # block
+    src.space(pool, sim)
+    return (time.perf_counter() - t0) * 1e3
+
+
+def _run_source(sim: SimConfig, pool, src):
+    """Warmed + timed streaming chunked run under one gain source."""
+    kwargs = dict(engine="chunked", materialize=False, slab=SLAB,
+                  chunk=CHUNK, gain_source=src)
+    with PeakTracker() as peak:
+        simulate_service(sim, pool, **kwargs)  # warm the jits
+        t0 = time.perf_counter()
+        out = simulate_service(sim, pool, **kwargs)
+        dt = time.perf_counter() - t0
+    return out, dt, peak.peak_bytes
+
+
+def trajectory_rows(pr: int) -> list:
+    """Fast-config rows for the committed BENCH_gain.json trajectory."""
+    sim = _sim(N, T)
+    sources, pool, mae = _problem()
+    rows = []
+    for name, src in sources.items():
+        out, dt, peak_bytes = _run_source(sim, pool, src)
+        rows.append(make_row(
+            pr, "gain", name, N * T / dt, None, peak_bytes,
+            accuracy=round(out["accuracy"], 4), slots=T, devices=N,
+            pool_images=POOL_S, mae=round(mae[name], 4),
+            resolve_ms=round(_resolve_ms(src, pool, sim), 3)))
+    return rows
+
+
+def bench_gain():
+    sim = _sim(N, T)
+    sources, pool, mae = _problem()
+    base_rate = None
+    for name, src in sources.items():
+        out, dt, peak_bytes = _run_source(sim, pool, src)
+        rate = N * T / dt
+        if base_rate is None:
+            base_rate = rate
+        emit(f"gain/source={name}/N={N}/T={T}/S={POOL_S}", dt * 1e6 / T,
+             f"acc={out['accuracy']:.4f};offl={out['offload_frac']:.3f};"
+             f"devslots_per_s={rate:.0f};mae={mae[name]:.4f};"
+             f"resolve_ms={_resolve_ms(src, pool, sim):.2f};"
+             f"vs_table=x{rate / base_rate:.2f};"
+             f"peak_mb={peak_bytes / 1e6:.0f}")
+
+
+def run_all():
+    bench_gain()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run_all()

@@ -9,7 +9,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: figs,convergence,controller,kernels,"
-                         "compile_service,fleet_scale,topology,gateway")
+                         "compile_service,fleet_scale,topology,gateway,gain")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +40,9 @@ def main() -> None:
     if only is None or "gateway" in only:
         from benchmarks import bench_gateway
         bench_gateway.run_all()
+    if only is None or "gain" in only:
+        from benchmarks import bench_gain
+        bench_gain.run_all()
     print("benchmarks: done", file=sys.stderr)
 
 

@@ -36,7 +36,7 @@ from typing import Iterable, List, Optional
 SCHEMA = ("pr", "bench", "config", "devslots_per_sec", "p99_ms",
           "peak_bytes")
 THRESHOLD = 0.25  # >25% devslots/sec regression fails the gate
-BENCHES = ("gateway", "fleet_scale", "topology")
+BENCHES = ("gateway", "fleet_scale", "topology", "gain")
 _DIR = os.path.dirname(os.path.abspath(__file__))
 
 
@@ -190,6 +190,9 @@ def collect_rows(pr: int, benches=BENCHES) -> List[dict]:
         elif bench == "topology":
             from benchmarks import bench_topology
             rows += bench_topology.trajectory_rows(pr)
+        elif bench == "gain":
+            from benchmarks import bench_gain
+            rows += bench_gain.trajectory_rows(pr)
         else:
             raise ValueError(f"unknown bench {bench!r} "
                              f"(known: {', '.join(BENCHES)})")

@@ -76,7 +76,10 @@ class RawOverlay:
     decisions and series use the raw values, rho uses ``trace.j_idx``.
 
     o / h / w: (T, N) float32 observed power (W), cloudlet cycles, and
-      risk-adjusted predicted gain.
+      risk-adjusted predicted gain.  Where the gain comes from — pool
+      tables, a pre-folded overlay, or a trained predictor — is the
+      :mod:`repro.gain` tier's choice; by the time an overlay exists the
+      source has already been resolved into these raw streams.
     correct_local / correct_cloud: (T, N) float32 — whether the local /
       cloudlet classifier got this slot's sampled image right (drives the
       service accuracy series).

@@ -99,6 +99,19 @@ def init_state(num_devices: int, M: int,
     )
 
 
+def risk_adjusted_gain(phi_hat, sigma, v_risk):
+    """Eq. (1): w = clip(phi_hat - v * sigma, 0, 1).
+
+    The ONE definition of the risk-adjusted offloading gain — the service
+    lowering (``serve.compile._lower_values``) and every
+    :mod:`repro.gain` source (table / overlay / model) route through this
+    function, so a gain estimate pre-folded into a table is bit-identical
+    to the same expression fused into the per-slot gather path.
+    Elementwise float ops only: commutes exactly with gathers.
+    """
+    return jnp.clip(phi_hat - v_risk * sigma, 0.0, 1.0)
+
+
 def precondition_tables(o_tab, h_tab, params: OnAlgoParams):
     """Constraint-space tables: (o', h', B_eff, H_eff).
 

@@ -59,16 +59,23 @@ class GainPredictor:
         X = np.concatenate([X, np.ones((S, 1))], axis=-1)
         cls = np.argmax(local_probs, axis=-1)
         if self.class_specific:
+            # General fit computed once; classes with too few samples for a
+            # well-posed per-class solve fall back to it — including its
+            # residual std.  (Scoring a 1-sample class on its own residual
+            # gives sigma = 0: a maximally over-confident predictor exactly
+            # where the data is thinnest.)
+            w_gen = _ridge(X, gains, self.l2)
+            sig_gen = (gains - X @ w_gen).std()
             coefs, sigmas = [], []
             for c in range(C):
                 m = cls == c
                 if m.sum() < X.shape[1] + 2:  # fall back to global fit
-                    w = _ridge(X, gains, self.l2)
+                    coefs.append(w_gen)
+                    sigmas.append(sig_gen)
                 else:
                     w = _ridge(X[m], gains[m], self.l2)
-                r = gains[m] - X[m] @ w if m.any() else gains - X @ w
-                coefs.append(w)
-                sigmas.append(r.std() if r.size else gains.std())
+                    coefs.append(w)
+                    sigmas.append((gains[m] - X[m] @ w).std())
             self.coefs = np.stack(coefs)
             self.sigma = np.asarray(sigmas)
         else:

@@ -1,0 +1,150 @@
+"""Trained gain predictors with pure jitted inference.
+
+Two model families behind :class:`~repro.gain.source.ModelGain`:
+
+  :class:`RidgeGainModel` — the paper's best configuration (Fig. 4,
+    class-specific closed-form ridge, mean abs error ~12%) ported to a
+    jitted device function.  Fitting stays in
+    :class:`repro.data.predictor.GainPredictor` (closed-form, numpy);
+    inference — feature extraction, per-class coefficient gather, dot —
+    is one fused jit, so resolving a 10^5-image pool is a single device
+    pass.
+
+  :class:`SeqGainModel` — a tiny Mamba2/SSD sequence head
+    (:func:`repro.models.ssm.mamba_block`) over per-image probability
+    features, trained on trace history via ``train/trainer.py`` (see
+    :mod:`repro.gain.train`).  Inference runs the pool's images as one
+    sequence in index order (deterministic); sigma is a per-class
+    residual table measured on the training windows, exactly the
+    ridge's confidence semantics.
+
+Both expose ``apply(probs) -> (phi_hat, sigma)`` — float32 (S,) pairs —
+which is the entire contract :class:`ModelGain` needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.predictor import GainPredictor
+
+
+def probs_features_jnp(probs):
+    """Jit-traceable port of :func:`repro.data.predictor.probs_features`:
+    (top-1, top-2 margin, entropy, probs..., 1) -> (S, F+1) with the
+    ridge's bias column appended."""
+    top2 = jnp.sort(probs, axis=-1)[..., -2:]
+    margin = top2[..., 1] - top2[..., 0]
+    ent = -jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1)
+    ones = jnp.ones(probs.shape[:-1] + (1,), probs.dtype)
+    return jnp.concatenate(
+        [top2[..., 1:2], margin[..., None], ent[..., None], probs, ones],
+        axis=-1)
+
+
+@jax.jit
+def _ridge_apply(coefs, sigma_cls, probs):
+    X = probs_features_jnp(probs)  # (S, F+1)
+    cls = jnp.argmax(probs, axis=-1)
+    cls = jnp.minimum(cls, coefs.shape[0] - 1)  # (1,*) general-model case
+    phi = jnp.einsum("sf,sf->s", X, coefs[cls])
+    return phi, sigma_cls[jnp.minimum(cls, sigma_cls.shape[0] - 1)]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RidgeGainModel:
+    """Closed-form ridge coefficients as a jitted device predictor.
+
+    coefs: (C, F+1) class-specific — or (1, F+1) general — weights;
+    sigma: (C,) or (1,) per-class residual std (predictor confidence).
+    """
+
+    coefs: jax.Array
+    sigma: jax.Array
+
+    @classmethod
+    def from_predictor(cls, predictor: GainPredictor) -> "RidgeGainModel":
+        if predictor.coefs is None:
+            raise ValueError("predictor is not fitted")
+        return cls(coefs=jnp.asarray(predictor.coefs, jnp.float32),
+                   sigma=jnp.asarray(predictor.sigma, jnp.float32))
+
+    @classmethod
+    def fit(cls, local_probs, gains, *, class_specific: bool = True,
+            l2: float = 1e-3) -> "RidgeGainModel":
+        """Closed-form fit (general + class-specific) -> device model."""
+        pred = GainPredictor(class_specific=class_specific, l2=l2)
+        return cls.from_predictor(pred.fit(local_probs, gains))
+
+    def apply(self, probs):
+        """probs (S, C) float32 -> (phi_hat (S,), sigma (S,))."""
+        return _ridge_apply(self.coefs, self.sigma, probs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqGainConfig:
+    """Tiny Mamba2 head dims (d_inner must equal heads * headdim)."""
+
+    feat_dim: int
+    d_model: int = 16
+    d_inner: int = 32
+    ssm_state: int = 8
+    ssm_ngroups: int = 1
+    ssm_heads: int = 2
+    ssm_headdim: int = 16
+    ssm_conv_kernel: int = 2
+    dtype: object = jnp.float32
+
+    def as_model_cfg(self):
+        """The attribute bag ``repro.models.ssm`` expects."""
+        return SimpleNamespace(**dataclasses.asdict(self))
+
+
+def init_seq_params(key, cfg: SeqGainConfig) -> dict:
+    from repro.models.ssm import init_ssm
+    k1, k2, k3 = jax.random.split(key, 3)
+    mamba, _ = init_ssm(k2, cfg.as_model_cfg())
+    s = (2.0 / cfg.feat_dim) ** 0.5
+    return {
+        "w_feat": jax.random.normal(k1, (cfg.feat_dim, cfg.d_model),
+                                    jnp.float32) * s,
+        "b_feat": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mamba": mamba,
+        "w_head": jax.random.normal(k3, (cfg.d_model, 1),
+                                    jnp.float32) * (1.0 / cfg.d_model),
+        "b_head": jnp.zeros((), jnp.float32),
+    }
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def seq_apply(cfg: SeqGainConfig, params, feats):
+    """feats (b, L, feat_dim) -> per-position gain estimates (b, L)."""
+    from repro.models.ssm import mamba_block
+    x = feats @ params["w_feat"] + params["b_feat"]
+    y, _ = mamba_block(cfg.as_model_cfg(), params["mamba"], x)
+    return (y @ params["w_head"])[..., 0] + params["b_head"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SeqGainModel:
+    """Trained sequence head + per-class residual-sigma table.
+
+    ``apply`` runs the pool's images as ONE sequence in index order —
+    a pure jitted function of the probability matrix, so resolution is
+    deterministic and replayable.
+    """
+
+    cfg: SeqGainConfig
+    params: dict
+    sigma: jax.Array  # (C,) per-class residual std
+
+    def apply(self, probs):
+        feats = probs_features_jnp(probs)
+        phi = seq_apply(self.cfg, self.params, feats[None])[0]
+        cls = jnp.argmax(probs, axis=-1)
+        return phi, self.sigma[jnp.minimum(cls, self.sigma.shape[0] - 1)]

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fleet import RawOverlay, Trace
-from repro.core.onalgo import OnAlgoParams, StepRule
+from repro.core.onalgo import OnAlgoParams, StepRule, risk_adjusted_gain
 from repro.core.state_space import StateSpace
 from repro.serve.admission import quantize_states_device
 from repro.workload import (StreamingWorkload, generate_service_workload,
@@ -62,6 +62,7 @@ class CompiledService:
     params: OnAlgoParams
     overlay: RawOverlay
     on: np.ndarray
+    gain_source: object = None  # repro.gain.GainSource (None = pool tables)
 
     @property
     def rule(self) -> StepRule:
@@ -89,7 +90,7 @@ def _lower_values(wl, space, on_override, o_levels, cycles, phi_hat,
     on = wl.on if on_override is None else on_override
     o_raw = o_levels[wl.rates]
     h_raw = cycles[wl.img]
-    w_raw = jnp.clip(phi_hat[wl.img] - v_risk * sigma[wl.img], 0.0, 1.0)
+    w_raw = risk_adjusted_gain(phi_hat[wl.img], sigma[wl.img], v_risk)
     w_raw = jnp.clip(w_raw - zeta_pen, 0.0, 1.0)
     j = quantize_states_device(space, o_raw, h_raw, w_raw, on)
     return (on, j, o_raw, h_raw, w_raw, corr_local[wl.img],
@@ -131,16 +132,38 @@ def _space_tables(space: StateSpace):
     return space.tables()
 
 
-def _service_inputs(sim, pool):
+def _service_inputs(sim, pool, gain_source=None):
     """Shared pieces of both lowerings: validated contract, calibrated
-    space/tables/params, device pool arrays, scalar knobs."""
+    space/tables/params, device pool arrays, scalar knobs.
+
+    ``gain_source`` (a :class:`~repro.gain.GainSource`, or None for the
+    pool-table default) picks the per-image (phi_hat, sigma) tables that
+    enter the fused value lowering, and the state space calibrated to
+    them; everything else — cycles, correctness, d_local — always comes
+    from the pool.  ``None`` and ``TableGain()`` hit the identical
+    cached device arrays, so the default path is byte-for-byte today's.
+    """
     from repro.serve.simulator import (RATES, pool_fingerprint, pool_space,
                                        power_of_rate)
 
     validate_rng_version(sim.rng_version)
-    space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+    base = _pool_device_arrays(pool, pool_fingerprint(pool))
+    if gain_source is None:
+        space = pool_space(pool, num_w=sim.num_w_levels, v_risk=sim.v_risk)
+        phi, sig = base[1], base[2]
+    else:
+        from repro.gain.source import as_gain_source
+        gain_source = as_gain_source(gain_source)
+        gt = gain_source.tables(pool, sim)
+        space = gain_source.space(pool, sim)
+        phi = jnp.asarray(gt.phi_hat, jnp.float32)
+        sig = jnp.asarray(gt.sigma, jnp.float32)
+        if phi.shape != base[1].shape or sig.shape != base[2].shape:
+            raise ValueError(
+                f"gain source resolved tables of shape {phi.shape}/"
+                f"{sig.shape}; pool has {base[1].shape} images")
     arrays = ((jnp.asarray(power_of_rate(RATES), jnp.float32),)
-              + _pool_device_arrays(pool, pool_fingerprint(pool)))
+              + (base[0], phi, sig) + base[3:])
     params = OnAlgoParams(B=jnp.full((sim.num_devices,), sim.B_n,
                                      jnp.float32),
                           H=jnp.float32(sim.H))
@@ -149,8 +172,8 @@ def _service_inputs(sim, pool):
     return space, arrays, params, knobs, len(RATES)
 
 
-def compile_service(sim, pool, on: Optional[np.ndarray] = None
-                    ) -> CompiledService:
+def compile_service(sim, pool, on: Optional[np.ndarray] = None, *,
+                    gain_source=None) -> CompiledService:
     """Lower (SimConfig, PrecomputedPool) to a :class:`CompiledService`.
 
     Workload generation, value gathers, and quantization run as one
@@ -160,10 +183,15 @@ def compile_service(sim, pool, on: Optional[np.ndarray] = None
     ``on``: optional (T, N) bool arrival matrix overriding the built-in
     bursty traffic — e.g. ``CompiledScenario.task_mask()`` from the
     scenario engine, so the service tier replays fleet-tier workloads.
+
+    ``gain_source``: optional :class:`~repro.gain.GainSource` supplying
+    the per-image (phi_hat, sigma) tables behind the fused value
+    lowering (None = the pool's own tables, bit for bit).
     """
     N, T = sim.num_devices, sim.T
     S = len(pool.local_correct)
-    space, arrays, params, knobs, num_rates = _service_inputs(sim, pool)
+    space, arrays, params, knobs, num_rates = _service_inputs(
+        sim, pool, gain_source)
 
     if on is not None:
         on = np.asarray(on, bool)
@@ -187,7 +215,7 @@ def compile_service(sim, pool, on: Optional[np.ndarray] = None
         correct_cloud=jnp.asarray(c_cloud, jnp.float32))
     return CompiledService(sim=sim, space=space, trace=trace,
                            tables=_space_tables(space), params=params,
-                           overlay=overlay, on=on)
+                           overlay=overlay, on=on, gain_source=gain_source)
 
 
 @partial(jax.jit, static_argnames=("space", "length", "aligned"))
@@ -235,6 +263,7 @@ class StreamingService:
     wl: StreamingWorkload
     arrays: tuple  # (o_levels, cycles, phi_hat, sigma, d_local, cl, cc)
     knobs: tuple  # (v_risk, zeta_pen) traced scalars
+    gain_source: object = None  # repro.gain.GainSource (None = pool tables)
 
     @property
     def rule(self) -> StepRule:
@@ -272,21 +301,27 @@ class StreamingService:
                              correct_local=c_local, correct_cloud=c_cloud)
 
 
-def compile_service_streaming(sim, pool) -> StreamingService:
+def compile_service_streaming(sim, pool, *,
+                              gain_source=None) -> StreamingService:
     """Lower (SimConfig, PrecomputedPool) to a :class:`StreamingService`.
 
     The only O(T)-sized work is the workload layer's boundary-state
     lowering (one jitted scan over ROW_BLOCK-aligned blocks, O(T/64 * N)
     output); nothing (T, N)-sized is ever materialized.  Arrival
     overrides need the materialized path — use ``compile_service``.
+    ``gain_source`` as in :func:`compile_service`: the resolved (S,)
+    tables ride in ``arrays``, so every slab — full-width, aligned, or
+    column-addressed — gathers from the same source.
     """
-    space, arrays, params, knobs, num_rates = _service_inputs(sim, pool)
+    space, arrays, params, knobs, num_rates = _service_inputs(
+        sim, pool, gain_source)
     wl = lower_service_workload(sim.seed, sim.T, sim.num_devices,
                                 len(pool.local_correct), num_rates,
                                 tuple(sim.burst_len), sim.mean_gap)
     return StreamingService(sim=sim, space=space,
                             tables=_space_tables(space), params=params,
-                            wl=wl, arrays=arrays, knobs=knobs)
+                            wl=wl, arrays=arrays, knobs=knobs,
+                            gain_source=gain_source)
 
 
 def service_metrics(sim, series) -> dict:

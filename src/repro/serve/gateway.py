@@ -217,6 +217,19 @@ class GatewayCore:
         return cls(service.space, service.tables, service.params,
                    service.rule, service.sim.num_devices, **kw)
 
+    @classmethod
+    def for_sim(cls, sim, pool, *, gain_source=None, **kw) -> "GatewayCore":
+        """Build a core straight from (SimConfig, pool) under any
+        :class:`~repro.gain.GainSource` — the gateway analogue of
+        ``simulate_service(gain_source=...)``.  The source resolves at
+        compile time into the space/tables the tick consumes; table and
+        overlay sources keep the live decision stream bit-identical to
+        the batch engines' replay."""
+        from repro.serve.compile import compile_service_streaming
+        service = compile_service_streaming(sim, pool,
+                                            gain_source=gain_source)
+        return cls.for_service(service, **kw)
+
     # ------------------------------------------------------------------
     def _build_tick(self):
         N, space = self.N, self.space

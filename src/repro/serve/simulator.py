@@ -103,16 +103,37 @@ def build_pool(data: Dataset, pair: ClassifierPair,
         phi_hat=phi, sigma=sigma, cycles=cycles)
 
 
-def pool_space(pool: "PrecomputedPool", num_w: int = 8,
-               v_risk: float = 0.5) -> StateSpace:
-    """Pool-calibrated quantized state space (single source of truth).
+def calibrated_space(phi_hat: np.ndarray, sigma: np.ndarray,
+                     num_w: int = 8, v_risk: float = 0.5) -> StateSpace:
+    """State space calibrated to a per-image gain-table pair.
 
     The w grid must COVER the realized gain distribution (paper footnote
     5: granularity): a saturated top level makes the dual estimator
     undercount high-gain offloads and the power constraint then
-    equilibrates ~25% above budget.  Cached per (num_w, v_risk) on the
-    pool object (compile_service calls this once per run), keyed by the
-    pool's content fingerprint so in-place recalibration invalidates.
+    equilibrates ~25% above budget.  This is the uncached body of
+    :func:`pool_space`; the gain tier (:mod:`repro.gain`) calls it
+    directly to calibrate a space to a model-predicted table pair —
+    float64 in, so a model frozen back into a pool via
+    ``to_pool_tables()`` re-derives the identical space.
+    """
+    w_all = np.clip(np.asarray(phi_hat, np.float64)
+                    - v_risk * np.asarray(sigma, np.float64), 0.0, 1.0)
+    w_hi = max(float(np.quantile(w_all, 0.999)), 0.1)
+    return StateSpace(
+        o_levels=tuple(power_of_rate(RATES).tolist()),
+        h_levels=(441e6 - 90e6, 441e6, 441e6 + 90e6),
+        w_levels=tuple(np.linspace(0.0, w_hi, num_w).tolist()),
+    )
+
+
+def pool_space(pool: "PrecomputedPool", num_w: int = 8,
+               v_risk: float = 0.5) -> StateSpace:
+    """Pool-calibrated quantized state space (single source of truth).
+
+    Cached per (num_w, v_risk) on the pool object (compile_service calls
+    this once per run), keyed by the pool's content fingerprint so
+    in-place recalibration invalidates.  See :func:`calibrated_space`
+    for the calibration rule itself.
     """
     fp = pool_fingerprint(pool)
     cache = getattr(pool, "_space_cache", None)
@@ -121,13 +142,8 @@ def pool_space(pool: "PrecomputedPool", num_w: int = 8,
     cache = cache[1]
     key = (num_w, v_risk)
     if key not in cache:
-        w_all = np.clip(pool.phi_hat - v_risk * pool.sigma, 0.0, 1.0)
-        w_hi = max(float(np.quantile(w_all, 0.999)), 0.1)
-        cache[key] = StateSpace(
-            o_levels=tuple(power_of_rate(RATES).tolist()),
-            h_levels=(441e6 - 90e6, 441e6, 441e6 + 90e6),
-            w_levels=tuple(np.linspace(0.0, w_hi, num_w).tolist()),
-        )
+        cache[key] = calibrated_space(pool.phi_hat, pool.sigma,
+                                      num_w=num_w, v_risk=v_risk)
     return cache[key]
 
 
@@ -162,7 +178,8 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                      device_axis: str = "data", materialize: bool = True,
                      slab: Optional[int] = None, topology=None,
                      topo_binned: Optional[bool] = None,
-                     pipelined: Optional[bool] = None) -> dict:
+                     pipelined: Optional[bool] = None,
+                     gain_source=None) -> dict:
     """Run T slots of the service; returns aggregate metrics.
 
     Accounting follows the paper's comparison protocol (Sec. VI.C.2):
@@ -214,6 +231,17 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
     N >= 65536, bit-identical either way).  The chunked stream also
     gets the block-aligned slab source (one fewer covering uniform
     block generated per slab).
+
+    ``gain_source``: optional :class:`~repro.gain.GainSource` selecting
+    where the per-image offloading-gain estimate comes from —
+    ``TableGain()`` (the pool's phi_hat/sigma tables; the default
+    ``None`` is this, bit for bit), ``OverlayGain()`` (risk pre-folded
+    into one raw gain table — the RawOverlay raw-value path), or
+    ``ModelGain(...)`` (a trained predictor's jitted inference fills the
+    tables).  Table/overlay reproduce today's decision streams
+    bit-identically on every engine; the source only swaps the (S,)
+    tables behind the fused lowering, so every engine above is
+    unchanged.
     """
     from repro.serve.compile import (compile_service,
                                      compile_service_streaming,
@@ -240,7 +268,7 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
         from repro.core.fleet import (simulate_chunked_stream,
                                       simulate_sharded_stream)
 
-        cs = compile_service_streaming(sim, pool)
+        cs = compile_service_streaming(sim, pool, gain_source=gain_source)
         if engine == "chunked":
             series, _ = simulate_chunked_stream(
                 cs.slab, sim.T, sim.num_devices, cs.tables, cs.params,
@@ -257,7 +285,7 @@ def simulate_service(sim: SimConfig, pool: PrecomputedPool,
                 pipelined=pipelined)
         return service_metrics(sim, series)
 
-    cs = compile_service(sim, pool, on)
+    cs = compile_service(sim, pool, on, gain_source=gain_source)
     if engine == "scan":
         series, _ = simulate(*cs.simulate_args(), cs.rule,
                              algo=sim.algo, ato_theta=sim.ato_theta,

@@ -1,0 +1,328 @@
+"""Gain-predictor subsystem: source bit-identity across every engine,
+ridge correctness, the predictor fallback guard, the model round-trip
+through frozen pool tables, and the service-accuracy regret gate."""
+
+import numpy as np
+import pytest
+
+try:  # optional [test] extra — property tests ride along when present
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.data.predictor import GainPredictor, probs_features
+from repro.gain import (ModelGain, OverlayGain, RidgeGainModel, TableGain,
+                        as_gain_source, fit_ridge_gain, oracle_pool,
+                        snap_to_grid, synthetic_gain_problem)
+from repro.serve.simulator import (SimConfig, simulate_service,
+                                   synthetic_pool)
+
+SERVICE_METRICS = ("accuracy", "offload_frac", "admit_frac",
+                   "avg_power_per_dev", "avg_load", "avg_delay_ms",
+                   "tasks", "mu_final")
+
+
+def _random_probs(rng, S, C):
+    logits = rng.normal(0.0, 1.5, (S, C))
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    return p / p.sum(-1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return synthetic_pool(seed=2)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    probs, gains = synthetic_gain_problem(S=256, seed=0)
+    return probs, gains, oracle_pool(probs, gains, seed=0)
+
+
+class TestRidge:
+    def test_closed_form_matches_lstsq(self):
+        """The closed-form normal-equations solve == numpy lstsq in the
+        tiny-l2 limit.  The design is exactly rank-deficient (probs sum
+        to 1, plus a bias column), so the COEFFICIENTS differ between
+        ridge and the min-norm solution — the fitted values are what the
+        closed form must reproduce."""
+        rng = np.random.default_rng(0)
+        probs = _random_probs(rng, 400, 6)
+        gains = np.clip(0.3 * (1 - probs.max(-1))
+                        + rng.normal(0, 0.01, 400), 0, 1)
+        X = probs_features(probs)
+        X = np.concatenate([X, np.ones((400, 1))], axis=-1)
+        pred = GainPredictor(class_specific=False, l2=1e-10).fit(probs,
+                                                                 gains)
+        w_ref, *_ = np.linalg.lstsq(X, gains, rcond=None)
+        np.testing.assert_allclose(X @ pred.coefs[0], X @ w_ref,
+                                   atol=1e-5)
+
+    def test_class_specific_beats_general(self):
+        """Per-class fits must not lose to the single general fit on a
+        problem with real per-class structure (paper Fig. 4 ordering)."""
+        rng = np.random.default_rng(1)
+        C = 5
+        probs = _random_probs(rng, 2000, C)
+        offs = rng.uniform(0, 0.3, C)[probs.argmax(-1)]
+        gains = np.clip(0.2 * (1 - probs.max(-1)) + offs
+                        + rng.normal(0, 0.01, 2000), 0, 1)
+        spec = GainPredictor(class_specific=True).fit(probs, gains)
+        gen = GainPredictor(class_specific=False).fit(probs, gains)
+        assert spec.mae(probs, gains) <= gen.mae(probs, gains) + 1e-9
+
+    def test_thin_class_falls_back_to_general(self):
+        """A class with too few samples for a well-posed solve gets the
+        GENERAL coefficients AND the general residual std — never a
+        sigma computed on its own handful of residuals (a 1-sample
+        class would report sigma = 0: total confidence, no data)."""
+        rng = np.random.default_rng(2)
+        C = 4
+        probs = _random_probs(rng, 300, C)
+        # force class 3 to appear exactly once
+        order = np.argsort(probs, axis=-1)
+        is3 = probs.argmax(-1) == 3
+        idx3 = np.flatnonzero(is3)
+        for i in idx3[1:]:
+            probs[i, order[i, -1]], probs[i, order[i, -2]] = \
+                probs[i, order[i, -2]], probs[i, order[i, -1]]
+        cls = probs.argmax(-1)
+        assert (cls == 3).sum() == 1
+        gains = np.clip(0.3 * (1 - probs.max(-1))
+                        + rng.normal(0, 0.02, 300), 0, 1)
+        pred = GainPredictor(class_specific=True).fit(probs, gains)
+        gen = GainPredictor(class_specific=False).fit(probs, gains)
+        np.testing.assert_array_equal(pred.coefs[3], gen.coefs[0])
+        assert pred.sigma[3] == pytest.approx(float(gen.sigma[0]))
+        assert pred.sigma[3] > 0
+
+    def test_device_model_matches_numpy_predictor(self):
+        """RidgeGainModel's fused jitted inference == the numpy
+        GainPredictor it ports, for class-specific and general fits."""
+        rng = np.random.default_rng(3)
+        probs = _random_probs(rng, 500, 8)
+        gains = np.clip(0.25 * (1 - probs.max(-1))
+                        + rng.normal(0, 0.02, 500), 0, 1)
+        for cs in (True, False):
+            pred = GainPredictor(class_specific=cs).fit(probs, gains)
+            model = RidgeGainModel.from_predictor(pred)
+            phi_np, sig_np = pred.predict(probs)
+            phi_j, sig_j = model.apply(np.asarray(probs, np.float32))
+            np.testing.assert_allclose(np.asarray(phi_j), phi_np,
+                                       atol=2e-5)
+            np.testing.assert_allclose(np.asarray(sig_j), sig_np,
+                                       atol=2e-5)
+
+
+class TestSourceBitIdentity:
+    @pytest.mark.parametrize("src", ["table", "overlay"])
+    @pytest.mark.parametrize("engine_kw", [
+        dict(engine="scan"),
+        dict(engine="chunked", chunk=8),
+        dict(engine="chunked", chunk=8, materialize=False, slab=32),
+    ], ids=["scan", "chunked", "streaming"])
+    def test_trivial_sources_reproduce_default(self, pool, src, engine_kw):
+        """table/overlay sources == gain_source=None, bit for bit, on
+        the scan, materialized-chunked, and streaming engines."""
+        sim = SimConfig(num_devices=4, T=160, algo="onalgo", seed=5)
+        ref = simulate_service(sim, pool, **engine_kw)
+        out = simulate_service(sim, pool, gain_source=src, **engine_kw)
+        for k in SERVICE_METRICS:
+            assert out[k] == ref[k], (src, k)
+
+    def test_topology_k_gt_1_bit_identical(self, pool):
+        """Per-cloudlet duals (K > 1) replay identically under the
+        overlay source — the gain tier composes with the topology tier."""
+        from repro.topology import Topology
+        N = 8
+        sim = SimConfig(num_devices=N, T=120, algo="onalgo", seed=6)
+        topo = Topology.hotspot(3, N, H=8e8)
+        ref = simulate_service(sim, pool, topology=topo)
+        out = simulate_service(sim, pool, topology=topo,
+                               gain_source=OverlayGain())
+        for k in SERVICE_METRICS:
+            assert out[k] == ref[k], k
+
+    def test_gateway_replay_per_source(self, problem):
+        """GatewayCore accepts every source, and the tick-by-tick live
+        replay == the batch scan decisions for each one."""
+        from repro.core import fleet
+        from repro.serve.compile import (compile_service,
+                                         compile_service_streaming)
+        from repro.serve.gateway import GatewayCore
+        from repro.workload.loadgen import ServiceLoadGen
+        probs, gains, opool = problem
+        sim = SimConfig(num_devices=6, T=100, algo="onalgo", seed=3)
+        ridge = fit_ridge_gain(probs, gains)
+        for name, src in [("table", TableGain()),
+                          ("overlay", OverlayGain()),
+                          ("model", ModelGain(ridge, probs))]:
+            cs = compile_service(sim, opool, gain_source=src)
+            series, _ = fleet.simulate(
+                cs.trace, cs.tables, cs.params, cs.rule, algo="onalgo",
+                overlay=cs.overlay, enforce_slot_capacity=True,
+                collect_decisions=True)
+            streaming = compile_service_streaming(sim, opool,
+                                                  gain_source=src)
+            core = GatewayCore.for_service(streaming)
+            off = np.zeros((sim.T, core.N), bool)
+            for wv in ServiceLoadGen(streaming).waves(0, sim.T):
+                o, _ = core.tick(wv.idx, wv.o, wv.h, wv.w)
+                off[wv.t, wv.idx] = o
+            assert np.array_equal(
+                off, np.asarray(series["offload_mask"])), name
+
+    def test_for_sim_accepts_all_sources(self, problem):
+        from repro.serve.gateway import GatewayCore
+        probs, gains, opool = problem
+        sim = SimConfig(num_devices=4, T=50, algo="onalgo", seed=1)
+        ridge = fit_ridge_gain(probs, gains)
+        for src in (None, "table", "overlay", ModelGain(ridge, probs)):
+            core = GatewayCore.for_sim(sim, opool, gain_source=src)
+            assert core.N == 4
+
+    def test_as_gain_source_coercion(self):
+        assert isinstance(as_gain_source(None), TableGain)
+        assert isinstance(as_gain_source("overlay"), OverlayGain)
+        src = TableGain()
+        assert as_gain_source(src) is src
+        with pytest.raises(ValueError):
+            as_gain_source("no_such_source")
+        with pytest.raises(TypeError):
+            as_gain_source(42)
+
+
+class TestModelGain:
+    def test_quantized_tables_live_on_grid(self, problem):
+        probs, gains, opool = problem
+        sim = SimConfig(num_devices=4, T=50, algo="onalgo", seed=1)
+        mg = ModelGain(fit_ridge_gain(probs, gains), probs)
+        gt = mg.tables(opool, sim)
+        phi = np.asarray(gt.phi_hat)
+        assert len(np.unique(phi)) <= sim.num_w_levels
+
+    def test_probs_shape_validated(self, problem):
+        probs, gains, opool = problem
+        sim = SimConfig(num_devices=4, T=50, algo="onalgo", seed=1)
+        mg = ModelGain(fit_ridge_gain(probs, gains), probs[:10])
+        with pytest.raises(ValueError, match="does not cover"):
+            mg.tables(opool, sim)
+
+    @pytest.mark.parametrize("seed,num_w", [(0, 4), (1, 8), (2, 12)])
+    def test_frozen_pool_round_trips_bit_identically(self, seed, num_w):
+        """The acceptance property: ModelGain -> to_pool_tables ->
+        TableGain reproduces the live model's decision stream exactly,
+        across training seeds and grid granularities.  Rests on the
+        quantized phi table taking exact grid values, f32 -> f64 -> f32
+        being lossless, and the frozen pool re-deriving the same
+        calibrated space."""
+        _assert_round_trip(seed, num_w)
+
+    @pytest.mark.parametrize("seed,num_levels", [(0, 2), (1, 8), (2, 16)])
+    def test_snap_to_grid_exact_levels(self, seed, num_levels):
+        _assert_snap_exact(seed, num_levels)
+
+
+def _assert_round_trip(seed, num_w):
+    probs, gains = synthetic_gain_problem(S=128, seed=seed)
+    opool = oracle_pool(probs, gains, seed=seed)
+    sim = SimConfig(num_devices=4, T=80, algo="onalgo", seed=seed,
+                    num_w_levels=num_w)
+    mg = ModelGain(fit_ridge_gain(probs, gains), probs)
+    live = simulate_service(sim, opool, gain_source=mg)
+    frozen = mg.to_pool_tables(opool, sim)
+    replay = simulate_service(sim, frozen, gain_source=TableGain())
+    for k in SERVICE_METRICS:
+        assert replay[k] == live[k], k
+
+
+def _assert_snap_exact(seed, num_levels):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    vals = rng.uniform(0, 1, 64).astype(np.float32)
+    hi = np.float32(rng.uniform(0.1, 1.0))
+    snapped = np.asarray(snap_to_grid(vals, num_levels, hi))
+    # the grid the kernel itself lays down (jnp linspace, f32) — exact
+    # membership is what makes the f32 -> f64 -> f32 pool round trip
+    # reproduce these values bit for bit
+    levels = np.asarray(jnp.linspace(0.0, jnp.float32(hi), num_levels)
+                        .astype(jnp.float32))
+    assert np.isin(snapped, levels).all()
+
+
+if HAVE_HYPOTHESIS:
+    class TestModelGainProperties:
+        """Hypothesis sweeps of the same invariants over arbitrary
+        seeds/granularities (runs under the [test] extra)."""
+
+        @settings(max_examples=10, deadline=None)
+        @given(seed=st.integers(0, 50), num_w=st.sampled_from([4, 8, 12]))
+        def test_frozen_pool_round_trip(self, seed, num_w):
+            _assert_round_trip(seed, num_w)
+
+        @settings(max_examples=20, deadline=None)
+        @given(seed=st.integers(0, 1000), num_levels=st.integers(2, 16))
+        def test_snap_to_grid_exact(self, seed, num_levels):
+            _assert_snap_exact(seed, num_levels)
+
+
+class TestRegret:
+    def test_gate_scenarios_regret(self, problem):
+        """The acceptance gate: table regret is exactly 0 and the ridge
+        ModelGain stays within 15% mean service-accuracy regret of the
+        oracle on the stationary + diurnal catalog scenarios."""
+        from repro.gain import evaluate_regret
+        probs, gains, opool = problem
+        ridge = fit_ridge_gain(probs, gains)
+        sources = {"table": TableGain(),
+                   "ridge": ModelGain(ridge, probs)}
+        rep = evaluate_regret(sources, opool, max_T=400)
+        assert rep["mean_regret"]["table"] == 0.0
+        assert rep["mean_regret"]["ridge"] <= 0.15
+        for sc in ("stationary", "metro_daily"):
+            assert rep["scenarios"][sc]["table"]["tasks"] > 0
+
+    def test_scenario_sim_matches_spec(self):
+        from repro.gain.regret import scenario_sim
+        from repro.scenarios import compile_named
+        c = compile_named("stationary")
+        sim = scenario_sim(c, max_T=300)
+        assert sim.num_devices == c.scenario.N
+        assert sim.T == 300
+        assert sim.B_n == c.scenario.budget
+        assert sim.H == c.scenario.H
+
+
+class TestSeqGain:
+    @pytest.mark.slow
+    def test_train_checkpoint_and_serve(self, tmp_path, problem):
+        """The SSD sequence head trains through TrainLoop, checkpoints
+        through CheckpointManager, resumes to the same step, and drops
+        into ModelGain end to end."""
+        from repro.gain import train_seq_gain
+        from repro.train import checkpoint as ckpt
+        probs, gains, opool = problem
+        d = str(tmp_path / "ck")
+        model, hist = train_seq_gain(probs, gains, steps=20, T=128, N=4,
+                                     seq_len=32, seed=0, ckpt_dir=d)
+        assert ckpt.latest_step(d) == 20
+        assert len(hist) > 0
+        phi, sig = model.apply(np.asarray(probs, np.float32))
+        assert np.asarray(phi).shape == (len(gains),)
+        assert (np.asarray(sig) > 0).all()
+        sim = SimConfig(num_devices=4, T=60, algo="onalgo", seed=2)
+        out = simulate_service(sim, opool,
+                               gain_source=ModelGain(model, probs))
+        assert out["tasks"] > 0
+
+    def test_ridge_checkpoint_round_trip(self, tmp_path, problem):
+        from repro.gain import load_ridge, save_ridge
+        probs, gains, _ = problem
+        model = fit_ridge_gain(probs, gains)
+        save_ridge(str(tmp_path), model, step=3)
+        back = load_ridge(str(tmp_path))
+        np.testing.assert_array_equal(np.asarray(model.coefs),
+                                      np.asarray(back.coefs))
+        np.testing.assert_array_equal(np.asarray(model.sigma),
+                                      np.asarray(back.sigma))
